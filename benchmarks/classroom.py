@@ -1,0 +1,67 @@
+"""Paper Table 4 — cluster vs classroom (sync/async start) vs sequential,
+plus the loss column from REAL execution (the invariance result).
+
+CSV: name,system,workers,runtime_min,loss
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (classroom_cost, cluster_cost, fmt_minutes,
+                               paper_problem, simulate)
+from repro.core.coordinator import Coordinator
+from repro.core.mapreduce import sequential_accumulated, sequential_fullbatch
+
+
+def timing_rows(reduced: bool = True):
+    problem = paper_problem(reduced=reduced)
+    cl, cr = cluster_cost(problem), classroom_cost(problem)
+    rows = []
+    for k in (1, 2, 4, 8, 16, 32):
+        res = simulate(problem, k, cost=cl)
+        rows.append(("JSDoop-cluster", k, fmt_minutes(res.makespan)))
+    res = simulate(problem, 16, cost=cr)
+    rows.append(("JSDoop-classroom-sync-start", 16, fmt_minutes(res.makespan)))
+    res = simulate(problem, 32, cost=cr)
+    rows.append(("JSDoop-classroom-sync-start", 32, fmt_minutes(res.makespan)))
+    # async-start: volunteers trickle in over the first minute (paper scen. 1)
+    joins = [3.0 * i for i in range(32)]
+    res = simulate(problem, 32, cost=cr, joins=joins)
+    rows.append(("JSDoop-classroom-async-start", 32, fmt_minutes(res.makespan)))
+    return rows
+
+
+def loss_rows(reduced: bool = True):
+    """REAL training: the loss is identical for every worker count (Table 4),
+    and differs for the mini-batch-8 sequential variant."""
+    problem = paper_problem(reduced=reduced)
+    _, _, losses_seq = sequential_accumulated(problem)
+    out = [("sequential-accumulated", 1, round(losses_seq[-1], 3))]
+    for k in (2, 5):
+        res = Coordinator(problem, n_workers=k).run()
+        out.append((f"coordinator-k{k}", k, round(res.losses[-1], 3)))
+    _, _, losses_8 = sequential_fullbatch(
+        problem, batch_size=problem.tp.mini_batch_size)
+    out.append((f"sequential-mb{problem.tp.mini_batch_size}", 1,
+                round(float(np.mean(losses_8[-4:])), 3)))
+    return out
+
+
+def main(reduced: bool = True):
+    print("name,system,workers,runtime_min")
+    rows = timing_rows(reduced)
+    for sys_, k, t in rows:
+        print(f"classroom,{sys_},{k},{t}")
+    print("name,system,workers,final_loss")
+    lrows = loss_rows(reduced)
+    for sys_, k, l in lrows:
+        print(f"classroom_loss,{sys_},{k},{l}")
+    # invariance: every distributed loss equals the sequential-accumulated one
+    base = lrows[0][2]
+    for sys_, k, l in lrows[1:-1]:
+        assert l == base, (sys_, l, base)
+    return rows, lrows
+
+
+if __name__ == "__main__":
+    main(reduced=False)

@@ -1,0 +1,43 @@
+"""Paper Figs. 4/5/6 — runtime, relative speedup, relative efficiency on the
+cluster, K in {1,2,4,8,16,32}.
+
+CSV: name,workers,runtime_min,speedup,efficiency
+"""
+from __future__ import annotations
+
+from benchmarks.common import cluster_cost, fmt_minutes, paper_problem, simulate
+
+
+def run(reduced: bool = True):
+    problem = paper_problem(reduced=reduced)
+    cost = cluster_cost(problem)
+    rows = []
+    t1 = None
+    for k in (1, 2, 4, 8, 16, 32):
+        res = simulate(problem, k, cost=cost)
+        if t1 is None:
+            t1 = res.makespan
+        speedup = t1 / res.makespan
+        rows.append(dict(workers=k, runtime_min=fmt_minutes(res.makespan),
+                         speedup=round(speedup, 2),
+                         efficiency=round(speedup / k, 2)))
+    return rows
+
+
+def main(reduced: bool = True):
+    rows = run(reduced)
+    print("name,workers,runtime_min,speedup,efficiency")
+    for r in rows:
+        print(f"cluster_scaling,{r['workers']},{r['runtime_min']},"
+              f"{r['speedup']},{r['efficiency']}")
+    # the paper's qualitative claims
+    by_k = {r["workers"]: r for r in rows}
+    assert by_k[2]["efficiency"] > 1.0, "superlinear regime lost (Fig. 5)"
+    assert by_k[16]["speedup"] > by_k[2]["speedup"]
+    assert by_k[32]["speedup"] < 2 * by_k[16]["speedup"], \
+        "32 workers must saturate (16-way reduce barrier)"
+    return rows
+
+
+if __name__ == "__main__":
+    main(reduced=False)

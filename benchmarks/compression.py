@@ -1,0 +1,56 @@
+"""Paper §VI (bandwidth threat) — gradient-compression codecs on the wire.
+
+Measures, for the paper's model: bytes/map-task on the wire, end-to-end
+simulated makespan with each codec, and the real-training loss under each
+codec (error feedback on) — i.e., both sides of the trade.
+
+CSV: name,codec,bytes_per_map,compression_x,makespan_min,final_loss
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import cluster_cost, fmt_minutes, paper_problem, simulate
+from repro.core.coordinator import Coordinator
+from repro.optim import compression as CP
+
+
+def main(reduced: bool = True):
+    problem = paper_problem(reduced=reduced)
+    dense = CP.dense_bytes(problem.params0)
+    codecs = [("none", None),
+              ("topk1%", CP.make_codec("topk", fraction=0.01)),
+              ("ternary", CP.make_codec("ternary"))]
+    print("name,codec,bytes_per_map,compression_x,makespan_min,final_loss")
+    rows = []
+    for cname, codec in codecs:
+        if codec is None:
+            nbytes = dense
+        else:
+            payload, nbytes = codec.encode(
+                jax.tree.map(lambda p: p.astype("float32"), problem.params0))
+        # timing: same schedule, smaller grad payloads
+        res_t = simulate_with_gradbytes(problem, 8, nbytes)
+        # learning: real coordinator run with the codec (EF inside)
+        res_l = Coordinator(problem, n_workers=2, codec=codec,
+                            n_versions=min(problem.n_versions, 8)).run()
+        rows.append((cname, nbytes, dense / nbytes,
+                     fmt_minutes(res_t.makespan), res_l.losses[-1]))
+        print(f"compression,{cname},{nbytes},{dense / nbytes:.1f},"
+              f"{fmt_minutes(res_t.makespan)},{res_l.losses[-1]:.3f}")
+    assert rows[2][2] > 10, "ternary must be >10x smaller"
+    return rows
+
+
+def simulate_with_gradbytes(problem, k, grad_bytes):
+    from repro.core.simulator import Simulator, VolunteerSpec
+    specs = [VolunteerSpec(f"v{i}") for i in range(k)]
+    sim = Simulator(problem, specs, cost=cluster_cost(problem),
+                    grad_bytes=grad_bytes)
+    return sim.run()
+
+
+import jax  # noqa: E402  (used in main for tree map)
+
+if __name__ == "__main__":
+    main(reduced=False)

@@ -1,0 +1,74 @@
+"""Per-kernel microbenchmarks: us_per_call (interpret-mode CPU — structural,
+not TPU wall-clock) + derived FLOPs and oracle agreement.
+
+CSV: name,us_per_call,derived
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)                                   # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main(reduced: bool = True):
+    k = jax.random.PRNGKey(0)
+    rows = []
+
+    B, Din, H = (32, 98, 50)                    # the paper's layer-1 cell
+    x = jax.random.normal(k, (B, Din))
+    h = jax.random.normal(k, (B, H))
+    c = jax.random.normal(k, (B, H))
+    W = jax.random.normal(k, (Din + H, 4 * H)) * 0.1
+    b = jnp.zeros((4 * H,))
+    us = _time(lambda *a: ops.lstm_cell(*a, interpret=True), x, h, c, W, b)
+    flops = 2 * B * (Din + H) * 4 * H
+    err = float(jnp.abs(ops.lstm_cell(x, h, c, W, b, interpret=True)[0]
+                        - ref.lstm_cell(x, h, c, W, b)[0]).max())
+    rows.append(("lstm_cell", us, f"flops={flops};maxerr={err:.1e}"))
+
+    S, Hh, Kv, hd = (256, 8, 4, 64) if reduced else (1024, 16, 8, 128)
+    q = jax.random.normal(k, (1, S, Hh, hd)) * 0.5
+    kk = jax.random.normal(k, (1, S, Kv, hd)) * 0.5
+    vv = jax.random.normal(k, (1, S, Kv, hd)) * 0.5
+    us = _time(lambda *a: ops.flash_attention(*a, interpret=True), q, kk, vv,
+               iters=1)
+    flops = 4 * S * S * Hh * hd // 2            # causal half
+    err = float(jnp.abs(ops.flash_attention(q, kk, vv, interpret=True)
+                        - ref.flash_attention(q, kk, vv)).max())
+    rows.append(("flash_attention", us, f"flops={flops};maxerr={err:.1e}"))
+
+    xx = jax.random.normal(k, (4096, 1024))
+    sc = jnp.ones((1024,))
+    us = _time(lambda *a: ops.rmsnorm(*a, interpret=True), xx, sc)
+    err = float(jnp.abs(ops.rmsnorm(xx, sc, interpret=True)
+                        - ref.rmsnorm(xx, sc)).max())
+    rows.append(("rmsnorm", us, f"bytes={xx.nbytes * 2};maxerr={err:.1e}"))
+
+    g = jax.random.normal(k, (1 << 16,))
+    s = jnp.max(jnp.abs(g))
+    us = _time(lambda *a: ops.ternary_encode(*a, interpret=True), g, s)
+    packed = ops.ternary_encode(g, s, interpret=True)
+    rows.append(("ternary_encode", us,
+                 f"in={g.nbytes};out={packed.nbytes};"
+                 f"ratio={g.nbytes / packed.nbytes:.0f}x"))
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.0f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    main(reduced=False)

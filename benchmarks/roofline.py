@@ -1,0 +1,51 @@
+"""Roofline table (deliverable g) — reads dry-run JSONL records and prints
+the per-(arch x shape x mesh) three-term roofline with the dominant term.
+
+CSV: name,arch,shape,mesh,t_compute,t_memory,t_collective,bottleneck,
+     useful_fraction,temp_gib
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+DEFAULT_PATH = pathlib.Path(__file__).resolve().parents[1] / "results" / \
+    "dryrun_baseline.jsonl"
+
+
+def load(path=DEFAULT_PATH):
+    recs = []
+    p = pathlib.Path(path)
+    if not p.exists():
+        return recs
+    for line in p.read_text().splitlines():
+        if line.strip():
+            recs.append(json.loads(line))
+    return recs
+
+
+def main(path=DEFAULT_PATH):
+    recs = load(path)
+    if not recs:
+        print(f"# no dry-run records at {path}; run:")
+        print("#   PYTHONPATH=src python -m repro.launch.dryrun --all "
+              "--mesh single --out results/dryrun_baseline.jsonl")
+        return []
+    print("name,arch,shape,mesh,t_compute,t_memory,t_collective,"
+          "bottleneck,useful_fraction,temp_gib")
+    for r in recs:
+        if "error" in r:
+            print(f"roofline,{r['arch']},{r['shape']},{r['mesh']},"
+                  f"ERROR,{r['error'][:60]},,,,")
+            continue
+        print(f"roofline,{r['arch']},{r['shape']},{r['mesh']},"
+              f"{r['t_compute']:.3e},{r['t_memory']:.3e},"
+              f"{r['t_collective']:.3e},{r['bottleneck']},"
+              f"{r.get('useful_fraction', 0):.3f},"
+              f"{r['memory']['temp_size_in_bytes'] / 2**30:.2f}")
+    return recs
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else DEFAULT_PATH)

@@ -1,0 +1,63 @@
+"""Run every benchmark (one per paper table/figure) in reduced mode.
+
+  PYTHONPATH=src python -m benchmarks.run          # reduced (~minutes)
+  PYTHONPATH=src python -m benchmarks.run --full   # paper-scale parameters
+
+Artifacts covered:
+  Fig. 4/5/6  cluster_scaling     runtime / relative speedup / efficiency
+  Table 4     classroom           cluster vs classroom vs sequential + loss
+  Fig. 7      timeline            per-volunteer task spans
+  Fig. 8      sequential_baseline absolute speedup vs TFJS-Sequential-128/8
+  §VI         compression         top-k / ternary wire bytes + convergence
+  (kernels)   kernel_bench        us_per_call per Pallas kernel
+  (roofline)  roofline            dry-run derived terms, if records exist
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale parameters (slow on 1 CPU)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+    reduced = not args.full
+
+    from benchmarks import (classroom, cluster_scaling, compression,
+                            dynamism, kernel_bench, roofline,
+                            sequential_baseline, timeline)
+    suites = [
+        ("cluster_scaling", lambda: cluster_scaling.main(reduced)),
+        ("classroom", lambda: classroom.main(reduced)),
+        ("timeline", lambda: timeline.main(reduced)),
+        ("sequential_baseline", lambda: sequential_baseline.main(reduced)),
+        ("compression", lambda: compression.main(reduced)),
+        ("dynamism", lambda: dynamism.main(reduced)),
+        ("kernel_bench", lambda: kernel_bench.main(reduced)),
+        ("roofline", lambda: roofline.main()),
+    ]
+    failed = []
+    for name, fn in suites:
+        if args.only and name != args.only:
+            continue
+        print(f"\n===== {name} =====")
+        t0 = time.time()
+        try:
+            fn()
+            print(f"# {name}: ok in {time.time() - t0:.1f}s")
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+            print(f"# {name}: FAILED")
+    print(f"\n{len(suites) - len(failed)}/{len(suites)} benchmarks ok"
+          + (f"; failed: {failed}" if failed else ""))
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

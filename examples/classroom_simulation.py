@@ -1,0 +1,54 @@
+"""The paper's §V.B classroom experiment, simulated end to end.
+
+32 heterogeneous volunteers (different speeds) open the URL; some arrive
+late (async-start), some close the browser mid-run. The discrete-event
+simulator drives the exact queue/dataserver protocol and reports the
+runtime, per-volunteer utilization and the Fig. 7-style timeline.
+
+Run:  PYTHONPATH=src python examples/classroom_simulation.py
+"""
+import pathlib
+import sys
+
+import numpy as np
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+from benchmarks.common import classroom_cost, paper_problem  # noqa: E402
+from repro.core.simulator import Simulator, VolunteerSpec  # noqa: E402
+
+
+def main():
+    problem = paper_problem(reduced=True)
+    rng = np.random.RandomState(0)
+
+    specs = []
+    for i in range(32):
+        specs.append(VolunteerSpec(
+            f"student{i:02d}",
+            speed=float(rng.uniform(0.6, 1.6)),        # heterogeneous laptops
+            join_time=float(rng.uniform(0, 20)),       # async-start
+            # a third of the class closes the tab partway through
+            leave_time=float(rng.uniform(60, 240)) if i % 3 == 0
+            else float("inf")))
+
+    sim = Simulator(problem, specs, cost=classroom_cost(problem),
+                    visibility_timeout=30.0)
+    res = sim.run()
+
+    print(f"classroom run: {res.makespan / 60:.1f} min, "
+          f"{res.final_version} model versions")
+    print(f"tasks requeued after disconnects: {res.requeues}")
+    print(f"bytes over the 'network': {res.bytes_sent / 1e6:.1f} MB")
+    print("\nper-volunteer tasks (top 10):")
+    top = sorted(res.tasks_by_worker.items(), key=lambda kv: -kv[1])[:10]
+    for vid, n in top:
+        busy = res.busy_time.get(vid, 0.0)
+        print(f"  {vid}: {n:3d} tasks, {busy:6.1f}s busy "
+              f"({100 * busy / res.makespan:4.1f}% of wall)")
+    assert res.final_version == problem.n_versions, "training must complete"
+    print("\ntraining completed despite churn — no tasks lost "
+          "(paper §IV fault tolerance).")
+
+
+if __name__ == "__main__":
+    main()

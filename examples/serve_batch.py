@@ -1,0 +1,23 @@
+"""Batched serving example — the decode-shape path executed for real.
+
+Loads a (reduced) assigned architecture, prefills a batch of prompts and
+decodes with the KV/SSM cache through the sharded serve_step — the same
+code path the dry-run lowers for decode_32k/long_500k at pod scale.
+
+Run:  PYTHONPATH=src python examples/serve_batch.py --arch jamba-v0.1-52b
+"""
+import argparse
+
+from repro.launch import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="jamba-v0.1-52b")
+    args = ap.parse_args()
+    serve.main(["--arch", args.arch, "--requests", "6", "--batch", "2",
+                "--prompt", "24", "--tokens", "12"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.checkpoint.serialize import dumps, loads  # noqa: F401
+from repro.checkpoint.store import CheckpointStore  # noqa: F401

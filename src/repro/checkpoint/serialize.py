@@ -1,0 +1,60 @@
+"""Pytree <-> bytes via msgpack (+ optional zstd). Used by the DataServer wire
+protocol (gradient/model messages) and the durable checkpoint store."""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import msgpack
+import numpy as np
+import zstandard
+
+_ARR = "__nd__"
+_CTX = zstandard.ZstdCompressor(level=3)
+_DCTX = zstandard.ZstdDecompressor()
+
+
+def _dtype_of(name: str) -> np.dtype:
+    """Resolve a dtype by name, including ml_dtypes extension types (bfloat16
+    et al.), which numpy's ``dtype.str`` cannot round-trip."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _pack_leaf(x):
+    if isinstance(x, (np.ndarray, np.generic)) or hasattr(x, "__array__"):
+        a = np.asarray(x)
+        return {_ARR: True, "d": a.dtype.name, "s": list(a.shape),
+                "b": a.tobytes()}
+    return x
+
+
+def _unpack_leaf(x):
+    if isinstance(x, dict) and x.get(_ARR):
+        return np.frombuffer(x["b"], _dtype_of(x["d"])).reshape(x["s"]).copy()
+    return x
+
+
+def _walk(tree, fn):
+    if isinstance(tree, dict) and not tree.get(_ARR):
+        return {k: _walk(v, fn) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return [_walk(v, fn) for v in tree]
+    return fn(tree)
+
+
+def dumps(tree: Any, compress: bool = True) -> bytes:
+    raw = msgpack.packb(_walk(tree, _pack_leaf), use_bin_type=True)
+    if compress:
+        return b"Z" + _CTX.compress(raw)
+    return b"R" + raw
+
+
+def loads(data: bytes) -> Any:
+    tag, body = data[:1], data[1:]
+    if tag == b"Z":
+        body = _DCTX.decompress(body)
+    tree = msgpack.unpackb(body, raw=False, strict_map_key=False)
+    return _walk(tree, _unpack_leaf)

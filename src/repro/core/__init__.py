@@ -1,0 +1,14 @@
+"""The paper's primary contribution: the JSDoop volunteer map-reduce runtime."""
+from repro.core.queue import Queue, QueueServer  # noqa: F401
+from repro.core.dataserver import DataServer  # noqa: F401
+from repro.core.tasks import (  # noqa: F401
+    INITIAL_QUEUE, MapTask, ReduceTask, GradResult, results_queue,
+)
+from repro.core.mapreduce import (  # noqa: F401
+    TrainingProblem, sequential_accumulated, sequential_fullbatch,
+)
+from repro.core.initiator import enqueue_problem  # noqa: F401
+from repro.core.coordinator import Coordinator, RunResult  # noqa: F401
+from repro.core.simulator import (  # noqa: F401
+    Simulator, SimResult, VolunteerSpec, CostModel, TimelineEvent,
+)

@@ -1,0 +1,183 @@
+"""Coordinator — REAL execution of the JSDoop protocol, in process.
+
+K volunteer state machines are interleaved round-robin over the shared
+QueueServer/DataServer, actually computing gradients and RMSprop updates with
+JAX. The logical clock is the scheduler iteration count (used for visibility
+timeouts). Churn is injected as (step, 'leave'/'join', volunteer) events:
+a leaving volunteer's leased tasks requeue, exactly like closing the browser
+tab mid-task.
+
+This is the engine behind the paper's invariance claim tests: the final model
+must bit-match ``sequential_accumulated`` for ANY worker count and ANY churn.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.dataserver import DataServer
+from repro.core.initiator import enqueue_problem
+from repro.core.mapreduce import TrainingProblem
+from repro.core.queue import QueueServer
+from repro.core.tasks import (GradResult, INITIAL_QUEUE, MapTask, ReduceTask,
+                              results_queue)
+from repro.optim.compression import Codec, ef_init, ef_compress
+
+
+@dataclass
+class _Volunteer:
+    vid: str
+    tag: Optional[int] = None
+    task: Any = None
+    ef_residual: Any = None     # error-feedback state (when codec is set)
+
+    @property
+    def busy(self) -> bool:
+        return self.task is not None
+
+
+@dataclass
+class RunResult:
+    params: Any
+    opt_state: Any
+    losses: List[float]                   # mean map loss per version
+    steps: int
+    tasks_by_worker: Dict[str, int]
+    requeues: int
+    final_version: int
+
+
+class Coordinator:
+    def __init__(self, problem: TrainingProblem, n_workers: int, *,
+                 n_versions: Optional[int] = None,
+                 churn: Optional[List[Tuple[int, str, str]]] = None,
+                 visibility_timeout: float = float("inf"),
+                 codec: Optional[Codec] = None):
+        self.problem = problem
+        self.qs = QueueServer(default_timeout=visibility_timeout)
+        self.ds = DataServer()
+        self.n_versions = n_versions if n_versions is not None else problem.n_versions
+        enqueue_problem(problem, self.qs, self.ds, n_versions=self.n_versions)
+        self.volunteers: Dict[str, _Volunteer] = {
+            f"w{i}": _Volunteer(f"w{i}") for i in range(n_workers)}
+        self.churn = sorted(churn or [])
+        self.codec = codec
+        self.version_losses: Dict[int, List[float]] = {}
+        self.tasks_done: Dict[str, int] = {}
+        self.bytes_sent = 0
+
+    # ------------------------------------------------------------------ engine
+    def run(self, max_steps: int = 2_000_000) -> RunResult:
+        step = 0
+        churn_i = 0
+        order = list(self.volunteers)
+        while self.ds.latest_version < self.n_versions:
+            if step >= max_steps:
+                raise RuntimeError("coordinator did not converge (deadlock?)")
+            # churn events
+            while churn_i < len(self.churn) and self.churn[churn_i][0] <= step:
+                _, kind, vid = self.churn[churn_i]
+                churn_i += 1
+                if kind == "leave" and vid in self.volunteers:
+                    self.qs.drop_consumer(vid)
+                    del self.volunteers[vid]
+                elif kind == "join" and vid not in self.volunteers:
+                    self.volunteers[vid] = _Volunteer(vid)
+                order = list(self.volunteers)
+            if not self.volunteers:
+                # everyone left; semantically the problem just pauses (paper:
+                # "If no one is collaborating, the problem simply stops").
+                if churn_i >= len(self.churn):
+                    raise RuntimeError("no volunteers and no future joins")
+                step = max(step + 1, self.churn[churn_i][0])
+                continue
+            self.qs.expire_all(step)
+            for vid in order:
+                v = self.volunteers.get(vid)
+                if v is not None:
+                    self._step_volunteer(v, step)
+            step += 1
+        params, opt_state = self.ds.get_model(self.ds.latest_version)
+        losses = [float(np.mean(self.version_losses[k]))
+                  for k in sorted(self.version_losses)]
+        requeues = sum(q.requeued for q in self.qs.queues.values())
+        return RunResult(params, opt_state, losses, step, dict(self.tasks_done),
+                         requeues, self.ds.latest_version)
+
+    # ------------------------------------------------------------------ protocol
+    def _step_volunteer(self, v: _Volunteer, now: float):
+        if not v.busy:
+            got = self.qs.lease(INITIAL_QUEUE, v.vid, now)
+            if got is None:
+                return
+            v.tag, v.task = got
+        if isinstance(v.task, MapTask):
+            self._try_map(v, now)
+        else:
+            self._try_reduce(v, now)
+
+    def _try_map(self, v: _Volunteer, now: float):
+        t: MapTask = v.task
+        if self.ds.latest_version > t.version:
+            # obsolete duplicate (we were requeued after someone else's result
+            # was already reduced) — ack without compute, at-least-once + idempotent
+            self.qs.ack(INITIAL_QUEUE, v.tag)
+            v.tag = v.task = None
+            return
+        blob = self.ds.get_model(t.version, nbytes=self.problem.model_bytes)
+        if blob is None:
+            return  # model version not published yet -> wait (stay leased)
+        params, _ = blob
+        grads, loss = self.problem.map_compute(params, t.version, t.mb_index)
+        nbytes = self.problem.grad_bytes
+        if self.codec is not None:
+            if v.ef_residual is None:
+                v.ef_residual = ef_init(self.problem.params0)
+            grads, v.ef_residual, nbytes = ef_compress(self.codec, grads,
+                                                       v.ef_residual)
+        self.bytes_sent += nbytes
+        self.qs.publish(results_queue(t.version),
+                        GradResult(t.version, t.mb_index, grads, nbytes, loss,
+                                   v.vid))
+        self.qs.ack(INITIAL_QUEUE, v.tag)
+        self.tasks_done[v.vid] = self.tasks_done.get(v.vid, 0) + 1
+        self.version_losses.setdefault(t.version, []).append(loss)
+        v.tag = v.task = None
+
+    def _try_reduce(self, v: _Volunteer, now: float):
+        t: ReduceTask = v.task
+        if self.ds.latest_version > t.version:
+            self.qs.ack(INITIAL_QUEUE, v.tag)  # duplicate reduce, already applied
+            v.tag = v.task = None
+            return
+        rq = results_queue(t.version)
+        if self.qs.depth(rq) < t.n_mb:
+            return  # barrier not reached -> wait
+        grads_by_mb: Dict[int, Any] = {}
+        tags: List[int] = []
+        while True:
+            got = self.qs.lease(rq, v.vid, now)
+            if got is None:
+                break
+            tag, res = got
+            tags.append(tag)
+            grads_by_mb.setdefault(res.mb_index, res.payload)  # dedup by mb
+        if len(grads_by_mb) < t.n_mb:
+            for tag in tags:
+                self.qs.nack(rq, tag)
+            return
+        params, opt_state = self.ds.get_model(t.version,
+                                              nbytes=self.problem.model_bytes)
+        params, opt_state = self.problem.reduce_compute(params, opt_state,
+                                                        grads_by_mb)
+        self.ds.publish_model(t.version + 1, (params, opt_state),
+                              nbytes=self.problem.model_bytes)
+        self.ds.gc_models(keep_last=2)
+        for tag in tags:
+            self.qs.ack(rq, tag)
+        self.qs.ack(INITIAL_QUEUE, v.tag)
+        self.tasks_done[v.vid] = self.tasks_done.get(v.vid, 0) + 1
+        self.bytes_sent += self.problem.model_bytes
+        v.tag = v.task = None

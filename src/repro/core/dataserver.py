@@ -1,0 +1,68 @@
+"""DataServer — the paper's Redis: a KV store holding data + the versioned model.
+
+The model is stored under monotonically increasing versions. ``publish_model``
+is the commit point of a reduce task; ``get_model(v)`` returns None until v is
+committed, which is exactly the paper's "if the required version is not yet
+available, the task waits" synchronization (solution 2 of §IV.F step 5: check
+if a datum has been modified before starting).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+
+class DataServer:
+    def __init__(self):
+        self._kv: Dict[str, Any] = {}
+        self._models: Dict[int, Any] = {}
+        self._latest: int = -1
+        self.reads = 0
+        self.writes = 0
+        self.bytes_read = 0
+        self.bytes_written = 0
+
+    # -- CRUD -----------------------------------------------------------------
+    def put(self, key: str, value: Any, nbytes: int = 0):
+        self._kv[key] = value
+        self.writes += 1
+        self.bytes_written += nbytes
+
+    def get(self, key: str, nbytes: int = 0):
+        self.reads += 1
+        self.bytes_read += nbytes
+        return self._kv.get(key)
+
+    def delete(self, key: str) -> bool:
+        return self._kv.pop(key, None) is not None
+
+    # -- versioned model --------------------------------------------------------
+    def publish_model(self, version: int, blob: Any, nbytes: int = 0) -> bool:
+        """Commit model version. Exactly-once: returns False if already present
+        (a duplicate reduce execution after a requeue — the blob is discarded,
+        keeping version publication idempotent)."""
+        if version in self._models:
+            return False
+        assert version == self._latest + 1, (
+            f"version gap: publishing {version}, latest {self._latest}")
+        self._models[version] = blob
+        self._latest = version
+        self.writes += 1
+        self.bytes_written += nbytes
+        return True
+
+    def get_model(self, version: int, nbytes: int = 0) -> Optional[Any]:
+        blob = self._models.get(version)
+        if blob is not None:
+            self.reads += 1
+            self.bytes_read += nbytes
+        return blob
+
+    @property
+    def latest_version(self) -> int:
+        return self._latest
+
+    def gc_models(self, keep_last: int = 2):
+        """Drop stale versions (bounded memory, like Redis TTL)."""
+        for v in sorted(self._models):
+            if v <= self._latest - keep_last:
+                del self._models[v]

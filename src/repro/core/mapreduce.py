@@ -1,0 +1,157 @@
+"""The map/reduce compute of JSDoop's distributed SGD (paper §IV.G, Fig. 3).
+
+map(version, mb)   = gradient of the mini-batch loss at model version v
+reduce(version, *) = mean of the n_mb gradients (sorted by mb_index so the sum
+                     order — and hence the floats — are independent of which
+                     volunteer computed what, making the paper's Table-4
+                     invariance an exact, testable equality), then the RMSprop
+                     apply, producing model version v+1.
+
+``TrainingProblem`` packages the model, optimizer, data schedule and jitted
+compute; the Initiator, Coordinator and Simulator all consume it.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_lstm import CONFIG as LSTM_CONFIG, TrainParams, PAPER_PARAMS
+from repro.data.text import TextTask
+from repro.models import model as M
+from repro.models.runtime import Runtime
+from repro.optim import Optimizer, rmsprop, dense_bytes
+
+
+@dataclass
+class TrainingProblem:
+    cfg: Any                     # ArchConfig (vocab resolved)
+    rt: Runtime
+    tp: TrainParams
+    data: TextTask
+    optimizer: Optimizer
+    params0: Any
+    opt_state0: Any
+
+    _grad_fn: Callable = field(default=None, repr=False)
+    _acc_apply_fn: Callable = field(default=None, repr=False)
+
+    # ------------------------------------------------------------------ build
+    @classmethod
+    def paper_problem(cls, *, seed: int = 0, corpus: Optional[str] = None,
+                      tp: TrainParams = PAPER_PARAMS,
+                      rt: Runtime = Runtime(remat=False),
+                      lr: Optional[float] = None) -> "TrainingProblem":
+        data = TextTask.build(corpus, sample_len=tp.sample_len, seed=seed + 99)
+        cfg = LSTM_CONFIG.replace(vocab=data.vocab.size)
+        params0 = M.init_params(cfg, jax.random.PRNGKey(seed))
+        opt = rmsprop(lr if lr is not None else tp.learning_rate)
+        opt_state0 = opt.init(params0)
+        return cls(cfg, rt, tp, data, opt, params0, opt_state0)
+
+    def __post_init__(self):
+        cfg, rt = self.cfg, self.rt
+
+        def loss(params, batch):
+            return M.loss_fn(params, cfg, rt, batch)[0]
+
+        self._grad_fn = jax.jit(jax.value_and_grad(loss))
+
+        def acc_apply(params, opt_state, grads_stacked):
+            g_mean = jax.tree.map(lambda g: jnp.mean(g, axis=0), grads_stacked)
+            return self.optimizer.update(params, opt_state, g_mean)
+
+        self._acc_apply_fn = jax.jit(acc_apply)
+
+    # ------------------------------------------------------------------ schedule
+    @property
+    def n_versions(self) -> int:
+        return self.tp.num_epochs * self.tp.batches_per_epoch
+
+    def version_to_epoch_batch(self, version: int) -> Tuple[int, int]:
+        return divmod(version, self.tp.batches_per_epoch)
+
+    def minibatch(self, version: int, mb_index: int) -> Dict[str, np.ndarray]:
+        e, b = self.version_to_epoch_batch(version)
+        return self.data.minibatch(e, b, self.tp.batch_size, mb_index,
+                                   self.tp.mini_batch_size)
+
+    # ------------------------------------------------------------------ compute
+    def map_compute(self, params, version: int, mb_index: int):
+        """Returns (grads, loss)."""
+        batch = self.minibatch(version, mb_index)
+        loss, grads = self._grad_fn(params, batch)
+        return grads, float(loss)
+
+    def reduce_compute(self, params, opt_state, grads_by_mb: Dict[int, Any]):
+        """grads_by_mb: mb_index -> grads. Deterministic order via sort."""
+        ordered = [grads_by_mb[i] for i in sorted(grads_by_mb)]
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *ordered)
+        return self._acc_apply_fn(params, opt_state, stacked)
+
+    # ------------------------------------------------------------------ sizes
+    @functools.cached_property
+    def grad_bytes(self) -> int:
+        return dense_bytes(self.params0)
+
+    @functools.cached_property
+    def model_bytes(self) -> int:
+        return dense_bytes(self.params0) + dense_bytes(self.opt_state0)
+
+    def flops_per_map(self) -> float:
+        """Analytic cost of one mini-batch fwd+bwd (simulator cost model)."""
+        n = M.param_count(self.cfg)
+        tokens = self.tp.mini_batch_size * self.tp.sample_len
+        return 6.0 * n * tokens
+
+    def flops_per_reduce(self) -> float:
+        n = M.param_count(self.cfg)
+        return 8.0 * n * self.tp.mini_batches_to_accumulate
+
+
+# ---------------------------------------------------------------------------
+# sequential references (paper §V.C)
+# ---------------------------------------------------------------------------
+
+def sequential_accumulated(problem: TrainingProblem, *, n_versions=None,
+                           record_every: int = 1):
+    """The distributed algorithm run on one in-process worker (exact reference
+    for worker-count invariance: must bit-match any Coordinator run)."""
+    params, opt_state = problem.params0, problem.opt_state0
+    losses: List[float] = []
+    n = n_versions if n_versions is not None else problem.n_versions
+    for v in range(n):
+        grads_by_mb, ls = {}, []
+        for mb in range(problem.tp.mini_batches_to_accumulate):
+            g, l = problem.map_compute(params, v, mb)
+            grads_by_mb[mb] = g
+            ls.append(l)
+        params, opt_state = problem.reduce_compute(params, opt_state, grads_by_mb)
+        if (v % record_every) == 0:
+            losses.append(float(np.mean(ls)))
+    return params, opt_state, losses
+
+
+def sequential_fullbatch(problem: TrainingProblem, *, batch_size=None,
+                         n_versions=None):
+    """TFJS-Sequential-N: plain minibatch SGD at the given batch size (128 for
+    the paper's headline sequential baseline, 8 for TFJS-Sequential-8)."""
+    tp = problem.tp
+    bs = batch_size or tp.batch_size
+    params, opt_state = problem.params0, problem.opt_state0
+    losses: List[float] = []
+    n = n_versions if n_versions is not None else problem.n_versions
+    steps_per_version = tp.batch_size // bs
+    for v in range(n):
+        e, b = problem.version_to_epoch_batch(v)
+        starts = problem.data.starts(e, b, tp.batch_size)
+        for s in range(steps_per_version):
+            batch = problem.data.make_batch(starts[s * bs:(s + 1) * bs])
+            loss, grads = problem._grad_fn(params, batch)
+            params, opt_state = problem.optimizer.update(params, opt_state, grads)
+            losses.append(float(loss))
+    return params, opt_state, losses

@@ -1,0 +1,151 @@
+"""QueueServer — AMQP-style named queues with at-least-once delivery.
+
+Mirrors the semantics JSDoop gets from RabbitMQ (paper §IV.D/§IV.F step 5):
+
+- ``publish`` appends a message.
+- ``lease`` hands a message to a consumer WITHOUT removing it: the message moves
+  to the in-flight table with a visibility deadline ("the Initiator can set a
+  maximum time to solve a task").
+- ``ack`` removes it permanently ("tasks are not removed from the queue until an
+  ACK is received").
+- ``expire``/``drop_consumer`` requeue in-flight messages whose deadline passed
+  or whose consumer disconnected ("if a volunteer disconnects while solving a
+  task, the task is added back to the queue").
+
+Time is explicit (virtual): both the real coordinator (logical step clock) and
+the discrete-event simulator (seconds) drive the same implementation.
+"""
+from __future__ import annotations
+
+import itertools
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+
+@dataclass
+class _InFlight:
+    body: Any
+    consumer: str
+    deadline: float
+    requeues: int
+
+
+class Queue:
+    def __init__(self, name: str, default_timeout: float = float("inf")):
+        self.name = name
+        self.default_timeout = default_timeout
+        self._pending: deque = deque()            # (tag, body)
+        self._in_flight: Dict[int, _InFlight] = {}
+        self._tags = itertools.count()
+        self.published = 0
+        self.acked = 0
+        self.requeued = 0
+
+    # -- producer ------------------------------------------------------------
+    def publish(self, body: Any) -> int:
+        tag = next(self._tags)
+        self._pending.append((tag, body))
+        self.published += 1
+        return tag
+
+    # -- consumer ------------------------------------------------------------
+    def lease(self, consumer: str, now: float,
+              timeout: Optional[float] = None) -> Optional[Tuple[int, Any]]:
+        if not self._pending:
+            return None
+        tag, body = self._pending.popleft()
+        t = self.default_timeout if timeout is None else timeout
+        self._in_flight[tag] = _InFlight(body, consumer, now + t, 0)
+        return tag, body
+
+    def ack(self, tag: int) -> bool:
+        if tag in self._in_flight:
+            del self._in_flight[tag]
+            self.acked += 1
+            return True
+        return False
+
+    def nack(self, tag: int, *, front: bool = True) -> bool:
+        """Voluntary give-back (e.g. dependency not ready)."""
+        inf = self._in_flight.pop(tag, None)
+        if inf is None:
+            return False
+        if front:
+            self._pending.appendleft((tag, inf.body))
+        else:
+            self._pending.append((tag, inf.body))
+        self.requeued += 1
+        return True
+
+    # -- fault tolerance -------------------------------------------------------
+    def expire(self, now: float) -> int:
+        """Requeue every in-flight message whose visibility deadline passed."""
+        dead = [t for t, inf in self._in_flight.items() if inf.deadline <= now]
+        for t in dead:
+            self.nack(t, front=True)
+        return len(dead)
+
+    def drop_consumer(self, consumer: str) -> int:
+        """A volunteer closed the browser: requeue everything it held."""
+        held = [t for t, inf in self._in_flight.items() if inf.consumer == consumer]
+        for t in held:
+            self.nack(t, front=True)
+        return len(held)
+
+    # -- introspection ---------------------------------------------------------
+    @property
+    def depth(self) -> int:
+        return len(self._pending)
+
+    @property
+    def in_flight(self) -> int:
+        return len(self._in_flight)
+
+    @property
+    def drained(self) -> bool:
+        return not self._pending and not self._in_flight
+
+    def peek_all(self) -> List[Any]:
+        return [b for _, b in self._pending]
+
+
+class QueueServer:
+    """Named queues. Multiple QueueServers are modelled by multiple instances
+    (the paper's load-balancing story); the API is identical."""
+
+    def __init__(self, default_timeout: float = float("inf")):
+        self.default_timeout = default_timeout
+        self.queues: Dict[str, Queue] = {}
+
+    def declare(self, name: str, timeout: Optional[float] = None) -> Queue:
+        if name not in self.queues:
+            self.queues[name] = Queue(
+                name, self.default_timeout if timeout is None else timeout)
+        return self.queues[name]
+
+    def publish(self, qname: str, body: Any) -> int:
+        return self.declare(qname).publish(body)
+
+    def lease(self, qname: str, consumer: str, now: float,
+              timeout: Optional[float] = None):
+        return self.declare(qname).lease(consumer, now, timeout)
+
+    def ack(self, qname: str, tag: int) -> bool:
+        return self.declare(qname).ack(tag)
+
+    def nack(self, qname: str, tag: int, *, front: bool = True) -> bool:
+        return self.declare(qname).nack(tag, front=front)
+
+    def expire_all(self, now: float) -> int:
+        return sum(q.expire(now) for q in self.queues.values())
+
+    def drop_consumer(self, consumer: str) -> int:
+        return sum(q.drop_consumer(consumer) for q in self.queues.values())
+
+    def drained(self, names: Optional[Iterable[str]] = None) -> bool:
+        qs = (self.queues[n] for n in names) if names else self.queues.values()
+        return all(q.drained for q in qs)
+
+    def depth(self, qname: str) -> int:
+        return self.declare(qname).depth

@@ -1,0 +1,269 @@
+"""Discrete-event simulator of the JSDoop deployment (cluster & classroom).
+
+Reproduces the paper's scalability experiments (Figs. 4-8, Table 4) on one CPU
+by simulating heterogeneous volunteers over the *same* queue/dataserver
+semantics the real Coordinator uses. Costs:
+
+- network: latency + bytes/bandwidth per transfer (model pull, gradient push),
+- compute: task_flops / (volunteer speed * effective_throughput),
+- cache effect: the paper attributes its superlinear relative speedup to "more
+  of its data can be placed in fast memory" when the work is spread over more
+  processors [Foster'95]. We model this mechanistically: a volunteer that must
+  cycle the whole working set (model + optimizer + all mini-batches of a batch)
+  through its cache sustains a penalized throughput; when k>=2 volunteers split
+  the batch, the per-volunteer working set fits and throughput recovers.
+
+All semantics (lease/ack/requeue, version waits, reduce barrier, churn) are
+identical to the real Coordinator — asserted by tests.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.dataserver import DataServer
+from repro.core.mapreduce import TrainingProblem
+from repro.core.queue import QueueServer
+from repro.core.tasks import (INITIAL_QUEUE, GradResult, MapTask, ReduceTask,
+                              results_queue)
+
+
+@dataclass
+class VolunteerSpec:
+    vid: str
+    speed: float = 1.0              # relative device speed
+    join_time: float = 0.0
+    leave_time: float = math.inf
+
+
+@dataclass
+class CostModel:
+    flops_per_sec: float = 2.0e9    # sustained JS/WebGL throughput of one device
+    latency: float = 0.030          # one-way message latency (s)
+    bandwidth: float = 12.5e6       # bytes/s (100 Mbit LAN)
+    poll_interval: float = 0.200    # dependency-wait poll (s)
+    # cache-effect model (superlinearity, paper §V.A):
+    cache_bytes: float = 4.0e6      # fast-memory budget per device
+    thrash_penalty: float = 0.22    # throughput multiplier when set exceeds cache
+
+    def throughput(self, speed: float, working_set: float) -> float:
+        base = self.flops_per_sec * speed
+        if working_set > self.cache_bytes:
+            return base * self.thrash_penalty
+        return base
+
+    def xfer(self, nbytes: float) -> float:
+        return self.latency + nbytes / self.bandwidth
+
+
+@dataclass
+class TimelineEvent:
+    vid: str
+    kind: str                        # "Compute" (map) | "Accumulate" (reduce)
+    start: float
+    end: float
+    version: int
+
+
+@dataclass
+class SimResult:
+    makespan: float
+    timeline: List[TimelineEvent]
+    tasks_by_worker: Dict[str, int]
+    requeues: int
+    final_version: int
+    bytes_sent: float
+    busy_time: Dict[str, float]
+
+
+class Simulator:
+    """Event loop: volunteers wake, lease, (wait | compute), publish, ack."""
+
+    def __init__(self, problem: TrainingProblem, specs: List[VolunteerSpec], *,
+                 cost: CostModel = None, n_versions: Optional[int] = None,
+                 visibility_timeout: float = 900.0, grad_bytes=None,
+                 model_bytes=None):
+        from repro.core.initiator import enqueue_problem
+        self.problem = problem
+        self.cost = cost or CostModel()
+        self.qs = QueueServer(default_timeout=visibility_timeout)
+        self.ds = DataServer()
+        self.n_versions = (n_versions if n_versions is not None
+                           else problem.n_versions)
+        enqueue_problem(problem, self.qs, self.ds, n_versions=self.n_versions,
+                        store_real_model=False)
+        self.specs = {s.vid: s for s in specs}
+        self.grad_bytes = grad_bytes if grad_bytes is not None else problem.grad_bytes
+        self.model_bytes = model_bytes if model_bytes is not None else problem.model_bytes
+        self.map_flops = problem.flops_per_map()
+        self.reduce_flops = problem.flops_per_reduce()
+        # per-batch working set: model+opt state+minibatch activations per task
+        self._heap: List[Tuple[float, int, Callable]] = []
+        self._seq = itertools.count()
+        self.timeline: List[TimelineEvent] = []
+        self.tasks_by_worker: Dict[str, int] = {}
+        self.busy: Dict[str, float] = {}
+        self.bytes_sent = 0.0
+        self.done_time = 0.0
+
+    # ------------------------------------------------------------------ engine
+    def _post(self, t: float, fn: Callable):
+        heapq.heappush(self._heap, (t, next(self._seq), fn))
+
+    def run(self) -> SimResult:
+        for s in self.specs.values():
+            self._post(s.join_time, lambda vid=s.vid: self._wake(vid))
+        guard = 0
+        while self._heap and self.ds.latest_version < self.n_versions:
+            guard += 1
+            if guard > 5_000_000:
+                raise RuntimeError("simulator runaway")
+            t, _, fn = heapq.heappop(self._heap)
+            self._now = t
+            self.qs.expire_all(t)
+            fn()
+        requeues = sum(q.requeued for q in self.qs.queues.values())
+        return SimResult(self.done_time, self.timeline,
+                         dict(self.tasks_by_worker), requeues,
+                         self.ds.latest_version, self.bytes_sent,
+                         dict(self.busy))
+
+    def _alive(self, vid: str) -> bool:
+        s = self.specs[vid]
+        return s.join_time <= self._now < s.leave_time
+
+    def _wake(self, vid: str):
+        """Volunteer becomes idle at _now: try to lease the next task."""
+        if self.ds.latest_version >= self.n_versions:
+            return
+        if not self._alive(vid):
+            self.qs.drop_consumer(vid)
+            return
+        now = self._now
+        got = self.qs.lease(INITIAL_QUEUE, vid, now)
+        if got is None:
+            if not self.qs.drained([INITIAL_QUEUE]):
+                self._post(now + self.cost.poll_interval,
+                           lambda: self._wake(vid))
+            return
+        tag, task = got
+        self._post(now + self.cost.latency,
+                   lambda: self._dispatch(vid, tag, task))
+
+    def _dispatch(self, vid: str, tag: int, task):
+        if not self._alive(vid):
+            self.qs.drop_consumer(vid)
+            return
+        if isinstance(task, MapTask):
+            self._run_map(vid, tag, task)
+        else:
+            self._run_reduce(vid, tag, task)
+
+    # ------------------------------------------------------------------ map
+    def _run_map(self, vid: str, tag: int, t: MapTask):
+        now = self._now
+        if self.ds.latest_version > t.version:
+            self.qs.ack(INITIAL_QUEUE, tag)
+            self._post(now, lambda: self._wake(vid))
+            return
+        if self.ds.get_model(t.version) is None:
+            self._post(now + self.cost.poll_interval,
+                       lambda: self._dispatch(vid, tag, t))
+            return
+        spec = self.specs[vid]
+        # working set: a lone volunteer cycles model+opt+the whole 128-batch
+        # through cache; k volunteers each hold ~1/k of the batch's tasks.
+        active = sum(1 for s in self.specs.values()
+                     if s.join_time <= now < s.leave_time)
+        share = (self.model_bytes
+                 + self.grad_bytes
+                 + self._batch_bytes() / max(active, 1))
+        thr = self.cost.throughput(spec.speed, share)
+        fetch = self.cost.xfer(self.model_bytes)
+        compute = self.map_flops / thr
+        push = self.cost.xfer(self.grad_bytes)
+        start = now + fetch
+        end = start + compute + push
+
+        def finish():
+            if not self._alive(vid):
+                self.qs.drop_consumer(vid)  # task requeues via its lease
+                return
+            if self.ds.latest_version > t.version:
+                self.qs.ack(INITIAL_QUEUE, tag)
+            else:
+                self.qs.publish(results_queue(t.version),
+                                GradResult(t.version, t.mb_index, None,
+                                           self.grad_bytes, 0.0, vid))
+                self.qs.ack(INITIAL_QUEUE, tag)
+                self.timeline.append(TimelineEvent(vid, "Compute", now, end,
+                                                   t.version))
+                self.tasks_by_worker[vid] = self.tasks_by_worker.get(vid, 0) + 1
+                self.busy[vid] = self.busy.get(vid, 0.0) + (end - now)
+                self.bytes_sent += self.grad_bytes + self.model_bytes
+            self._wake(vid)
+
+        self._post(end, finish)
+
+    def _batch_bytes(self) -> float:
+        tp = self.problem.tp
+        sample = tp.sample_len * max(self.problem.cfg.vocab, 96) * 4
+        return tp.batch_size * sample
+
+    # ------------------------------------------------------------------ reduce
+    def _run_reduce(self, vid: str, tag: int, t: ReduceTask):
+        now = self._now
+        if self.ds.latest_version > t.version:
+            self.qs.ack(INITIAL_QUEUE, tag)
+            self._post(now, lambda: self._wake(vid))
+            return
+        rq = results_queue(t.version)
+        if self.qs.depth(rq) < t.n_mb:
+            self._post(now + self.cost.poll_interval,
+                       lambda: self._dispatch(vid, tag, t))
+            return
+        tags = []
+        seen = set()
+        while True:
+            got = self.qs.lease(rq, vid, now)
+            if got is None:
+                break
+            rtag, res = got
+            tags.append(rtag)
+            seen.add(res.mb_index)
+        if len(seen) < t.n_mb:
+            for rtag in tags:
+                self.qs.nack(rq, rtag)
+            self._post(now + self.cost.poll_interval,
+                       lambda: self._dispatch(vid, tag, t))
+            return
+        spec = self.specs[vid]
+        pull = self.cost.xfer(self.grad_bytes * t.n_mb) + self.cost.xfer(
+            self.model_bytes)
+        compute = self.reduce_flops / (self.cost.flops_per_sec * spec.speed)
+        push = self.cost.xfer(self.model_bytes)
+        end = now + pull + compute + push
+
+        def finish():
+            if not self._alive(vid):
+                self.qs.drop_consumer(vid)
+                for rtag in tags:
+                    self.qs.nack(rq, rtag)
+                return
+            self.ds.publish_model(t.version + 1, "blob",
+                                  nbytes=self.model_bytes)
+            for rtag in tags:
+                self.qs.ack(rq, rtag)
+            self.qs.ack(INITIAL_QUEUE, tag)
+            self.timeline.append(TimelineEvent(vid, "Accumulate", now, end,
+                                               t.version))
+            self.tasks_by_worker[vid] = self.tasks_by_worker.get(vid, 0) + 1
+            self.busy[vid] = self.busy.get(vid, 0.0) + (end - now)
+            self.bytes_sent += self.grad_bytes * t.n_mb + 2 * self.model_bytes
+            self.done_time = max(self.done_time, end)
+            self._wake(vid)
+
+        self._post(end, finish)

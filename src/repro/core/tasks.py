@@ -1,0 +1,51 @@
+"""Task and message types of the JSDoop map-reduce training protocol (§IV.G).
+
+One *batch* (size 128) = ``n_mb`` map tasks (mini-batch 8 gradients against
+model version v) + 1 reduce task (accumulate all n_mb gradients, RMSprop-apply,
+publish model v+1). The model version required by a batch's tasks equals the
+global batch index: version = epoch * batches_per_epoch + batch.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+INITIAL_QUEUE = "initial"
+
+
+def results_queue(version: int) -> str:
+    """Per-batch results queue (the paper's MapResultsQueue, sharded per batch —
+    'it is possible to use several QueueServers in which each one stores a
+    different type of task')."""
+    return f"map-results:v{version}"
+
+
+@dataclass(frozen=True)
+class MapTask:
+    version: int              # model version the gradient must be computed on
+    epoch: int
+    batch: int
+    mb_index: int             # which mini-batch slice of the 128-batch
+    mb_size: int
+
+    kind: str = "map"
+
+
+@dataclass(frozen=True)
+class ReduceTask:
+    version: int              # consumes results for `version`, publishes version+1
+    epoch: int
+    batch: int
+    n_mb: int
+
+    kind: str = "reduce"
+
+
+@dataclass(frozen=True)
+class GradResult:
+    version: int
+    mb_index: int
+    payload: Any              # grads pytree (or encoded payload) | None in sim
+    nbytes: int = 0
+    loss: float = 0.0
+    worker: str = ""

@@ -1,0 +1,2 @@
+from repro.data.text import TextTask, CharVocab, repo_corpus, synthetic_corpus  # noqa: F401
+from repro.data.tokens import lm_batch, shard_slice  # noqa: F401

@@ -1,0 +1,14 @@
+"""L2 — the paper's queue-scheduled map/reduce schedule as compiled SPMD.
+
+``sharding``   per-tensor PartitionSpec policy (divisibility-checked fallbacks)
+``steps``      train_step (map = microbatch grad in a scan; reduce = the single
+               collective + optimizer apply), prefill_step, decode_step
+``hierarchy``  shard_map two-stage (intra-pod, inter-pod) gradient reduction —
+               the TPU form of JSDoop's "multiple QueueServers" load balancing
+"""
+from repro.distributed.sharding import (  # noqa: F401
+    ShardingPolicy, batch_specs, cache_specs, param_specs, opt_state_specs,
+)
+from repro.distributed.steps import (  # noqa: F401
+    make_train_step, make_prefill_step, make_decode_step,
+)

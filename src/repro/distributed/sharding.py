@@ -1,0 +1,262 @@
+"""Per-tensor sharding policy for the production meshes.
+
+Axes: single-pod ``("data", "model")`` = (16, 16); multi-pod adds a leading
+``"pod"`` axis = (2, 16, 16).
+
+Policy (DESIGN.md §5), applied leaf-wise with divisibility-checked fallback
+chains — a proposed axis is used only when the dim divides the axis size,
+otherwise the next candidate is tried, ending at replication:
+
+- tensor parallel ("model"): attention q/o heads, kv heads (falling back to
+  head_dim for narrow-head archs like whisper), FFN hidden, MoE expert dim,
+  Mamba d_inner, vocab for embed/unembed.
+- FSDP ("data"): the largest still-unsharded dim of every weight >= _FSDP_MIN
+  elements (ZeRO-3: all-gather at use, reduce-scatter of grads — this is what
+  turns the paper's DataServer "one shared model" into a distributed one).
+- batch: leading dim of every input -> ("pod", "data") when divisible.
+- decode caches: batch -> data when divisible; the KV sequence dim -> "model"
+  (sequence-parallel flash-decode); for global_batch=1 (long_500k) the
+  sequence dim takes every axis instead.
+
+Nothing here allocates; the policy maps ShapeDtypeStructs / abstract pytrees
+to PartitionSpecs, and ``NamedSharding`` binding happens at jit boundaries.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# weights smaller than this stay replicated (norm scales, biases): the
+# all-gather latency would cost more than the memory saved.
+_FSDP_MIN = 1 << 16
+
+# parameter pytrees whose leading dim is the lax.scan unit axis — never shard
+# it (scan iterates over it; sharding it would serialize into dynamic-slices).
+_STACKED_ROOTS = ("blocks", "encoder", "decoder")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    """Axis-name view of a mesh + the knobs the perf loop flips."""
+    axis_names: Tuple[str, ...]
+    axis_sizes: Tuple[int, ...]
+    fsdp_axes: Tuple[str, ...] = ("data",)   # ZeRO-3 domain
+    tp_axis: str = "model"
+    seq_parallel: bool = False               # activations seq -> model at unit bounds
+    grad_accum_dtype: str = "float32"        # bf16 halves the accumulator (§Perf)
+    attn_hd_fallback: bool = True            # narrow-head archs: shard head_dim
+                                             # when heads don't divide TP. False
+                                             # replicates qkv instead (§Perf: hd
+                                             # is a CONTRACTING dim in QK^T, so
+                                             # sharding it all-reduces the score
+                                             # tensors every layer)
+
+    @classmethod
+    def for_mesh(cls, mesh: Mesh, **kw) -> "ShardingPolicy":
+        return cls(tuple(mesh.axis_names), tuple(mesh.devices.shape), **kw)
+
+    def size(self, name) -> int:
+        if isinstance(name, (tuple, list)):
+            return int(np.prod([self.size(n) for n in name]))
+        if name is None:
+            return 1
+        return self.axis_sizes[self.axis_names.index(name)]
+
+    @property
+    def batch_axes(self) -> Tuple[str, ...]:
+        """Data-parallel axes for the batch dim (pod included when present)."""
+        return tuple(a for a in self.axis_names if a in ("pod", "data"))
+
+    @property
+    def fsdp_size(self) -> int:
+        return self.size(tuple(self.fsdp_axes))
+
+    @property
+    def tp_size(self) -> int:
+        return self.size(self.tp_axis)
+
+    @property
+    def n_devices(self) -> int:
+        return int(np.prod(self.axis_sizes))
+
+
+# ---------------------------------------------------------------------------
+# tensor-parallel dim selection (fallback chains)
+# ---------------------------------------------------------------------------
+
+def _tp_candidates(path: Tuple[str, ...], shape: Tuple[int, ...],
+                   hd_fallback: bool = True):
+    """Ordered candidate dims (negative indices) to place on the TP axis."""
+    name = path[-1]
+    parent = path[-2] if len(path) > 1 else ""
+    if parent in ("attn", "cross"):
+        hd = (-1,) if hd_fallback else ()
+        if name == "wq":
+            return (-2,) + hd        # heads, then (optionally) head_dim
+        if name in ("wk", "wv"):
+            return (-2,) + hd        # kv heads (GQA may not divide)
+        if name == "wo":
+            return (-3,) + ((-2,) if hd_fallback else ())
+        if name in ("bq", "bk", "bv"):
+            return (-2,) + hd
+    if parent in ("mlp", "shared"):
+        return {"wi": (-1,), "wg": (-1,), "wo": (-2,)}.get(name, ())
+    if parent == "experts":
+        return (-3,)                 # the expert dim => expert parallelism
+    if parent == "ssm":
+        return {"in_proj": (-1,), "conv_w": (-1,), "conv_b": (-1,),
+                "x_proj": (-2,), "dt_proj": (-1,), "dt_bias": (-1,),
+                "A_log": (-2,), "Dskip": (-1,), "out_proj": (-2,)}.get(name, ())
+    if name == "embed":
+        return (0, 1)                # vocab, then d_model
+    if name == "unembed":
+        return (-1, 0)               # vocab, then d_model
+    if parent == "head":             # lstm softmax head
+        return (-1,) if name == "w" else ()
+    if name == "kernel":             # lstm gate kernel [(d_in+H), 4H]
+        return (-1,)
+    return ()
+
+
+def _leaf_size(shape) -> int:
+    return int(np.prod(shape)) if shape else 1
+
+
+def spec_for_param(path: Tuple[str, ...], shape: Tuple[int, ...],
+                   policy: ShardingPolicy) -> P:
+    """PartitionSpec for one weight leaf."""
+    ndim = len(shape)
+    assign: Dict[int, Any] = {}
+
+    # 1. tensor parallel
+    if policy.tp_axis in policy.axis_names:
+        tp = policy.size(policy.tp_axis)
+        for cand in _tp_candidates(path, shape, policy.attn_hd_fallback):
+            d = cand % ndim if ndim else 0
+            if ndim and shape[d] % tp == 0 and shape[d] >= tp:
+                assign[d] = policy.tp_axis
+                break
+
+    # 2. FSDP over the largest remaining dim
+    if policy.fsdp_axes and _leaf_size(shape) >= _FSDP_MIN:
+        fs = policy.fsdp_size
+        skip0 = path and path[0] in _STACKED_ROOTS
+        cands = [d for d in range(ndim)
+                 if d not in assign and not (skip0 and d == 0)]
+        cands.sort(key=lambda d: -shape[d])
+        for d in cands:
+            if shape[d] % fs == 0 and shape[d] >= fs:
+                ax = policy.fsdp_axes
+                assign[d] = ax[0] if len(ax) == 1 else tuple(ax)
+                break
+
+    return P(*[assign.get(d) for d in range(ndim)])
+
+
+def param_specs(params_shape: Any, policy: ShardingPolicy) -> Any:
+    """Map a params pytree (arrays or ShapeDtypeStructs) to PartitionSpecs."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = []
+    for path, leaf in flat:
+        keys = tuple(getattr(k, "key", getattr(k, "idx", str(k))) for k in path)
+        keys = tuple(str(k) for k in keys)
+        specs.append(spec_for_param(keys, tuple(leaf.shape), policy))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def opt_state_specs(opt_state: Any, pspecs: Any) -> Any:
+    """Optimizer slots mirror their weight's spec; scalars replicate.
+
+    Works for any of our optimizers: slots live under keys ('ms','mu','m','v')
+    with the same tree structure as params; 'step' is a scalar.
+    """
+    out = {}
+    for k, v in opt_state.items():
+        if k == "step":
+            out[k] = P()
+        else:
+            out[k] = pspecs
+    return out
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_specs(batch_shape: Dict[str, Any], policy: ShardingPolicy) -> Any:
+    """Shard dim 0 (global batch) of every input over the batch axes."""
+    bp = policy.batch_axes
+
+    def spec(leaf):
+        b = leaf.shape[0] if leaf.shape else 1
+        if b % policy.size(bp) == 0:
+            return P(bp, *([None] * (len(leaf.shape) - 1)))
+        return P(*([None] * len(leaf.shape)))
+
+    return jax.tree.map(spec, batch_shape)
+
+
+def cache_specs(cache_shape: Any, policy: ShardingPolicy) -> Any:
+    """Decode-cache policy (DESIGN §5).
+
+    Leaves (stacked over units at dim 0):
+      k/v   [U, B, Smax, Kv, hd]   — seq-parallel flash-decode
+      ck/cv [U, B, Se,  Kv, hd]    — encdec cross kv (Se=1500: replicated)
+      conv  [U, B, K-1, Di]        — mamba conv window
+      h     [U, B, Di,  N]         — mamba state
+      pos   scalar
+    """
+    bp = policy.batch_axes
+    bp_sz = policy.size(bp)
+    tp = policy.tp_axis
+
+    def spec(path, leaf):
+        keys = [str(getattr(k, "key", k)) for k in path]
+        name = keys[-1] if keys else ""
+        shape = leaf.shape
+        if not shape:
+            return P()
+        if name in ("k", "v"):
+            U, B, S = shape[0], shape[1], shape[2]
+            if B % bp_sz == 0:
+                s_ax = tp if S % policy.size(tp) == 0 else None
+                return P(None, bp, s_ax, None, None)
+            # long-context single-request: spread the cache over everything
+            all_ax = tuple(policy.axis_names)
+            if S % policy.size(all_ax) == 0:
+                return P(None, None, all_ax, None, None)
+            return P(None, None, None, None, None)
+        if name in ("ck", "cv"):
+            return P(None, bp if shape[1] % bp_sz == 0 else None,
+                     None, None, None)
+        if name == "conv":
+            di_ax = tp if shape[-1] % policy.size(tp) == 0 else None
+            return P(None, bp if shape[1] % bp_sz == 0 else None, None, di_ax)
+        if name == "h":
+            di_ax = tp if shape[-2] % policy.size(tp) == 0 else None
+            return P(None, bp if shape[1] % bp_sz == 0 else None, di_ax, None)
+        return P(*([None] * len(shape)))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shape)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec(p, l) for p, l in flat])
+
+
+# ---------------------------------------------------------------------------
+# binding helpers
+# ---------------------------------------------------------------------------
+
+def named(mesh: Mesh, specs: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def activation_spec(policy: ShardingPolicy) -> Optional[P]:
+    """Per-unit boundary constraint for activations [B, S, D] (seq parallel)."""
+    if not policy.seq_parallel:
+        return None
+    return P(policy.batch_axes, policy.tp_axis, None)

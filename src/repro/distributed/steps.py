@@ -1,0 +1,216 @@
+"""Compiled SPMD steps — the paper's map/reduce schedule in pjit form.
+
+``train_step`` is JSDoop's Fig. 3 as one XLA program:
+
+  map task    -> one microbatch gradient inside a ``lax.scan`` accumulation
+                 loop (the MapResultsQueue is the fp32 accumulator),
+  reduce task -> the single cross-replica gradient mean + optimizer apply
+                 (XLA inserts the reduce-scatter/all-reduce over the data/pod
+                 axes), publishing "model version v+1" = the returned params.
+
+The semantics match the L1 runtime exactly: weights are not updated until all
+microbatch gradients of the global batch are accumulated, so the trained model
+is invariant to how many devices ("volunteers") computed it — paper Table 4.
+
+``decode_step``/``prefill_step`` are the serving-side equivalents used by the
+decode input shapes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import model as M
+from repro.models.runtime import Runtime
+from repro.distributed import sharding as SH
+
+
+def _microbatch_count(shape, policy: SH.ShardingPolicy,
+                      requested: int = 0) -> int:
+    """Paper Table 3 wants 16 accumulation steps per batch; on a mesh the
+    microbatch must still tile the per-device batch, so we take the largest
+    feasible count <= requested (default 16)."""
+    want = requested or 16
+    dp = policy.size(policy.batch_axes)
+    per_device = max(shape.global_batch // dp, 1)
+    n = min(want, per_device)
+    while per_device % n:
+        n -= 1
+    return max(n, 1)
+
+
+def make_train_step(cfg, rt: Runtime, optimizer, shape, policy: SH.ShardingPolicy,
+                    *, num_microbatches: int = 0):
+    """Returns (train_step, n_micro). train_step(params, opt_state, batch) ->
+    (params, opt_state, metrics)."""
+    n_micro = _microbatch_count(shape, policy, num_microbatches)
+    acc_dt = jnp.dtype(policy.grad_accum_dtype)
+
+    if policy.seq_parallel and rt.act_spec is None:
+        import dataclasses
+        rt = dataclasses.replace(rt, act_spec=SH.activation_spec(policy))
+
+    def train_step(params, opt_state, batch):
+        def micro_loss(p, mb):
+            loss, mets = M.loss_fn(p, cfg, rt, mb)
+            return loss, mets
+
+        grad_fn = jax.value_and_grad(micro_loss, has_aux=True)
+
+        if n_micro == 1:
+            (loss, mets), grads = grad_fn(params, batch)
+        else:
+            def split(leaf):
+                b = leaf.shape[0]
+                return leaf.reshape(n_micro, b // n_micro, *leaf.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+
+            def body(gsum, mb):
+                (l, mt), g = grad_fn(params, mb)
+                gsum = jax.tree.map(lambda a, b: a + b.astype(a.dtype), gsum, g)
+                return gsum, (l, mt)
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+            gsum, (losses, metss) = jax.lax.scan(body, g0, mbs)
+            grads = jax.tree.map(lambda g: (g / n_micro).astype(jnp.float32),
+                                 gsum)
+            loss = jnp.mean(losses)
+            mets = jax.tree.map(jnp.mean, metss)
+
+        new_p, new_s = optimizer.update(params, opt_state, grads)
+        metrics = {"loss": loss.astype(jnp.float32), **mets}
+        return new_p, new_s, metrics
+
+    return train_step, n_micro
+
+
+def make_decode_step(cfg, rt: Runtime):
+    """serve_step: ONE new token against a KV/SSM cache of seq_len."""
+    def decode_step(params, cache, token, pos):
+        logits, new_cache = M.decode_step(params, cfg, rt, token, cache, pos)
+        return logits, new_cache
+    return decode_step
+
+
+def make_prefill_step(cfg, rt: Runtime):
+    def prefill_step(params, batch, cache):
+        logits, new_cache = M.prefill(params, cfg, rt, batch, cache)
+        return logits, new_cache
+    return prefill_step
+
+
+# ---------------------------------------------------------------------------
+# jit binding with the sharding policy
+# ---------------------------------------------------------------------------
+
+def bind_train(mesh: Mesh, cfg, rt, optimizer, shape, *,
+               policy: Optional[SH.ShardingPolicy] = None,
+               num_microbatches: int = 0, donate: bool = True):
+    """Build the jitted train_step plus every spec needed to call/lower it.
+
+    Returns dict(step=jitted fn, specs=..., n_micro=...).
+    """
+    policy = policy or SH.ShardingPolicy.for_mesh(mesh)
+    pshape = jax.eval_shape(
+        lambda k: M.init_params(cfg, k), jax.ShapeDtypeStruct((2,), jnp.uint32))
+    pspecs = SH.param_specs(pshape, policy)
+    oshape = jax.eval_shape(lambda: optimizer.init(
+        jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), pshape)))
+    ospecs = SH.opt_state_specs(oshape, pspecs)
+    bshape = M.train_batch_spec(cfg, shape)
+    bspecs = SH.batch_specs(bshape, policy)
+
+    step, n_micro = make_train_step(cfg, rt, optimizer, shape, policy,
+                                    num_microbatches=num_microbatches)
+    mspec = {"loss": P(), "ce": P(), "aux": P()}
+    jitted = jax.jit(
+        step,
+        in_shardings=(SH.named(mesh, pspecs), SH.named(mesh, ospecs),
+                      SH.named(mesh, bspecs)),
+        out_shardings=(SH.named(mesh, pspecs), SH.named(mesh, ospecs),
+                       SH.named(mesh, {k: mspec[k] for k in ("loss", "ce", "aux")})),
+        donate_argnums=(0, 1) if donate else (),
+    )
+    return dict(step=jitted, param_specs=pspecs, opt_specs=ospecs,
+                batch_specs=bspecs, params_shape=pshape, opt_shape=oshape,
+                batch_shape=bshape, n_micro=n_micro, policy=policy)
+
+
+def bind_decode(mesh: Mesh, cfg, rt, shape, *,
+                policy: Optional[SH.ShardingPolicy] = None):
+    """Jitted serve_step + specs. Cache length = shape.seq_len."""
+    policy = policy or SH.ShardingPolicy.for_mesh(mesh)
+    pshape = jax.eval_shape(
+        lambda k: M.init_params(cfg, k), jax.ShapeDtypeStruct((2,), jnp.uint32))
+    pspecs = SH.param_specs(pshape, policy)
+    cshape = jax.eval_shape(
+        lambda: M.init_cache(cfg, shape.global_batch, shape.seq_len))
+    cspecs = SH.cache_specs(cshape, policy)
+    bp = policy.batch_axes
+    tok_spec = (P(bp) if shape.global_batch % policy.size(bp) == 0 else P(None))
+
+    step = make_decode_step(cfg, rt)
+    jitted = jax.jit(
+        step,
+        in_shardings=(SH.named(mesh, pspecs), SH.named(mesh, cspecs),
+                      NamedSharding(mesh, tok_spec), NamedSharding(mesh, P())),
+        out_shardings=(NamedSharding(mesh, tok_spec
+                                     if tok_spec != P(None) else P()),
+                       SH.named(mesh, cspecs)),
+        donate_argnums=(1,),
+    )
+    tok_shape, pos_shape = M.decode_spec(cfg, shape)
+    return dict(step=jitted, param_specs=pspecs, cache_specs=cspecs,
+                params_shape=pshape, cache_shape=cshape,
+                token_shape=tok_shape, pos_shape=pos_shape, policy=policy)
+
+
+def bind_prefill(mesh: Mesh, cfg, rt, shape, *,
+                 policy: Optional[SH.ShardingPolicy] = None):
+    """Jitted prefill over the prompt, writing cache positions [0, seq_len)."""
+    policy = policy or SH.ShardingPolicy.for_mesh(mesh)
+    pshape = jax.eval_shape(
+        lambda k: M.init_params(cfg, k), jax.ShapeDtypeStruct((2,), jnp.uint32))
+    pspecs = SH.param_specs(pshape, policy)
+    cshape = jax.eval_shape(
+        lambda: M.init_cache(cfg, shape.global_batch, shape.seq_len))
+    cspecs = SH.cache_specs(cshape, policy)
+    bshape = prefill_batch_spec(cfg, shape)
+    bspecs = SH.batch_specs(bshape, policy)
+    bp = policy.batch_axes
+    logit_spec = (P(bp, None) if shape.global_batch % policy.size(bp) == 0
+                  else P(None, None))
+
+    step = make_prefill_step(cfg, rt)
+    jitted = jax.jit(
+        step,
+        in_shardings=(SH.named(mesh, pspecs), SH.named(mesh, bspecs),
+                      SH.named(mesh, cspecs)),
+        out_shardings=(NamedSharding(mesh, logit_spec), SH.named(mesh, cspecs)),
+        donate_argnums=(2,),
+    )
+    return dict(step=jitted, param_specs=pspecs, cache_specs=cspecs,
+                batch_specs=bspecs, params_shape=pshape, cache_shape=cshape,
+                batch_shape=bshape, policy=policy)
+
+
+def prefill_batch_spec(cfg, shape) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Prompt batch: seq_len tokens (no +1 label shift)."""
+    Bsz, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.family == "encdec":
+        return {"frames": jax.ShapeDtypeStruct((Bsz, cfg.encoder_seq,
+                                                cfg.d_model), dt),
+                "tokens": jax.ShapeDtypeStruct((Bsz, S), jnp.int32)}
+    if cfg.family == "vlm":
+        St = S - cfg.vision_prefix
+        return {"patches": jax.ShapeDtypeStruct((Bsz, cfg.vision_prefix,
+                                                 cfg.d_model), dt),
+                "tokens": jax.ShapeDtypeStruct((Bsz, St), jnp.int32)}
+    return {"tokens": jax.ShapeDtypeStruct((Bsz, S), jnp.int32)}

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the compute hot spots (validated in interpret mode):
+
+- ``lstm_cell``        fused gate matmul + elementwise (the paper's model)
+- ``flash_attention``  GQA online-softmax attention, causal/sliding-window
+- ``rmsnorm``          fused row norm
+- ``ternary``          TernGrad 2-bit gradient pack/unpack (paper §III fix)
+
+Each has a jit'd wrapper in ``ops`` and a pure-jnp oracle in ``ref``.
+"""
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references).
+
+These are deliberately the most literal implementation of the math — no
+chunking, no online softmax — so a kernel bug cannot be masked by a
+mirrored bug in the reference.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def lstm_cell(x, h, c, kernel, bias):
+    """Keras-gate-order LSTM cell. x [B,Din], h/c [B,H], kernel [(Din+H),4H]."""
+    z = jnp.concatenate([x, h], axis=-1) @ kernel + bias
+    i, f, g, o = jnp.split(z, 4, axis=-1)
+    c_new = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0):
+    """Exact softmax attention (materialized scores). q [B,Sq,H,hd];
+    k/v [B,Skv,Kv,hd] with GQA head grouping. Assumes q positions are
+    aligned to the end of kv (self-attention, q_pos = Skv - Sq + i)."""
+    B, Sq, H, hd = q.shape
+    Skv, Kv = k.shape[1], k.shape[2]
+    G = H // Kv
+    qg = q.reshape(B, Sq, Kv, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32))
+    s = s / math.sqrt(hd)
+    qpos = jnp.arange(Sq) + (Skv - Sq)
+    kpos = jnp.arange(Skv)
+    ok = jnp.ones((Sq, Skv), bool)
+    if causal:
+        ok &= kpos[None, :] <= qpos[:, None]
+    if window:
+        ok &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(ok[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def ternary_encode(g, scale):
+    """Threshold ternarization: t = sign(g) * (|g| >= scale/2), int8."""
+    t = jnp.sign(g) * (jnp.abs(g) >= scale / 2)
+    return t.astype(jnp.int8)
+
+
+def ternary_pack(t_flat):
+    """Pack int8 {-1,0,1} (len % 4 == 0) into uint8, 2 bits each:
+    {0 -> 0b00, 1 -> 0b01, -1 -> 0b10}."""
+    codes = jnp.where(t_flat < 0, 2, t_flat).astype(jnp.uint8)
+    c = codes.reshape(-1, 4)
+    return (c[:, 0] | (c[:, 1] << 2) | (c[:, 2] << 4) | (c[:, 3] << 6))
+
+
+def ternary_unpack(packed, n):
+    parts = [(packed >> (2 * i)) & 3 for i in range(4)]
+    codes = jnp.stack(parts, axis=1).reshape(-1)[:n]
+    return jnp.where(codes == 2, -1, codes).astype(jnp.int8)

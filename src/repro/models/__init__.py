@@ -1,0 +1,5 @@
+from repro.models.runtime import Runtime, DEFAULT, BASELINE  # noqa: F401
+from repro.models.model import (  # noqa: F401
+    init_params, forward, loss_fn, init_cache, prefill, decode_step,
+    train_batch_spec, decode_spec, param_count,
+)

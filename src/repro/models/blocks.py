@@ -1,0 +1,228 @@
+"""Transformer/SSM blocks and the scan-over-layers machinery.
+
+A *scan unit* is the repeating parameter structure: one layer for uniform
+architectures, the full 8-layer period for Jamba-style hybrids. Units are
+initialized per-instance and stacked leaf-wise, so depth costs O(1) HLO via
+``lax.scan``. Decode caches are stacked the same way and threaded through the
+scan as xs/ys.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+
+
+# ---------------------------------------------------------------------------
+# sublayer init
+# ---------------------------------------------------------------------------
+
+def _init_sublayer(key, cfg, dtype, layer_idx: int, *, cross: bool = False):
+    """One residual layer: norm1 + mixer (+ norms/cross for encdec) + norm2 + ffn."""
+    ks = jax.random.split(key, 6)
+    kind = cfg.layer_kind(layer_idx)
+    p: Dict[str, Any] = {"kind": kind}  # 'kind' is static; stripped before stacking
+    p["norm1"] = L.init_norm(cfg.norm, cfg.d_model, dtype)
+    if kind == "ssm":
+        p["ssm"] = S.init_ssm(ks[0], cfg, dtype)
+    else:
+        p["attn"] = L.init_attention(ks[0], cfg, dtype)
+    if cross:
+        p["norm_x"] = L.init_norm(cfg.norm, cfg.d_model, dtype)
+        p["cross"] = L.init_attention(ks[1], cfg, dtype, cross=True)
+    # ffn (mamba layers in pure-SSM archs have no separate ffn)
+    if not (cfg.family == "ssm"):
+        p["norm2"] = L.init_norm(cfg.norm, cfg.d_model, dtype)
+        if cfg.layer_is_moe(layer_idx):
+            p["moe"] = M.init_moe(ks[2], cfg, dtype)
+            if cfg.moe.dense_residual:
+                p["mlp"] = L.init_mlp(ks[3], cfg, dtype)
+        else:
+            p["mlp"] = L.init_mlp(ks[3], cfg, dtype)
+    return p
+
+
+def unit_size(cfg) -> int:
+    return cfg.hybrid.period if cfg.family == "hybrid" else 1
+
+def num_units(cfg) -> int:
+    assert cfg.n_layers % unit_size(cfg) == 0, (cfg.n_layers, unit_size(cfg))
+    return cfg.n_layers // unit_size(cfg)
+
+
+def init_unit(key, cfg, dtype, *, cross: bool = False):
+    P = unit_size(cfg)
+    ks = jax.random.split(key, P)
+    return {f"l{i}": _init_sublayer(ks[i], cfg, dtype, i, cross=cross)
+            for i in range(P)}
+
+
+def strip_static(tree):
+    """Remove the non-array 'kind' markers before stacking/scanning."""
+    if isinstance(tree, dict):
+        return {k: strip_static(v) for k, v in tree.items() if k != "kind"}
+    return tree
+
+
+def init_stacked_units(key, cfg, dtype, *, cross: bool = False):
+    U = num_units(cfg)
+    keys = jax.random.split(key, U)
+    units = [strip_static(init_unit(k, cfg, dtype, cross=cross)) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *units)
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def init_unit_cache(cfg, batch: int, max_seq: int, dtype, *,
+                    cross_seq: int = 0):
+    """Decode cache for one scan unit (stacked over units by the caller)."""
+    cache: Dict[str, Any] = {}
+    for i in range(unit_size(cfg)):
+        kind = cfg.layer_kind(i)
+        if kind == "ssm":
+            cache[f"l{i}"] = S.init_ssm_state(cfg, batch, dtype)
+        else:
+            c = {"k": jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.hd), dtype),
+                 "v": jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.hd), dtype)}
+            if cross_seq:
+                c["ck"] = jnp.zeros((batch, cross_seq, cfg.n_kv_heads, cfg.hd), dtype)
+                c["cv"] = jnp.zeros((batch, cross_seq, cfg.n_kv_heads, cfg.hd), dtype)
+            cache[f"l{i}"] = c
+    if cross_seq:
+        # encdec: every decoder layer has cross kv even if mixer is attention
+        for i in range(unit_size(cfg)):
+            c = cache[f"l{i}"]
+            if "ck" not in c:
+                c["ck"] = jnp.zeros((batch, cross_seq, cfg.n_kv_heads, cfg.hd), dtype)
+                c["cv"] = jnp.zeros((batch, cross_seq, cfg.n_kv_heads, cfg.hd), dtype)
+    return cache
+
+
+def init_cache(cfg, batch: int, max_seq: int, dtype, *, cross_seq: int = 0):
+    U = num_units(cfg)
+    unit = init_unit_cache(cfg, batch, max_seq, dtype, cross_seq=cross_seq)
+    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (U,) + x.shape), unit)
+
+
+# ---------------------------------------------------------------------------
+# sublayer / unit application
+# ---------------------------------------------------------------------------
+
+def _apply_sublayer(p, x, cfg, rt, layer_idx: int, *, positions, pos,
+                    cache: Optional[dict], memory=None, cross: bool = False,
+                    causal: bool = True, window: int = 0):
+    """Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    kind = cfg.layer_kind(layer_idx)
+    h = L.apply_norm(cfg.norm, p["norm1"], x)
+    if rt.act_inner_spec is not None:
+        # Megatron-SP: norm runs on the seq-sharded residual; its output is
+        # gathered HERE, once, for all qkv/mlp consumers (instead of XLA
+        # re-gathering per projection)
+        h = jax.lax.with_sharding_constraint(h, rt.act_inner_spec)
+    new_cache: Dict[str, Any] = {}
+    if kind == "ssm":
+        if cache is not None and x.shape[1] == 1:
+            mix, st = S.apply_ssm_step(p["ssm"], h, cfg, cache)
+            new_cache = st
+        elif cache is not None:
+            mix, st = S.apply_ssm(p["ssm"], h, cfg, rt, state=cache)
+            new_cache = st
+        else:
+            mix, _ = S.apply_ssm(p["ssm"], h, cfg, rt)
+    else:
+        attn_cache = None
+        if cache is not None:
+            attn_cache = {"k": cache["k"], "v": cache["v"], "pos": pos}
+        mix, nc = L.self_attention(p["attn"], h, cfg, rt, positions=positions,
+                                   causal=causal, window=window,
+                                   cache=attn_cache,
+                                   decode=(cache is not None and x.shape[1] == 1))
+        if nc is not None:
+            new_cache = {"k": nc["k"], "v": nc["v"]}
+            if cache is not None and "ck" in cache:
+                new_cache["ck"], new_cache["cv"] = cache["ck"], cache["cv"]
+    x = x + mix
+    if cross and (memory is not None or (cache is not None and "ck" in cache)):
+        hx = L.apply_norm(cfg.norm, p["norm_x"], x)
+        if cache is not None and memory is not None:
+            # prefill: project the encoder memory once, store per-layer cross kv
+            _, ck, cv = L.attention_qkv(p["cross"], hx, xkv=memory)
+            new_cache["ck"] = ck.astype(cache["ck"].dtype)
+            new_cache["cv"] = cv.astype(cache["cv"].dtype)
+            x = x + L.cross_attention(p["cross"], hx, cfg, rt, mem_kv=(ck, cv))
+        elif cache is not None:
+            mem_kv = (cache["ck"], cache["cv"])
+            x = x + L.cross_attention(p["cross"], hx, cfg, rt, mem_kv=mem_kv)
+        else:
+            x = x + L.cross_attention(p["cross"], hx, cfg, rt, memory=memory)
+    if "norm2" in p:
+        h2 = L.apply_norm(cfg.norm, p["norm2"], x)
+        if rt.act_inner_spec is not None:
+            h2 = jax.lax.with_sharding_constraint(h2, rt.act_inner_spec)
+        y = jnp.zeros_like(x)
+        if "moe" in p:
+            ym, aux_m = M.apply_moe(p["moe"], h2, cfg, rt)
+            y = y + ym
+            aux = aux + aux_m
+        if "mlp" in p:
+            y = y + L.apply_mlp(p["mlp"], h2, cfg.mlp)
+        x = x + y
+    return x, new_cache, aux
+
+
+def apply_unit(up, x, cfg, rt, *, positions, pos, cache=None, memory=None,
+               cross: bool = False, causal: bool = True, window: int = 0):
+    """Apply one scan unit (1..period sublayers). Returns (x, new_cache, aux)."""
+    new_cache = {} if cache is not None else None
+    aux = jnp.zeros((), jnp.float32)
+    for i in range(unit_size(cfg)):
+        key = f"l{i}"
+        sub_cache = cache[key] if cache is not None else None
+        x, nc, a = _apply_sublayer(
+            up[key], x, cfg, rt, i, positions=positions, pos=pos,
+            cache=sub_cache, memory=memory, cross=cross, causal=causal,
+            window=window)
+        if cache is not None:
+            new_cache[key] = nc
+        aux = aux + a
+    return x, new_cache, aux
+
+
+def scan_units(units_p, x, cfg, rt, *, positions, pos=None, cache=None,
+               memory=None, cross: bool = False, causal: bool = True,
+               window: int = 0):
+    """lax.scan over stacked units. Returns (x, new_cache, aux_total)."""
+    fn = functools.partial(apply_unit, cfg=cfg, rt=rt, positions=positions,
+                           pos=pos, memory=memory, cross=cross, causal=causal,
+                           window=window)
+
+    def body(carry, xs):
+        xc, aux = carry
+        if rt.act_spec is not None:
+            # sequence-parallel activations: the scan carry (the only stored
+            # residual under remat) lives sharded on (batch, seq) — §Perf
+            xc = jax.lax.with_sharding_constraint(xc, rt.act_spec)
+        if cache is not None:
+            up, uc = xs
+            xc, nc, a = fn(up, xc, cache=uc)
+        else:
+            up = xs
+            xc, nc, a = fn(up, xc, cache=None)
+            nc = None
+        return (xc, aux + a), nc
+
+    if rt.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    xs = (units_p, cache) if cache is not None else units_p
+    (x, aux), new_cache = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+    return x, new_cache, aux

@@ -1,0 +1,388 @@
+"""Core layers: init helpers, norms, RoPE, attention (flash + plain), MLP variants.
+
+Everything is functional: ``init_*`` returns a params pytree (nested dicts of
+jnp arrays); ``apply_*`` consumes it. No module classes, no global state.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: float = 0.02):
+    return (scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            ).astype(dtype)
+
+
+def zeros(shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones(shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_norm(kind: str, d: int, dtype):
+    if kind == "rmsnorm":
+        return {"scale": ones((d,), dtype)}
+    return {"scale": ones((d,), dtype), "bias": zeros((d,), dtype)}
+
+
+def apply_norm(kind: str, p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding (partial rotation supported)
+# ---------------------------------------------------------------------------
+
+def rope_cos_sin(positions, rot_dim: int, theta: float):
+    """positions [...,] -> cos/sin [..., rot_dim/2]."""
+    half = rot_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, positions, fraction: float, theta: float):
+    """x [B, S, H, hd]; rotate the first ``fraction*hd`` dims (rounded to even)."""
+    if fraction <= 0.0:
+        return x
+    hd = x.shape[-1]
+    rot = int(hd * fraction) // 2 * 2
+    if rot == 0:
+        return x
+    cos, sin = rope_cos_sin(positions, rot, theta)          # [B, S, rot/2]
+    cos = cos[:, :, None, :].astype(jnp.float32)
+    sin = sin[:, :, None, :].astype(jnp.float32)
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = jnp.split(xr.astype(jnp.float32), 2, axis=-1)
+    rotated = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([rotated.astype(x.dtype), xp], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# attention masks
+# ---------------------------------------------------------------------------
+
+def _mask_bias(q_pos, kv_pos, *, causal: bool, window: int, kv_valid_len=None):
+    """Return additive bias [..., Sq, Skv] with NEG_INF at masked positions.
+
+    q_pos [B?, Sq], kv_pos [Skv] (absolute positions).
+    """
+    qp = q_pos[..., :, None]
+    kp = kv_pos[None, :]
+    ok = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
+    if causal:
+        ok &= kp <= qp
+    if window and window > 0:
+        ok &= kp > qp - window
+    if kv_valid_len is not None:
+        ok &= kp < kv_valid_len
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# plain attention (materializes scores) — the paper-era baseline, and the
+# decode path (scores are [.., 1, Skv], cheap; sharded-Skv softmax lowers to
+# the sequence-parallel all-reduce automatically).
+# ---------------------------------------------------------------------------
+
+def plain_attention(q, k, v, q_positions, kv_positions, *, causal: bool,
+                    window: int = 0, kv_valid_len=None):
+    """q [B,Sq,H,hd]; k,v [B,Skv,Kv,hd]; GQA via head grouping. Returns [B,Sq,H,hd]."""
+    B, Sq, H, hd = q.shape
+    Kv = k.shape[2]
+    G = H // Kv
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, Sq, Kv, G, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    bias = _mask_bias(q_positions, kv_positions, causal=causal, window=window,
+                      kv_valid_len=kv_valid_len)                 # [B?,Sq,Skv]
+    scores = scores + bias[:, None, None, :, :]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention (chunked online softmax) with recompute backward.
+# Memory-feasible form for 32k prefill / 4k train of the big dense archs.
+# The Pallas kernel in repro.kernels.flash_attention mirrors this math.
+# ---------------------------------------------------------------------------
+
+def _flash_fwd(q, k, v, q_positions, kv_positions, kv_valid_len, *, causal,
+               window, chunk):
+    B, Sq, H, hd = q.shape
+    Kv = k.shape[2]
+    G = H // Kv
+    Skv = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    nchunk = -(-Skv // chunk)
+    # pad kv to a multiple of chunk; padded slots masked off via kv_valid
+    pad = nchunk * chunk - Skv
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kvpos = jnp.pad(kv_positions, (0, pad), constant_values=2**30)
+    valid = Skv if kv_valid_len is None else kv_valid_len
+
+    qg = q.reshape(B, Sq, Kv, G, hd).astype(jnp.float32)
+    kc = kp.reshape(B, nchunk, chunk, Kv, hd)
+    vc = vp.reshape(B, nchunk, chunk, Kv, hd)
+    pc = kvpos.reshape(nchunk, chunk)
+
+    def body(carry, xs):
+        m, l, o = carry
+        kch, vch, pch = xs
+        s = jnp.einsum("bqkgd,bckd->bkgqc", qg, kch.astype(jnp.float32)) * scale
+        bias = _mask_bias(q_positions, pch, causal=causal, window=window,
+                          kv_valid_len=valid)                    # [B,Sq,chunk]
+        s = s + bias[:, None, None, :, :]
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        m_new = jnp.maximum(m_new, NEG_INF)                      # keep finite
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        o_new = o * alpha[..., None] + jnp.einsum(
+            "bkgqc,bckd->bkgqd", p, vch.astype(jnp.float32))
+        return (m_new, l_new, o_new), None
+
+    m0 = jnp.full((B, Kv, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Kv, G, Sq), jnp.float32)
+    o0 = jnp.zeros((B, Kv, G, Sq, hd), jnp.float32)
+    (m, l, o), _ = jax.lax.scan(
+        body, (m0, l0, o0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), pc))
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    out = (o / l_safe[..., None])
+    lse = m + jnp.log(l_safe)
+    out = jnp.moveaxis(out, -2, 1).reshape(B, Sq, H, hd).astype(q.dtype)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def flash_attention(q, k, v, q_positions, kv_positions, causal=True, window=0,
+                    chunk=512):
+    out, _ = _flash_fwd(q, k, v, q_positions, kv_positions, None,
+                        causal=causal, window=window, chunk=chunk)
+    return out
+
+
+def _fa_fwd(q, k, v, q_positions, kv_positions, causal, window, chunk):
+    out, lse = _flash_fwd(q, k, v, q_positions, kv_positions, None,
+                          causal=causal, window=window, chunk=chunk)
+    return out, (q, k, v, q_positions, kv_positions, out, lse)
+
+
+def _fa_bwd(causal, window, chunk, res, dout):
+    q, k, v, q_positions, kv_positions, out, lse = res
+    B, Sq, H, hd = q.shape
+    Kv = k.shape[2]
+    G = H // Kv
+    Skv = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    nchunk = -(-Skv // chunk)
+    pad = nchunk * chunk - Skv
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kvpos = jnp.pad(kv_positions, (0, pad), constant_values=2**30)
+
+    qg = q.reshape(B, Sq, Kv, G, hd).astype(jnp.float32)
+    dog = dout.reshape(B, Sq, Kv, G, hd).astype(jnp.float32)
+    og = out.reshape(B, Sq, Kv, G, hd).astype(jnp.float32)
+    dog_bk = jnp.moveaxis(dog, 1, 3)                              # [B,Kv,G,Sq,hd]
+    # D_i = rowsum(dout * out)
+    Drow = jnp.sum(dog * og, axis=-1)                             # [B,Sq,Kv,G]
+    Drow = jnp.moveaxis(Drow, 1, 3)                               # [B,Kv,G,Sq]
+
+    kc = jnp.moveaxis(kp.reshape(B, nchunk, chunk, Kv, hd), 1, 0)
+    vc = jnp.moveaxis(vp.reshape(B, nchunk, chunk, Kv, hd), 1, 0)
+    pc = kvpos.reshape(nchunk, chunk)
+
+    def body(dq, xs):
+        kch, vch, pch = xs
+        s = jnp.einsum("bqkgd,bckd->bkgqc", qg, kch.astype(jnp.float32)) * scale
+        bias = _mask_bias(q_positions, pch, causal=causal, window=window,
+                          kv_valid_len=Skv)
+        s = s + bias[:, None, None, :, :]
+        p = jnp.exp(s - lse[..., None])                           # [B,Kv,G,Sq,c]
+        dv_c = jnp.einsum("bkgqc,bkgqd->bckd", p, dog_bk)
+        dp = jnp.einsum("bkgqd,bckd->bkgqc", dog_bk, vch.astype(jnp.float32))
+        ds = p * (dp - Drow[..., None]) * scale
+        dq = dq + jnp.einsum("bkgqc,bckd->bqkgd", ds, kch.astype(jnp.float32))
+        dk_c = jnp.einsum("bkgqc,bqkgd->bckd", ds, qg)
+        return dq, (dk_c, dv_c)
+
+    dq0 = jnp.zeros((B, Sq, Kv, G, hd), jnp.float32)
+    dq, (dk_c, dv_c) = jax.lax.scan(body, dq0, (kc, vc, pc))
+    dk = jnp.moveaxis(dk_c, 0, 1).reshape(B, nchunk * chunk, Kv, hd)[:, :Skv]
+    dv = jnp.moveaxis(dv_c, 0, 1).reshape(B, nchunk * chunk, Kv, hd)[:, :Skv]
+    dq = dq.reshape(B, Sq, H, hd)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            jnp.zeros_like(q_positions), jnp.zeros_like(kv_positions))
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+# ---------------------------------------------------------------------------
+# attention module (projections + rope + cache plumbing)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg, dtype, *, cross: bool = False):
+    D, H, Kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (D, H, hd), dtype),
+        "wk": dense_init(ks[1], (D, Kv, hd), dtype),
+        "wv": dense_init(ks[2], (D, Kv, hd), dtype),
+        "wo": dense_init(ks[3], (H, hd, D), dtype,
+                         scale=0.02 / math.sqrt(2 * max(cfg.n_layers, 1))),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = zeros((H, hd), dtype)
+        p["bk"] = zeros((Kv, hd), dtype)
+        p["bv"] = zeros((Kv, hd), dtype)
+    return p
+
+
+def attention_qkv(p, x, xkv=None):
+    """Project. x [B,S,D] -> q [B,S,H,hd], k/v [B,Skv,Kv,hd]."""
+    xkv = x if xkv is None else xkv
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", xkv, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", xkv, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return q, k, v
+
+
+def attention_out(p, ctx):
+    return jnp.einsum("bshk,hkd->bsd", ctx, p["wo"])
+
+
+def self_attention(p, x, cfg, rt, *, positions, causal=True, window=0,
+                   cache=None, decode=False):
+    """Full self-attention with optional KV cache.
+
+    cache: dict(k [B,Smax,Kv,hd], v likewise, pos scalar int32) or None.
+    decode: x is [B,1,D] at absolute position cache['pos'].
+    Returns (out [B,S,D], new_cache).
+    """
+    q, k, v = attention_qkv(p, x)
+    q = apply_rope(q, positions, cfg.rope_fraction, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_fraction, cfg.rope_theta)
+    new_cache = None
+    if cache is not None:
+        pos = cache["pos"]
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, pos, 0, 0))
+        new_cache = {"k": ck, "v": cv, "pos": pos + x.shape[1]}
+        if x.shape[1] == 1:
+            # decode: plain attention over the (possibly seq-sharded) cache;
+            # the softmax over the sharded Skv dim lowers to the sequence-
+            # parallel flash-decode all-reduces.
+            kv_positions = jnp.arange(cache["k"].shape[1], dtype=jnp.int32)
+            valid = pos + x.shape[1]
+            out = plain_attention(q, ck, cv, positions, kv_positions,
+                                  causal=causal, window=window,
+                                  kv_valid_len=valid)
+        else:
+            # prefill (assumed to start at pos=0): flash over the fresh kv —
+            # never materialize [Sq, Smax] scores against the padded cache.
+            kv_positions = positions[0] if positions.ndim > 1 else positions
+            out = flash_attention(q, k, v, positions, kv_positions, causal,
+                                  window, min(rt.kv_chunk, k.shape[1]))
+    else:
+        kv_positions = positions[0] if positions.ndim > 1 else positions
+        if rt.attn_impl == "flash" and not decode:
+            out = flash_attention(q, k, v, positions, kv_positions, causal,
+                                  window, min(rt.kv_chunk, k.shape[1]))
+        else:
+            out = plain_attention(q, k, v, positions, kv_positions,
+                                  causal=causal, window=window)
+    return attention_out(p, out), new_cache
+
+
+def cross_attention(p, x, cfg, rt, *, memory=None, mem_kv=None):
+    """Decoder->encoder attention. memory [B,Se,D] or precomputed (k,v)."""
+    if mem_kv is None:
+        _, k, v = attention_qkv(p, x, xkv=memory)
+    else:
+        k, v = mem_kv
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    Sq = x.shape[1]
+    Se = k.shape[1]
+    qpos = jnp.zeros((x.shape[0], Sq), jnp.int32)
+    kpos = jnp.arange(Se, dtype=jnp.int32)
+    out = plain_attention(q, k, v, qpos, kpos, causal=False)
+    return attention_out(p, out)
+
+
+# ---------------------------------------------------------------------------
+# MLP variants
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg, dtype, d_ff: int = 0):
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    out_scale = 0.02 / math.sqrt(2 * max(cfg.n_layers, 1))
+    if cfg.mlp == "swiglu":
+        return {"wi": dense_init(ks[0], (D, F), dtype),
+                "wg": dense_init(ks[1], (D, F), dtype),
+                "wo": dense_init(ks[2], (F, D), dtype, scale=out_scale)}
+    return {"wi": dense_init(ks[0], (D, F), dtype),
+            "wo": dense_init(ks[2], (F, D), dtype, scale=out_scale)}
+
+
+def apply_mlp(p, x, kind: str):
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
+    elif kind == "squared_relu":
+        h = jnp.square(jax.nn.relu(x @ p["wi"]))
+    else:  # gelu
+        h = jax.nn.gelu(x @ p["wi"], approximate=True)
+    return h @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# sinusoidal positions (whisper-style, computed on the fly)
+# ---------------------------------------------------------------------------
+
+def sinusoidal_positions(positions, d_model: int):
+    half = d_model // 2
+    freqs = jnp.exp(-math.log(10_000.0)
+                    * jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

@@ -1,0 +1,247 @@
+"""Top-level model API: init / loss / prefill / decode for every assigned family.
+
+Batch conventions (all integer tokens int32):
+- dense/moe/ssm/hybrid: {"tokens": [B, S+1]} — inputs tokens[:, :-1], labels [:, 1:].
+- vlm:    {"patches": [B, P, D] (stubbed ViT output), "tokens": [B, S-P+1]}.
+- encdec: {"frames": [B, Se, D] (stubbed conv/mel output), "tokens": [B, S+1]}.
+
+Decode ("serve_step"): one token against a KV/SSM cache of ``max_seq``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks as B
+from repro.models import layers as L
+from repro.models import lstm as LSTM
+from repro.models.runtime import Runtime, DEFAULT
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg, key, dtype=None) -> Params:
+    if cfg.family == "rnn":
+        return LSTM.init_lstm_model(key, cfg, cfg.vocab)
+    dt = jnp.dtype(dtype) if dtype is not None else _dtype(cfg)
+    ks = jax.random.split(key, 6)
+    V = cfg.padded_vocab
+    p: Params = {
+        "embed": L.dense_init(ks[0], (V, cfg.d_model), dt, scale=0.02),
+        "final_norm": L.init_norm(cfg.norm, cfg.d_model, dt),
+    }
+    if cfg.family == "encdec":
+        enc_cfg = cfg.replace(n_layers=cfg.n_encoder_layers, family="dense",
+                              rope_fraction=0.0)
+        p["encoder"] = B.init_stacked_units(ks[1], enc_cfg, dt)
+        p["enc_norm"] = L.init_norm(cfg.norm, cfg.d_model, dt)
+        p["decoder"] = B.init_stacked_units(ks[2], cfg, dt, cross=True)
+    else:
+        p["blocks"] = B.init_stacked_units(ks[1], cfg, dt)
+    if not cfg.tie_embeddings:
+        p["unembed"] = L.dense_init(ks[3], (cfg.d_model, V), dt, scale=0.02)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _logits(cfg, p, x):
+    w = p["embed"].T if cfg.tie_embeddings else p["unembed"]
+    logits = (x.astype(jnp.float32) @ w.astype(jnp.float32))
+    if cfg.padded_vocab != cfg.vocab:
+        # mask the padding tail so the softmax matches the published vocab
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+        logits = jnp.where(pad_mask, -1e30, logits)
+    return logits
+
+
+def _embed(cfg, p, tokens):
+    return jnp.take(p["embed"], tokens, axis=0)
+
+
+def _encode(cfg, rt, p, frames):
+    """Whisper encoder over stubbed frame embeddings [B, Se, D]."""
+    Se = frames.shape[1]
+    pos = jnp.arange(Se, dtype=jnp.int32)
+    x = frames + L.sinusoidal_positions(pos, cfg.d_model)[None].astype(frames.dtype)
+    enc_cfg = cfg.replace(n_layers=cfg.n_encoder_layers, family="dense",
+                          rope_fraction=0.0)
+    positions = jnp.broadcast_to(pos[None], frames.shape[:2])
+    x, _, _ = B.scan_units(p["encoder"], x, enc_cfg, rt, positions=positions,
+                           causal=False)
+    return L.apply_norm(cfg.norm, p["enc_norm"], x)
+
+
+def forward(params, cfg, rt, batch, *, start_pos: int = 0
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward. Returns (logits [B, St, V], aux)."""
+    if cfg.family == "encdec":
+        memory = _encode(cfg, rt, params, batch["frames"])
+        tokens = batch["tokens"]
+        x = _embed(cfg, params, tokens)
+        pos = jnp.arange(tokens.shape[1], dtype=jnp.int32) + start_pos
+        x = x + L.sinusoidal_positions(pos, cfg.d_model)[None].astype(x.dtype)
+        positions = jnp.broadcast_to(pos[None], tokens.shape)
+        x, _, aux = B.scan_units(params["decoder"], x, cfg, rt,
+                                 positions=positions, memory=memory, cross=True)
+    elif cfg.family == "vlm":
+        tokens = batch["tokens"]
+        xt = _embed(cfg, params, tokens)
+        x = jnp.concatenate([batch["patches"].astype(xt.dtype), xt], axis=1)
+        pos = jnp.arange(x.shape[1], dtype=jnp.int32) + start_pos
+        positions = jnp.broadcast_to(pos[None], x.shape[:2])
+        x, _, aux = B.scan_units(params["blocks"], x, cfg, rt,
+                                 positions=positions)
+        x = x[:, batch["patches"].shape[1]:]
+    else:
+        tokens = batch["tokens"]
+        x = _embed(cfg, params, tokens)
+        pos = jnp.arange(tokens.shape[1], dtype=jnp.int32) + start_pos
+        positions = jnp.broadcast_to(pos[None], tokens.shape)
+        x, _, aux = B.scan_units(params["blocks"], x, cfg, rt,
+                                 positions=positions)
+    x = L.apply_norm(cfg.norm, params["final_norm"], x)
+    return _logits(cfg, params, x), aux
+
+
+def loss_fn(params, cfg, rt, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Next-token CE (+ router aux). Returns (loss, metrics)."""
+    if cfg.family == "rnn":
+        ce = LSTM.lstm_loss(params, batch, use_pallas=rt.use_pallas,
+                            interpret=rt.pallas_interpret)
+        return ce, {"ce": ce}
+    tokens = batch["tokens"]
+    inp = dict(batch)
+    inp["tokens"] = tokens[:, :-1]
+    labels = tokens[:, 1:]
+    logits, aux = forward(params, cfg, rt, inp)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(nll)
+    loss = ce + cfg.moe.router_aux_weight * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serve: prefill + single-token decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=None):
+    dt = jnp.dtype(dtype) if dtype is not None else _dtype(cfg)
+    cross = cfg.encoder_seq if cfg.family == "encdec" else 0
+    return B.init_cache(cfg, batch, max_seq, dt, cross_seq=cross)
+
+
+def prefill(params, cfg, rt, batch, cache) -> Tuple[jnp.ndarray, Any]:
+    """Run the prompt through the model, filling the cache from position 0.
+
+    Returns (last-token logits [B, V], cache)."""
+    if cfg.family == "encdec":
+        memory = _encode(cfg, rt, params, batch["frames"])
+        tokens = batch["tokens"]
+        x = _embed(cfg, params, tokens)
+        pos = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+        x = x + L.sinusoidal_positions(pos, cfg.d_model)[None].astype(x.dtype)
+        positions = jnp.broadcast_to(pos[None], tokens.shape)
+        x, cache, _ = B.scan_units(params["decoder"], x, cfg, rt,
+                                   positions=positions, pos=jnp.int32(0),
+                                   cache=cache, memory=memory, cross=True)
+    elif cfg.family == "vlm":
+        xt = _embed(cfg, params, batch["tokens"])
+        x = jnp.concatenate([batch["patches"].astype(xt.dtype), xt], axis=1)
+        pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+        positions = jnp.broadcast_to(pos[None], x.shape[:2])
+        x, cache, _ = B.scan_units(params["blocks"], x, cfg, rt,
+                                   positions=positions, pos=jnp.int32(0),
+                                   cache=cache)
+    else:
+        tokens = batch["tokens"]
+        x = _embed(cfg, params, tokens)
+        pos = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+        positions = jnp.broadcast_to(pos[None], tokens.shape)
+        x, cache, _ = B.scan_units(params["blocks"], x, cfg, rt,
+                                   positions=positions, pos=jnp.int32(0),
+                                   cache=cache)
+    x = L.apply_norm(cfg.norm, params["final_norm"], x[:, -1:])
+    return _logits(cfg, params, x)[:, 0], cache
+
+
+def decode_step(params, cfg, rt, token, cache, pos
+                ) -> Tuple[jnp.ndarray, Any]:
+    """One decode step. token [B] int32; pos scalar int32 (absolute position).
+
+    Uses the sliding-window mask for long-context dense archs when configured.
+    Returns (logits [B, V], new_cache)."""
+    x = _embed(cfg, params, token[:, None])
+    positions = jnp.full((token.shape[0], 1), pos, jnp.int32)
+    if cfg.family == "encdec":
+        x = x + L.sinusoidal_positions(positions, cfg.d_model).astype(x.dtype)
+        stack, cross = params["decoder"], True
+    else:
+        stack, cross = params["blocks"], False
+    window = cfg.sliding_window if (rt.decode_window_only and cfg.sliding_window)\
+        else 0
+    x, cache, _ = B.scan_units(stack, x, cfg, rt, positions=positions, pos=pos,
+                               cache=cache, cross=cross, window=window)
+    x = L.apply_norm(cfg.norm, params["final_norm"], x)
+    return _logits(cfg, params, x)[:, 0], cache
+
+
+# ---------------------------------------------------------------------------
+# batch specs (shared by smoke tests, dry-run, data pipeline)
+# ---------------------------------------------------------------------------
+
+def train_batch_spec(cfg, shape) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStructs for one global training batch of the given InputShape."""
+    Bsz, S = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        return {"frames": jax.ShapeDtypeStruct((Bsz, cfg.encoder_seq, cfg.d_model),
+                                               _dtype(cfg)),
+                "tokens": jax.ShapeDtypeStruct((Bsz, S + 1), jnp.int32)}
+    if cfg.family == "vlm":
+        St = S - cfg.vision_prefix
+        return {"patches": jax.ShapeDtypeStruct((Bsz, cfg.vision_prefix,
+                                                 cfg.d_model), _dtype(cfg)),
+                "tokens": jax.ShapeDtypeStruct((Bsz, St + 1), jnp.int32)}
+    return {"tokens": jax.ShapeDtypeStruct((Bsz, S + 1), jnp.int32)}
+
+
+def decode_spec(cfg, shape):
+    """(token, pos) specs for serve_step."""
+    return (jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# parameter counting (used by roofline MODEL_FLOPS and the simulator cost model)
+# ---------------------------------------------------------------------------
+
+def param_count(cfg, active_only: bool = False) -> int:
+    if cfg.family == "rnn":
+        cfg = cfg if cfg.vocab else cfg.replace(vocab=96)
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        if active_only and any(getattr(k, "key", None) == "experts"
+                               for k in path):
+            m = cfg.moe
+            n = n * (m.top_k / max(m.num_experts, 1))
+        total += n
+    return int(total)

@@ -1,0 +1,169 @@
+"""Mamba-1 selective-state-space block (falcon-mamba / jamba mixer).
+
+TPU adaptation: the recurrence h_t = a_t * h_{t-1} + b_t is evaluated as a
+*chunked parallel scan* — ``lax.scan`` over sequence chunks carrying the state,
+``lax.associative_scan`` (Blelloch, VPU-friendly) within each chunk. This bounds
+the materialized [B, chunk, d_inner, d_state] tensor to one chunk (the full
+[B, S, d_inner, d_state] expansion at train_4k on falcon-mamba-7b would be
+16 GB/device), while keeping the MXU-sized projections dense.
+
+Decode carries O(1) state: conv window [B, d_conv-1, d_inner] + h [B, d_inner, N].
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, zeros
+
+
+def init_ssm(key, cfg, dtype):
+    D = cfg.d_model
+    Di = cfg.d_inner()
+    N = cfg.ssm.d_state
+    R = cfg.dt_rank()
+    K = cfg.ssm.d_conv
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization of A
+    A = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None, :], (Di, 1))
+    # dt bias st. softplus(dt_bias) in [1e-3, 1e-1] (mamba default)
+    u = jax.random.uniform(ks[0], (Di,), jnp.float32)
+    dt = jnp.exp(u * (math.log(1e-1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    return {
+        "in_proj": dense_init(ks[1], (D, 2 * Di), dtype),
+        "conv_w": dense_init(ks[2], (K, Di), dtype, scale=0.5 / math.sqrt(K)),
+        "conv_b": zeros((Di,), dtype),
+        "x_proj": dense_init(ks[3], (Di, R + 2 * N), dtype),
+        "dt_proj": dense_init(ks[4], (R, Di), dtype, scale=R ** -0.5),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "A_log": jnp.log(A),
+        "Dskip": jnp.ones((Di,), jnp.float32),
+        "out_proj": dense_init(ks[5], (Di, D), dtype,
+                               scale=0.02 / math.sqrt(2 * max(cfg.n_layers, 1))),
+    }
+
+
+def _causal_conv(x, w, b, conv_state=None):
+    """Depthwise causal conv along seq. x [B,S,Di], w [K,Di].
+
+    conv_state [B, K-1, Di] (decode) or None (train: left-pad zeros).
+    Returns (y [B,S,Di], new_conv_state [B,K-1,Di]).
+    """
+    K = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                    # [B, S+K-1, Di]
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K)) + b
+    new_state = xp[:, -(K - 1):] if K > 1 else jnp.zeros_like(pad)
+    return y, new_state
+
+
+def _ssm_params(p, x_conv, cfg):
+    """x_conv [..., Di] -> (dt [...,Di], B [...,N], C [...,N], A [Di,N])."""
+    N = cfg.ssm.d_state
+    R = cfg.dt_rank()
+    proj = x_conv @ p["x_proj"]
+    dt_in, Bm, Cm = jnp.split(proj.astype(jnp.float32), [R, R + N], axis=-1)
+    dt = jax.nn.softplus(dt_in @ p["dt_proj"].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])                                   # [Di, N]
+    return dt, Bm, Cm, A
+
+
+def _scan_chunk(h0, a, b):
+    """h_t = a_t h_{t-1} + b_t within one chunk via associative scan.
+
+    a, b: [B, L, Di, N]; h0 [B, Di, N]. Returns (h_all [B,L,Di,N], h_last)."""
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+    a_pref, b_pref = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h_all = a_pref * h0[:, None] + b_pref
+    return h_all, h_all[:, -1]
+
+
+def apply_ssm(p, x, cfg, rt, state: Optional[dict] = None
+              ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """Full-sequence (train/prefill) Mamba mixer. x [B,S,D].
+
+    state: None for train; for prefill pass init state to receive final state.
+    Returns (y [B,S,D], new_state or None).
+    """
+    B, S, D = x.shape
+    Di = cfg.d_inner()
+    N = cfg.ssm.d_state
+    xz = x @ p["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    xc, new_conv = _causal_conv(xi, p["conv_w"], p["conv_b"], conv_state)
+    xc = jax.nn.silu(xc)
+    dt, Bm, Cm, A = _ssm_params(p, xc, cfg)                   # dt [B,S,Di]
+
+    chunk = max(min(rt.sschunk(cfg), S), 1)
+    nchunk = -(-S // chunk)
+    pad = nchunk * chunk - S
+
+    def pad_seq(t):
+        return jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+
+    xcf = pad_seq(xc.astype(jnp.float32)).reshape(B, nchunk, chunk, Di)
+    dtc = pad_seq(dt).reshape(B, nchunk, chunk, Di)
+    Bc = pad_seq(Bm).reshape(B, nchunk, chunk, N)
+    Cc = pad_seq(Cm).reshape(B, nchunk, chunk, N)
+
+    h0 = (state["h"].astype(jnp.float32) if state is not None
+          else jnp.zeros((B, Di, N), jnp.float32))
+
+    def body(h, xs):
+        xch, dch, bch, cch = xs
+        a = jnp.exp(dch[..., None] * A)                        # [B,L,Di,N]
+        bbar = (dch * xch)[..., None] * bch[:, :, None, :]     # [B,L,Di,N]
+        h_all, h_last = _scan_chunk(h, a, bbar)
+        y = jnp.einsum("bldn,bln->bld", h_all, cch)
+        return h_last, y
+
+    h_final, ys = jax.lax.scan(
+        body, h0,
+        (jnp.moveaxis(xcf, 1, 0), jnp.moveaxis(dtc, 1, 0),
+         jnp.moveaxis(Bc, 1, 0), jnp.moveaxis(Cc, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, nchunk * chunk, Di)[:, :S]
+    y = y + xc.astype(jnp.float32) * p["Dskip"]
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    new_state = None
+    if state is not None:
+        new_state = {"conv": new_conv.astype(state["conv"].dtype),
+                     "h": h_final.astype(state["h"].dtype)}
+    return out, new_state
+
+
+def apply_ssm_step(p, x, cfg, state: dict) -> Tuple[jnp.ndarray, dict]:
+    """Single decode step. x [B,1,D]; state {conv [B,K-1,Di], h [B,Di,N]}."""
+    B = x.shape[0]
+    xz = x[:, 0] @ p["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)                          # [B, Di]
+    K = cfg.ssm.d_conv
+    window = jnp.concatenate([state["conv"].astype(xi.dtype), xi[:, None]], axis=1)
+    xc = jnp.einsum("bkd,kd->bd", window, p["conv_w"]) + p["conv_b"]
+    xc = jax.nn.silu(xc)
+    dt, Bm, Cm, A = _ssm_params(p, xc, cfg)                    # dt [B,Di]
+    a = jnp.exp(dt[..., None] * A)                             # [B,Di,N]
+    bbar = (dt * xc.astype(jnp.float32))[..., None] * Bm[:, None, :]
+    h = a * state["h"].astype(jnp.float32) + bbar
+    y = jnp.einsum("bdn,bn->bd", h, Cm) + xc.astype(jnp.float32) * p["Dskip"]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = (y @ p["out_proj"])[:, None]
+    new_state = {"conv": window[:, 1:].astype(state["conv"].dtype),
+                 "h": h.astype(state["h"].dtype)}
+    return out, new_state
+
+
+def init_ssm_state(cfg, batch: int, dtype) -> dict:
+    return {"conv": jnp.zeros((batch, cfg.ssm.d_conv - 1, cfg.d_inner()), dtype),
+            "h": jnp.zeros((batch, cfg.d_inner(), cfg.ssm.d_state), jnp.float32)}

@@ -1,0 +1,4 @@
+from repro.optim.optimizers import Optimizer, rmsprop, sgd, adamw, make  # noqa: F401
+from repro.optim.compression import (  # noqa: F401
+    Codec, make_codec, ef_init, ef_compress, dense_bytes,
+)

@@ -1,0 +1,140 @@
+"""Gradient compression for the paper's bandwidth bottleneck (§III / §VI).
+
+The paper identifies gradient-synchronization bandwidth as the central threat to
+validity and cites the standard fixes; we implement both as first-class,
+invertible codecs with error feedback:
+
+- ``topk``    — magnitude sparsification (Aji & Heafield 2017): keep the k largest
+  |g| entries per tensor; residual is fed back next step.
+- ``ternary`` — TernGrad (Wen et al. 2017): g -> s * sign(g) * b, b ~ Bernoulli
+  (|g|/s) with s = max|g| (deterministic threshold variant also available for
+  reproducibility).
+
+Codecs operate leaf-wise on gradient pytrees and report exact wire byte counts,
+which both the L1 simulator (network model) and ``benchmarks/compression.py``
+consume. ``EFState`` carries the error-feedback residual.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# codecs (encode returns (payload pytree, nbytes); decode returns dense grads)
+# ---------------------------------------------------------------------------
+
+def _leaf_bytes(x) -> int:
+    return int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+
+
+def _is_payload(x) -> bool:
+    """Payload-dict leaf marker (grads trees are dicts too, so a bare
+    isinstance check would stop tree traversal at the root)."""
+    return isinstance(x, dict) and "shape" in x and ("t" in x or "idx" in x)
+
+
+def topk_encode(g, fraction: float):
+    """Keep ceil(fraction * n) largest-|g| entries. Returns (payload, nbytes)."""
+    def enc(leaf):
+        flat = leaf.reshape(-1)
+        n = flat.shape[0]
+        k = max(int(np.ceil(fraction * n)), 1)
+        vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+        kept = flat[idx]
+        return {"idx": idx.astype(jnp.int32), "val": kept, "shape": leaf.shape}
+    payload = jax.tree.map(enc, g, is_leaf=lambda x: hasattr(x, "shape"))
+    nbytes = sum(_leaf_bytes(p["idx"]) + _leaf_bytes(p["val"])
+                 for p in jax.tree.leaves(payload,
+                                          is_leaf=_is_payload))
+    return payload, nbytes
+
+
+def topk_decode(payload):
+    def dec(p):
+        n = int(np.prod(p["shape"]))
+        flat = jnp.zeros((n,), p["val"].dtype)
+        flat = flat.at[p["idx"]].set(p["val"])
+        return flat.reshape(p["shape"])
+    return jax.tree.map(dec, payload, is_leaf=_is_payload)
+
+
+def ternary_encode(g, key=None):
+    """TernGrad: per-leaf scale s=max|g|, stochastic ternarization to {-1,0,1}.
+
+    Deterministic when key is None: b = 1 iff |g| >= s/2 (threshold variant).
+    Wire format: 2 bits/element (packed 4/elem byte here for simplicity of
+    accounting: ceil(n/4) bytes) + one fp32 scale."""
+    leaves, treedef = jax.tree.flatten(g)
+    keys = (jax.random.split(key, len(leaves)) if key is not None
+            else [None] * len(leaves))
+
+    def enc(leaf, k):
+        s = jnp.max(jnp.abs(leaf)).astype(jnp.float32)
+        s = jnp.maximum(s, 1e-12)
+        prob = jnp.abs(leaf.astype(jnp.float32)) / s
+        if k is None:
+            b = (prob >= 0.5).astype(jnp.int8)
+        else:
+            b = (jax.random.uniform(k, leaf.shape) < prob).astype(jnp.int8)
+        t = jnp.sign(leaf).astype(jnp.int8) * b
+        return {"t": t, "s": s, "shape": leaf.shape}
+
+    payload = treedef.unflatten([enc(l, k) for l, k in zip(leaves, keys)])
+    nbytes = sum(-(-int(np.prod(p["shape"])) // 4) + 4
+                 for p in jax.tree.leaves(payload,
+                                          is_leaf=_is_payload))
+    return payload, nbytes
+
+
+def ternary_decode(payload):
+    return jax.tree.map(lambda p: p["t"].astype(jnp.float32) * p["s"],
+                        payload, is_leaf=_is_payload)
+
+
+def dense_bytes(g) -> int:
+    return sum(_leaf_bytes(x) for x in jax.tree.leaves(g))
+
+
+# ---------------------------------------------------------------------------
+# error feedback wrapper
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Codec:
+    name: str
+    encode: Callable  # (grads) -> (payload, nbytes)
+    decode: Callable  # (payload) -> grads
+
+
+def make_codec(name: str, **kw) -> Codec:
+    if name == "none":
+        return Codec("none", lambda g: (g, dense_bytes(g)), lambda p: p)
+    if name == "topk":
+        frac = kw.get("fraction", 0.01)
+        return Codec(f"topk({frac})",
+                     lambda g: topk_encode(g, frac), topk_decode)
+    if name == "ternary":
+        return Codec("ternary", lambda g: ternary_encode(g), ternary_decode)
+    raise KeyError(name)
+
+
+def ef_init(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def ef_compress(codec: Codec, grads, residual):
+    """Error feedback: compress (g + residual); carry the quantization error.
+
+    Returns (decoded_grads, new_residual, nbytes)."""
+    corrected = jax.tree.map(
+        lambda g, r: g.astype(jnp.float32) + r, grads, residual)
+    payload, nbytes = codec.encode(corrected)
+    decoded = codec.decode(payload)
+    new_residual = jax.tree.map(lambda c, d: c - d.astype(jnp.float32),
+                                corrected, decoded)
+    return decoded, new_residual, nbytes

@@ -1,0 +1,117 @@
+"""Optimizers (optax-style pure functions, implemented from scratch).
+
+RMSprop follows TF/Keras semantics exactly — the paper trains with tfjs's
+``train.rmsprop(learningRate=0.1)`` defaults (rho=0.9, eps=1e-7, no momentum):
+
+    ms <- rho * ms + (1 - rho) * g^2
+    w  <- w - lr * g / (sqrt(ms) + eps)
+
+Note Keras adds eps *outside* the sqrt; we match that (it matters at lr=0.1).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+State = Any
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Params], State]
+    update: Callable[[Params, State, Params], Tuple[Params, State]]
+    name: str = "opt"
+
+    def apply(self, params, state, grads):
+        """Returns (new_params, new_state)."""
+        return self.update(params, state, grads)
+
+
+def _tmap(f, *trees, is_leaf=None):
+    return jax.tree.map(f, *trees, is_leaf=is_leaf)
+
+
+def rmsprop(lr: float, rho: float = 0.9, eps: float = 1e-7,
+            state_dtype=jnp.float32) -> Optimizer:
+    def init(params):
+        return {"ms": _tmap(lambda p: jnp.zeros(p.shape, state_dtype), params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(params, state, grads):
+        def upd(p, m, g):
+            g32 = g.astype(state_dtype)
+            m_new = rho * m + (1.0 - rho) * jnp.square(g32)
+            step = p.astype(state_dtype) - lr * g32 / (jnp.sqrt(m_new) + eps)
+            return step.astype(p.dtype), m_new
+        flat = _tmap(upd, params, state["ms"], grads)
+        new_p = _tmap(lambda pair: pair[0], flat,
+                      is_leaf=lambda x: isinstance(x, tuple))
+        new_m = _tmap(lambda pair: pair[1], flat,
+                      is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"ms": new_m, "step": state["step"] + 1}
+
+    return Optimizer(init, update, f"rmsprop(lr={lr})")
+
+
+def sgd(lr: float, momentum: float = 0.0, state_dtype=jnp.float32) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return {"step": jnp.zeros((), jnp.int32)}
+        return {"mu": _tmap(lambda p: jnp.zeros(p.shape, state_dtype), params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(params, state, grads):
+        if momentum == 0.0:
+            new_p = _tmap(lambda p, g: (p.astype(jnp.float32)
+                                        - lr * g.astype(jnp.float32)
+                                        ).astype(p.dtype), params, grads)
+            return new_p, {"step": state["step"] + 1}
+
+        def upd(p, mu, g):
+            mu_new = momentum * mu + g.astype(state_dtype)
+            return (p.astype(state_dtype) - lr * mu_new).astype(p.dtype), mu_new
+        flat = _tmap(upd, params, state["mu"], grads)
+        new_p = _tmap(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_mu = _tmap(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"mu": new_mu, "step": state["step"] + 1}
+
+    return Optimizer(init, update, f"sgd(lr={lr},m={momentum})")
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0, state_dtype=jnp.float32) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, state_dtype)
+        return {"m": _tmap(z, params), "v": _tmap(z, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(params, state, grads):
+        step = state["step"] + 1
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m, v, g):
+            g32 = g.astype(state_dtype)
+            m_new = b1 * m + (1 - b1) * g32
+            v_new = b2 * v + (1 - b2) * jnp.square(g32)
+            upd_ = (m_new / c1) / (jnp.sqrt(v_new / c2) + eps)
+            p32 = p.astype(state_dtype)
+            p_new = p32 - lr * (upd_ + weight_decay * p32)
+            return p_new.astype(p.dtype), m_new, v_new
+        flat = _tmap(upd, params, state["m"], state["v"], grads)
+        pick = lambda i: _tmap(lambda t: t[i], flat,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        return pick(0), {"m": pick(1), "v": pick(2), "step": step}
+
+    return Optimizer(init, update, f"adamw(lr={lr})")
+
+
+REGISTRY = {"rmsprop": rmsprop, "sgd": sgd, "adamw": adamw}
+
+
+def make(name: str, lr: float, **kw) -> Optimizer:
+    return REGISTRY[name](lr, **kw)

@@ -1,0 +1,9 @@
+import os
+
+# Tests run on the real single CPU device (the dry-run is the only place that
+# fakes 512 devices). Force deterministic, quiet JAX.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_default_matmul_precision", "highest")

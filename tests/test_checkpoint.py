@@ -1,0 +1,64 @@
+"""Checkpoint store + wire serialization (the durable DataServer)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.serialize import dumps, loads
+from repro.checkpoint.store import CheckpointStore
+
+
+def _tree():
+    return {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "nested": {"b": jnp.full((2, 2), 1.5, jnp.bfloat16),
+                       "i": jnp.arange(3, dtype=jnp.int32)},
+            "meta": "hello", "n": 7}
+
+
+def test_serialize_roundtrip_dtypes():
+    t = _tree()
+    t2 = loads(dumps(t))
+    assert t2["meta"] == "hello" and t2["n"] == 7
+    np.testing.assert_array_equal(np.asarray(t["w"]), t2["w"])
+    assert np.asarray(t2["nested"]["b"]).dtype == np.asarray(
+        t["nested"]["b"]).dtype
+    np.testing.assert_array_equal(
+        np.asarray(t["nested"]["b"], np.float32),
+        np.asarray(t2["nested"]["b"], np.float32))
+
+
+def test_serialize_compression_smaller_on_redundant_data():
+    big = {"w": jnp.zeros((1000, 100), jnp.float32)}
+    assert len(dumps(big)) < len(dumps(big, compress=False)) / 10
+
+
+def test_store_versions_and_retention(tmp_path):
+    st = CheckpointStore(str(tmp_path), keep=2)
+    for v in range(1, 5):
+        st.save(v, {"x": jnp.full((3,), float(v))}, meta={"step": v * 10})
+    assert st.versions() == [3, 4]
+    assert st.latest() == 4
+    tree, meta = st.load(4)
+    assert meta["step"] == 40
+    np.testing.assert_array_equal(tree["x"], np.full((3,), 4.0))
+
+
+def test_store_resume_cycle(tmp_path):
+    """save -> load -> keep training: the paper's availability story."""
+    import repro.configs as C
+    from repro.models import model as M
+    from repro.models.runtime import Runtime
+    from repro.optim import make as make_opt
+    cfg = C.get_smoke("stablelm-1.6b").replace(dtype="float32")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    opt = make_opt("sgd", 0.1)
+    state = opt.init(params)
+    st = CheckpointStore(str(tmp_path))
+    st.save(1, {"params": params, "opt": state})
+    tree, _ = st.load(1)
+    rt = Runtime(remat=False)
+    batch = {"tokens": jnp.zeros((2, 9), jnp.int32)}
+    l1, _ = M.loss_fn(params, cfg, rt, batch)
+    # restored params produce the identical loss
+    restored = jax.tree.map(jnp.asarray, tree["params"])
+    l2, _ = M.loss_fn(restored, cfg, rt, batch)
+    assert float(l1) == float(l2)

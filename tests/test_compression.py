@@ -1,0 +1,109 @@
+"""Gradient-compression contracts (paper §III/§VI) + hypothesis properties."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import compression as CP
+
+
+def _tree(key, sizes=(37, 256)):
+    ks = jax.random.split(key, len(sizes))
+    return {f"w{i}": jax.random.normal(k, (n,))
+            for i, (k, n) in enumerate(zip(ks, sizes))}
+
+
+def test_topk_keeps_exact_fraction():
+    g = _tree(jax.random.PRNGKey(0), (1000,))
+    payload, nbytes = CP.topk_encode(g, 0.05)
+    dec = CP.topk_decode(payload)
+    assert int((dec["w0"] != 0).sum()) == 50
+    # the kept entries are the largest |g|
+    kept = np.sort(np.abs(np.asarray(g["w0"])))[-50:]
+    got = np.sort(np.abs(np.asarray(dec["w0"][dec["w0"] != 0])))
+    np.testing.assert_allclose(got, kept)
+    assert nbytes == 50 * 8                 # idx int32 + val fp32
+
+
+def test_ternary_decodes_to_three_levels():
+    g = _tree(jax.random.PRNGKey(1))
+    payload, nbytes = CP.ternary_encode(g)
+    dec = CP.ternary_decode(payload)
+    for k in g:
+        vals = np.unique(np.asarray(dec[k]))
+        s = float(jnp.max(jnp.abs(g[k])))
+        assert all(np.isclose(abs(v), 0.0) or np.isclose(abs(v), s, rtol=1e-6)
+                   for v in vals)
+    dense = CP.dense_bytes(g)
+    assert nbytes < dense / 10              # ~16x smaller
+
+
+@given(st.integers(1, 2000), st.floats(0.001, 1.0))
+@settings(max_examples=50, deadline=None)
+def test_topk_roundtrip_properties(n, frac):
+    g = {"w": jax.random.normal(jax.random.PRNGKey(n), (n,))}
+    payload, _ = CP.topk_encode(g, frac)
+    dec = CP.topk_decode(payload)
+    assert dec["w"].shape == (n,)
+    k = max(int(np.ceil(frac * n)), 1)
+    assert int((dec["w"] != 0).sum()) <= k
+    # decoded values are a subset of the original values
+    orig = np.asarray(g["w"])
+    nz = np.asarray(dec["w"])[np.asarray(dec["w"]) != 0]
+    assert all(np.isclose(v, orig).any() for v in nz)
+
+
+@given(st.integers(1, 999))
+@settings(max_examples=30, deadline=None)
+def test_ternary_error_bounded(n):
+    g = {"w": jax.random.normal(jax.random.PRNGKey(n), (n,))}
+    payload, _ = CP.ternary_encode(g)
+    dec = CP.ternary_decode(payload)
+    s = float(jnp.max(jnp.abs(g["w"])))
+    # threshold variant: |g - dec| <= s/2 elementwise
+    assert float(jnp.max(jnp.abs(g["w"] - dec["w"]))) <= s / 2 + 1e-6
+
+
+def test_error_feedback_reduces_bias():
+    """With EF, the accumulated compressed signal tracks the true sum."""
+    T = 60
+    codec = CP.make_codec("topk", fraction=0.1)
+    key = jax.random.PRNGKey(0)
+    g_true = {"w": jax.random.normal(key, (200,))}
+    residual = CP.ef_init(g_true)
+    acc = jnp.zeros(200)
+    acc_noef = jnp.zeros(200)
+    for i in range(T):
+        dec, residual, _ = CP.ef_compress(codec, g_true, residual)
+        acc = acc + dec["w"]
+        acc_noef = acc_noef + CP.topk_decode(CP.topk_encode(g_true, 0.1)[0])["w"]
+    target = T * g_true["w"]
+    rel = float(jnp.linalg.norm(acc - target) / jnp.linalg.norm(target))
+    rel_noef = float(jnp.linalg.norm(acc_noef - target)
+                     / jnp.linalg.norm(target))
+    # EF residual is bounded (~(1/frac-1)|g|) so rel ~ 9/T -> small;
+    # without EF the same coordinates are dropped forever -> constant error
+    assert rel < 0.2, rel
+    assert rel < rel_noef / 3, (rel, rel_noef)
+
+
+def test_training_converges_with_ternary_ef():
+    """Paper-style training still learns under ternary compression + EF."""
+    from repro.configs.paper_lstm import TrainParams
+    from repro.core.coordinator import Coordinator
+    from repro.core.mapreduce import TrainingProblem
+    from repro.data.text import synthetic_corpus
+    tp = TrainParams(batch_size=8, examples_per_epoch=64, num_epochs=2,
+                     sample_len=16, mini_batch_size=4,
+                     mini_batches_to_accumulate=2, learning_rate=0.05)
+    prob = TrainingProblem.paper_problem(corpus=synthetic_corpus(4000), tp=tp)
+    res = Coordinator(prob, n_workers=2,
+                      codec=CP.make_codec("ternary")).run()
+    h = len(res.losses) // 2                       # per-version losses: noisy;
+    first = float(np.mean(res.losses[:h]))         # compare half-means
+    second = float(np.mean(res.losses[h:]))
+    assert second < first + 0.05, (first, second)  # it still learns
+    res_dense = Coordinator(prob, n_workers=2).run()
+    assert res.final_version == res_dense.final_version

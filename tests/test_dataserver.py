@@ -1,0 +1,41 @@
+"""DataServer version semantics: monotone, exactly-once publication."""
+import pytest
+
+from repro.core.dataserver import DataServer
+
+
+def test_versions_monotone_and_idempotent():
+    ds = DataServer()
+    assert ds.latest_version == -1
+    assert ds.publish_model(0, "m0")
+    assert not ds.publish_model(0, "m0-dup")    # duplicate discarded
+    assert ds.get_model(0) == "m0"
+    assert ds.get_model(1) is None              # "task waits" signal
+    assert ds.publish_model(1, "m1")
+    assert ds.latest_version == 1
+
+
+def test_version_gap_rejected():
+    ds = DataServer()
+    ds.publish_model(0, "m0")
+    with pytest.raises(AssertionError):
+        ds.publish_model(2, "m2")
+
+
+def test_gc_keeps_recent():
+    ds = DataServer()
+    for v in range(5):
+        ds.publish_model(v, f"m{v}")
+    ds.gc_models(keep_last=2)
+    assert ds.get_model(2) is None
+    assert ds.get_model(4) == "m4"
+    assert ds.latest_version == 4
+
+
+def test_kv_crud():
+    ds = DataServer()
+    ds.put("k", 123, nbytes=8)
+    assert ds.get("k", nbytes=8) == 123
+    assert ds.delete("k")
+    assert not ds.delete("k")
+    assert ds.bytes_written == 8 and ds.bytes_read == 8

@@ -1,0 +1,86 @@
+"""Paper Table 4's headline result as exact tests: the trained model is
+bit-identical for ANY number of volunteers, ANY churn pattern, and for the
+simulator's execution order — because the reduce rebuilds the same batch-128
+update the sequential algorithm applies.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.paper_lstm import TrainParams
+from repro.core.coordinator import Coordinator
+from repro.core.mapreduce import TrainingProblem, sequential_accumulated
+from repro.core.simulator import Simulator, VolunteerSpec
+from repro.data.text import synthetic_corpus
+
+TP = TrainParams(batch_size=16, examples_per_epoch=64, num_epochs=1,
+                 sample_len=20, mini_batch_size=4,
+                 mini_batches_to_accumulate=4)
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return TrainingProblem.paper_problem(corpus=synthetic_corpus(6000), tp=TP)
+
+
+@pytest.fixture(scope="module")
+def sequential(problem):
+    return sequential_accumulated(problem)
+
+
+def _bitmatch(a, b) -> bool:
+    return all(bool((np.asarray(x) == np.asarray(y)).all())
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+@pytest.mark.parametrize("k", [1, 2, 3, 5, 8])
+def test_worker_count_invariance(problem, sequential, k):
+    res = Coordinator(problem, n_workers=k).run()
+    assert res.final_version == problem.n_versions
+    assert _bitmatch(res.params, sequential[0])
+
+
+def test_churn_invariance(problem, sequential):
+    # volunteers leave mid-run (their leased tasks requeue) and others join —
+    # the paper's classroom scenario 3
+    churn = [(5, "leave", "w0"), (9, "leave", "w1"), (12, "join", "w9"),
+             (20, "join", "w10")]
+    res = Coordinator(problem, n_workers=4, churn=churn).run()
+    assert _bitmatch(res.params, sequential[0])
+    assert res.requeues >= 0
+
+
+def test_visibility_timeout_recovers_frozen_worker(problem, sequential):
+    # w0 leaves while holding tasks and never acks; the timeout requeues them
+    churn = [(3, "leave", "w0")]
+    res = Coordinator(problem, n_workers=2, churn=churn,
+                      visibility_timeout=10.0).run()
+    assert _bitmatch(res.params, sequential[0])
+
+
+def test_simulator_completes_protocol(problem):
+    # the simulator is timing-only (no real grads) but drives the identical
+    # queue/dataserver protocol: all versions must commit, exactly once
+    specs = [VolunteerSpec(f"v{i}", speed=1.0 + 0.3 * i) for i in range(3)]
+    sim = Simulator(problem, specs)
+    res = sim.run()
+    assert res.final_version == problem.n_versions
+    n_maps = problem.n_versions * TP.mini_batches_to_accumulate
+    assert sum(res.tasks_by_worker.values()) == n_maps + problem.n_versions
+
+
+def test_simulator_survives_churn(problem):
+    import math
+    specs = [VolunteerSpec("v0", leave_time=20.0),
+             VolunteerSpec("v1"),
+             VolunteerSpec("v2", join_time=10.0)]
+    res = Simulator(problem, specs, visibility_timeout=30.0).run()
+    assert res.final_version == problem.n_versions
+    assert math.isfinite(res.makespan)
+
+
+def test_losses_match_sequential(problem, sequential):
+    res = Coordinator(problem, n_workers=3).run()
+    np.testing.assert_allclose(res.losses, sequential[2], rtol=1e-6)

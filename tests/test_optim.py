@@ -1,0 +1,61 @@
+"""Optimizer unit tests: RMSprop must match the TF/Keras update rule the
+paper's tfjs training used (eps OUTSIDE the sqrt), SGD/AdamW sanity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import adamw, rmsprop, sgd
+
+
+def test_rmsprop_matches_keras_formula():
+    lr, rho, eps = 0.1, 0.9, 1e-7
+    opt = rmsprop(lr, rho, eps)
+    p = {"w": jnp.asarray([1.0, -2.0, 0.5])}
+    g = {"w": jnp.asarray([0.3, -0.1, 0.0])}
+    state = opt.init(p)
+    p1, s1 = opt.update(p, state, g)
+    ms = (1 - rho) * np.asarray(g["w"]) ** 2
+    expect = np.asarray(p["w"]) - lr * np.asarray(g["w"]) / (np.sqrt(ms) + eps)
+    np.testing.assert_allclose(np.asarray(p1["w"]), expect, rtol=1e-6)
+    # second step accumulates ms
+    p2, s2 = opt.update(p1, s1, g)
+    ms2 = rho * ms + (1 - rho) * np.asarray(g["w"]) ** 2
+    expect2 = np.asarray(p1["w"]) - lr * np.asarray(g["w"]) / (np.sqrt(ms2) + eps)
+    np.testing.assert_allclose(np.asarray(p2["w"]), expect2, rtol=1e-6)
+    assert int(s2["step"]) == 2
+
+
+def test_sgd_plain_and_momentum():
+    p = {"w": jnp.ones(3)}
+    g = {"w": jnp.full(3, 0.5)}
+    opt = sgd(0.2)
+    p1, _ = opt.update(p, opt.init(p), g)
+    np.testing.assert_allclose(np.asarray(p1["w"]), 0.9, rtol=1e-6)
+
+    optm = sgd(0.2, momentum=0.9)
+    s = optm.init(p)
+    p1, s = optm.update(p, s, g)
+    p2, s = optm.update(p1, s, g)
+    # mu1 = .5, mu2 = .95 -> w = 1 - .2*.5 - .2*.95
+    np.testing.assert_allclose(np.asarray(p2["w"]), 1 - 0.2 * 0.5 - 0.2 * 0.95,
+                               rtol=1e-6)
+
+
+def test_adamw_decoupled_decay():
+    p = {"w": jnp.asarray([10.0])}
+    g = {"w": jnp.asarray([0.0])}           # zero grad: only decay acts
+    opt = adamw(0.1, weight_decay=0.5)
+    p1, _ = opt.update(p, opt.init(p), g)
+    np.testing.assert_allclose(np.asarray(p1["w"]), 10.0 - 0.1 * 0.5 * 10.0,
+                               rtol=1e-6)
+
+
+def test_optimizers_preserve_dtype_and_tree():
+    from repro.optim import make
+    p = {"a": jnp.ones((2, 3), jnp.bfloat16), "b": {"c": jnp.ones(4)}}
+    g = jax.tree.map(jnp.ones_like, p)
+    for name in ("rmsprop", "sgd", "adamw"):
+        opt = make(name, 1e-2)
+        p1, s1 = opt.update(p, opt.init(p), g)
+        assert jax.tree.structure(p1) == jax.tree.structure(p)
+        assert p1["a"].dtype == jnp.bfloat16

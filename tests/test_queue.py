@@ -1,0 +1,118 @@
+"""Queue-server semantics: the paper's fault-tolerance claims as invariants.
+
+Property (hypothesis): under ANY interleaving of publish/lease/ack/nack/
+expire/drop-consumer, no message is lost and no message is acked twice —
+every published message is eventually either pending, in flight, or acked
+exactly once ("tasks are not removed from the queue until an ACK").
+"""
+from __future__ import annotations
+
+import math
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.queue import Queue, QueueServer
+
+
+def test_lease_ack_basic():
+    q = Queue("q")
+    q.publish("a")
+    q.publish("b")
+    tag, body = q.lease("w0", now=0.0)
+    assert body == "a" and q.depth == 1 and q.in_flight == 1
+    assert q.ack(tag)
+    assert not q.ack(tag)          # double-ack is rejected
+    assert q.acked == 1
+
+
+def test_visibility_timeout_requeues():
+    q = Queue("q", default_timeout=10.0)
+    q.publish("a")
+    tag, _ = q.lease("w0", now=0.0)
+    assert q.expire(now=5.0) == 0          # not yet
+    assert q.expire(now=10.0) == 1         # deadline hit -> requeued
+    assert q.depth == 1 and q.in_flight == 0
+    assert not q.ack(tag)                  # stale tag can't ack
+    tag2, body = q.lease("w1", now=11.0)
+    assert body == "a"
+
+
+def test_drop_consumer_requeues_everything():
+    q = Queue("q")
+    for i in range(3):
+        q.publish(i)
+    q.lease("w0", 0.0)
+    q.lease("w0", 0.0)
+    q.lease("w1", 0.0)
+    assert q.drop_consumer("w0") == 2
+    assert q.depth == 2 and q.in_flight == 1
+
+
+def test_nack_front_preserves_order():
+    q = Queue("q")
+    q.publish("a")
+    q.publish("b")
+    tag, body = q.lease("w0", 0.0)
+    q.nack(tag, front=True)
+    _, body2 = q.lease("w1", 0.0)
+    assert body2 == "a"
+
+
+@st.composite
+def _script(draw):
+    n_msgs = draw(st.integers(1, 12))
+    ops = draw(st.lists(st.tuples(
+        st.sampled_from(["lease", "ack", "nack", "expire", "drop"]),
+        st.integers(0, 3),          # worker id
+        st.floats(0, 100)),          # time
+        min_size=1, max_size=60))
+    return n_msgs, ops
+
+
+@given(_script())
+@settings(max_examples=200, deadline=None)
+def test_no_loss_no_double_completion(script):
+    n_msgs, ops = script
+    q = Queue("q", default_timeout=15.0)
+    for i in range(n_msgs):
+        q.publish(i)
+    held = {}                                      # worker -> [(tag, body)]
+    acked = []
+    for op, w, t in ops:
+        wid = f"w{w}"
+        if op == "lease":
+            got = q.lease(wid, now=t)
+            if got:
+                held.setdefault(wid, []).append(got)
+        elif op == "ack" and held.get(wid):
+            tag, body = held[wid].pop()
+            if q.ack(tag):
+                acked.append(body)
+        elif op == "nack" and held.get(wid):
+            tag, _ = held[wid].pop()
+            q.nack(tag)
+        elif op == "expire":
+            q.expire(now=t)
+            # any tag may now be stale; conservatively flush local holds
+        elif op == "drop":
+            q.drop_consumer(wid)
+            held.pop(wid, None)
+    # conservation: every message is acked at most once, and everything not
+    # acked is still recoverable from the queue (pending or in flight)
+    assert len(acked) == len(set(acked))
+    assert len(acked) + q.depth + q.in_flight >= n_msgs
+    assert q.acked == len(acked)
+
+
+def test_queueserver_namespaces():
+    qs = QueueServer()
+    qs.publish("a", 1)
+    qs.publish("b", 2)
+    assert qs.depth("a") == 1 and qs.depth("b") == 1
+    got = qs.lease("a", "w0", 0.0)
+    assert got and got[1] == 1
+    assert not qs.drained()
+    qs.ack("a", got[0])
+    got = qs.lease("b", "w0", 0.0)
+    qs.ack("b", got[0])
+    assert qs.drained()

@@ -1,0 +1,170 @@
+"""Sharding-policy unit tests: every emitted PartitionSpec must tile its
+tensor exactly (divisibility), TP lands on the intended dims, FSDP falls
+back gracefully, and decode caches follow the DESIGN §5 rules.
+
+These run on 1 CPU device — specs are pure metadata, no mesh needed.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+import repro.configs as C
+from repro.distributed import sharding as SH
+from repro.models import model as M
+
+SINGLE = SH.ShardingPolicy(("data", "model"), (16, 16))
+MULTI = SH.ShardingPolicy(("pod", "data", "model"), (2, 16, 16))
+
+
+def _axis_size(policy, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        return int(np.prod([policy.size(a) for a in entry]))
+    return policy.size(entry)
+
+
+def _check_divisible(specs, shapes, policy):
+    flat_s, _ = jax.tree_util.tree_flatten(shapes)
+    flat_p = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_s) == len(flat_p)
+    for leaf, spec in zip(flat_s, flat_p):
+        for d, entry in enumerate(spec):
+            size = _axis_size(policy, entry)
+            assert leaf.shape[d] % size == 0, (leaf.shape, spec, d)
+
+
+@pytest.mark.parametrize("arch", C.ARCH_IDS)
+@pytest.mark.parametrize("policy", [SINGLE, MULTI], ids=["16x16", "2x16x16"])
+def test_param_specs_divisible(arch, policy):
+    cfg = C.get(arch)
+    shapes = jax.eval_shape(lambda k: M.init_params(cfg, k),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    specs = SH.param_specs(shapes, policy)
+    _check_divisible(specs, shapes, policy)
+
+
+def test_tp_lands_on_heads_for_wide_archs():
+    cfg = C.get("qwen1.5-110b")   # 64 heads: divisible by model=16
+    shapes = jax.eval_shape(lambda k: M.init_params(cfg, k),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    specs = SH.param_specs(shapes, SINGLE)
+    wq = specs["blocks"]["l0"]["attn"]["wq"]     # [U, D, H, hd]
+    assert wq[2] == "model"
+    wo_mlp = specs["blocks"]["l0"]["mlp"]["wo"]  # [U, F, D]
+    assert wo_mlp[1] == "model"
+
+
+def test_tp_falls_back_to_head_dim_for_narrow_heads():
+    cfg = C.get("whisper-base")   # 8 heads < 16 -> hd=64 gets the TP axis
+    shapes = jax.eval_shape(lambda k: M.init_params(cfg, k),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    specs = SH.param_specs(shapes, SINGLE)
+    wq = specs["decoder"]["l0"]["attn"]["wq"]
+    assert wq[2] is None and wq[3] == "model"
+
+
+def test_expert_dim_gets_model_axis():
+    cfg = C.get("arctic-480b")    # 128 experts / 16 = 8 per device
+    shapes = jax.eval_shape(lambda k: M.init_params(cfg, k),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    specs = SH.param_specs(shapes, SINGLE)
+    wi = specs["blocks"]["l0"]["moe"]["experts"]["wi"]   # [U, E, D, F]
+    assert wi[1] == "model"
+
+
+def test_small_leaves_stay_replicated():
+    cfg = C.get("stablelm-1.6b")
+    shapes = jax.eval_shape(lambda k: M.init_params(cfg, k),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    specs = SH.param_specs(shapes, SINGLE)
+    norm = specs["blocks"]["l0"]["norm1"]["scale"]       # [U, D] small
+    assert all(e is None for e in norm)
+
+
+def test_stacked_unit_dim_never_sharded():
+    for arch in C.ARCH_IDS:
+        cfg = C.get(arch)
+        shapes = jax.eval_shape(lambda k: M.init_params(cfg, k),
+                                jax.ShapeDtypeStruct((2,), jnp.uint32))
+        specs = SH.param_specs(shapes, MULTI)
+        for root in ("blocks", "encoder", "decoder"):
+            if root not in specs:
+                continue
+            for spec in jax.tree.leaves(specs[root],
+                                        is_leaf=lambda x: isinstance(x, P)):
+                if len(spec) > 0:
+                    assert spec[0] is None, (root, spec)
+
+
+def test_batch_specs():
+    shapes = {"tokens": jax.ShapeDtypeStruct((256, 4097), jnp.int32)}
+    specs = SH.batch_specs(shapes, MULTI)
+    assert specs["tokens"] == P(("pod", "data"), None)
+    # indivisible batch -> replicated
+    shapes1 = {"tokens": jax.ShapeDtypeStruct((1, 4097), jnp.int32)}
+    specs1 = SH.batch_specs(shapes1, MULTI)
+    assert specs1["tokens"] == P(None, None)
+
+
+def test_cache_specs_decode32k_vs_long500k():
+    cfg = C.get("qwen1.5-110b")
+    # decode_32k: batch 128 divisible -> batch on data, seq on model
+    cshape = jax.eval_shape(lambda: M.init_cache(cfg, 128, 32768))
+    specs = SH.cache_specs(cshape, SINGLE)
+    k = specs["l0"]["k"]
+    assert k == P(None, ("data",), "model", None, None) or \
+        k == P(None, "data", "model", None, None)
+    # long_500k: batch 1 -> the sequence dim takes every axis
+    cshape1 = jax.eval_shape(lambda: M.init_cache(cfg, 1, 524288))
+    specs1 = SH.cache_specs(cshape1, SINGLE)
+    k1 = specs1["l0"]["k"]
+    assert k1[2] == ("data", "model")
+
+
+def test_ssm_cache_specs():
+    cfg = C.get("falcon-mamba-7b")
+    cshape = jax.eval_shape(lambda: M.init_cache(cfg, 128, 16))
+    specs = SH.cache_specs(cshape, SINGLE)
+    h = specs["l0"]["h"]        # [U, B, Di, N]
+    assert h[1] in ("data", ("data",)) and h[2] == "model"
+    conv = specs["l0"]["conv"]  # [U, B, K-1, Di]
+    assert conv[3] == "model"
+
+
+def test_opt_state_specs_mirror_params():
+    cfg = C.get_smoke("stablelm-1.6b")
+    shapes = jax.eval_shape(lambda k: M.init_params(cfg, k),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    pspecs = SH.param_specs(shapes, SINGLE)
+    from repro.optim import rmsprop
+    opt = rmsprop(0.1)
+    ostate = jax.eval_shape(lambda: opt.init(
+        jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)))
+    ospecs = SH.opt_state_specs(ostate, pspecs)
+    assert ospecs["step"] == P()
+    assert ospecs["ms"] == pspecs
+
+
+def test_hd_fallback_off_replicates_qkv():
+    cfg = C.get("internvl2-1b")   # 14 heads: indivisible by 16
+    pol = SH.ShardingPolicy(("data", "model"), (16, 16),
+                            attn_hd_fallback=False)
+    shapes = jax.eval_shape(lambda k: M.init_params(cfg, k),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    specs = SH.param_specs(shapes, pol)
+    wq = specs["blocks"]["l0"]["attn"]["wq"]
+    assert wq[2] is None and wq[3] is None     # no head_dim sharding
+
+
+def test_padded_vocab_shards_on_model():
+    cfg = C.get("internvl2-1b").replace(vocab_pad_to=256)
+    assert cfg.padded_vocab % 256 == 0 and cfg.padded_vocab >= cfg.vocab
+    shapes = jax.eval_shape(lambda k: M.init_params(cfg, k),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    specs = SH.param_specs(shapes, SINGLE)
+    assert specs["embed"][0] == "model"        # vocab-TP now possible
