@@ -11,6 +11,7 @@ Artifacts covered:
   §VI         compression         top-k / ternary wire bytes + convergence
   (kernels)   kernel_bench        us_per_call per Pallas kernel
   (roofline)  roofline            dry-run derived terms, if records exist
+  (scale)     volunteer_scaling   event-driven vs polling at 1k/10k volunteers
 """
 from __future__ import annotations
 
@@ -30,8 +31,9 @@ def main(argv=None) -> int:
 
     from benchmarks import (classroom, cluster_scaling, compression,
                             dynamism, kernel_bench, roofline,
-                            sequential_baseline, timeline)
+                            sequential_baseline, timeline, volunteer_scaling)
     suites = [
+        ("volunteer_scaling", lambda: volunteer_scaling.main(quick=reduced)),
         ("cluster_scaling", lambda: cluster_scaling.main(reduced)),
         ("classroom", lambda: classroom.main(reduced)),
         ("timeline", lambda: timeline.main(reduced)),

@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# Tier-1 verification (see ROADMAP.md): the full test suite, fail-fast.
+# Optional dev deps (requirements-dev.txt) improve coverage but are not
+# required — the suite is green on a bare container with jax+numpy+msgpack.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+python -m pytest -x -q "$@"
+
+# smoke the volunteer-scaling benchmark (1k volunteers, ~5 s): proves the
+# event-driven coordination win is still >=10x at identical semantics
+python benchmarks/volunteer_scaling.py --quick

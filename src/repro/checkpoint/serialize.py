@@ -1,16 +1,33 @@
-"""Pytree <-> bytes via msgpack (+ optional zstd). Used by the DataServer wire
-protocol (gradient/model messages) and the durable checkpoint store."""
+"""Pytree <-> bytes via msgpack (+ optional compression). Used by the
+DataServer wire protocol (gradient/model messages) and the durable checkpoint
+store.
+
+The first byte of every blob is the codec header, so either side can decode
+regardless of which codecs it has installed:
+
+- ``Z`` zstandard (preferred when the optional ``zstandard`` package exists)
+- ``D`` stdlib zlib/deflate (always available fallback)
+- ``R`` raw / uncompressed
+"""
 from __future__ import annotations
 
-from typing import Any, Tuple
+import zlib
+from typing import Any, Optional, Tuple
 
 import msgpack
 import numpy as np
-import zstandard
+
+try:  # optional: zstd compresses better/faster, but the stdlib must suffice
+    import zstandard
+    _CTX = zstandard.ZstdCompressor(level=3)
+    _DCTX = zstandard.ZstdDecompressor()
+except ImportError:
+    zstandard = None
+    _CTX = _DCTX = None
 
 _ARR = "__nd__"
-_CTX = zstandard.ZstdCompressor(level=3)
-_DCTX = zstandard.ZstdDecompressor()
+
+DEFAULT_CODEC = "zstd" if zstandard is not None else "zlib"
 
 
 def _dtype_of(name: str) -> np.dtype:
@@ -45,16 +62,36 @@ def _walk(tree, fn):
     return fn(tree)
 
 
-def dumps(tree: Any, compress: bool = True) -> bytes:
+def dumps(tree: Any, compress: bool = True,
+          codec: Optional[str] = None) -> bytes:
+    """Serialize. ``codec`` forces "zstd"/"zlib"; default picks zstd when
+    installed, zlib otherwise. The choice is recorded in the header byte."""
     raw = msgpack.packb(_walk(tree, _pack_leaf), use_bin_type=True)
-    if compress:
+    if not compress:
+        return b"R" + raw
+    codec = codec or DEFAULT_CODEC
+    if codec == "zstd":
+        if zstandard is None:
+            raise RuntimeError(
+                "codec='zstd' requested but the zstandard package is not "
+                "installed; use codec='zlib' or install zstandard")
         return b"Z" + _CTX.compress(raw)
-    return b"R" + raw
+    if codec == "zlib":
+        return b"D" + zlib.compress(raw, 6)
+    raise ValueError(f"unknown codec {codec!r}")
 
 
 def loads(data: bytes) -> Any:
     tag, body = data[:1], data[1:]
     if tag == b"Z":
+        if _DCTX is None:
+            raise RuntimeError(
+                "checkpoint was written with zstd but the zstandard package "
+                "is not installed on this side")
         body = _DCTX.decompress(body)
+    elif tag == b"D":
+        body = zlib.decompress(body)
+    elif tag != b"R":
+        raise ValueError(f"unknown serialization header {tag!r}")
     tree = msgpack.unpackb(body, raw=False, strict_map_key=False)
     return _walk(tree, _unpack_leaf)

@@ -1,5 +1,5 @@
 """The paper's primary contribution: the JSDoop volunteer map-reduce runtime."""
-from repro.core.queue import Queue, QueueServer  # noqa: F401
+from repro.core.queue import Queue, QueueServer, ShardedQueueServer  # noqa: F401
 from repro.core.dataserver import DataServer  # noqa: F401
 from repro.core.tasks import (  # noqa: F401
     INITIAL_QUEUE, MapTask, ReduceTask, GradResult, results_queue,
@@ -11,4 +11,5 @@ from repro.core.initiator import enqueue_problem  # noqa: F401
 from repro.core.coordinator import Coordinator, RunResult  # noqa: F401
 from repro.core.simulator import (  # noqa: F401
     Simulator, SimResult, VolunteerSpec, CostModel, TimelineEvent,
+    SyntheticProblem,
 )

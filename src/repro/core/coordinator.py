@@ -7,20 +7,28 @@ timeouts). Churn is injected as (step, 'leave'/'join', volunteer) events:
 a leaving volunteer's leased tasks requeue, exactly like closing the browser
 tab mid-task.
 
+Waiting is event-driven, on the same primitives the Simulator uses: a
+volunteer that would block (empty task queue, unpublished model version, or an
+unfilled reduce barrier) registers a subscription/watcher and is skipped by
+the scheduler until woken. When every volunteer is blocked the logical clock
+fast-forwards to the next churn event or visibility deadline instead of
+spinning — no step ever busy-polls.
+
 This is the engine behind the paper's invariance claim tests: the final model
 must bit-match ``sequential_accumulated`` for ANY worker count and ANY churn.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
 from repro.core.dataserver import DataServer
 from repro.core.initiator import enqueue_problem
 from repro.core.mapreduce import TrainingProblem
-from repro.core.queue import QueueServer
+from repro.core.queue import QueueServer, ShardedQueueServer
 from repro.core.tasks import (GradResult, INITIAL_QUEUE, MapTask, ReduceTask,
                               results_queue)
 from repro.optim.compression import Codec, ef_init, ef_compress
@@ -32,6 +40,7 @@ class _Volunteer:
     tag: Optional[int] = None
     task: Any = None
     ef_residual: Any = None     # error-feedback state (when codec is set)
+    blocked: bool = False       # waiting on a subscription/watcher wake
 
     @property
     def busy(self) -> bool:
@@ -54,9 +63,12 @@ class Coordinator:
                  n_versions: Optional[int] = None,
                  churn: Optional[List[Tuple[int, str, str]]] = None,
                  visibility_timeout: float = float("inf"),
-                 codec: Optional[Codec] = None):
+                 codec: Optional[Codec] = None, n_shards: int = 1):
         self.problem = problem
-        self.qs = QueueServer(default_timeout=visibility_timeout)
+        self.qs: Union[QueueServer, ShardedQueueServer] = (
+            QueueServer(default_timeout=visibility_timeout) if n_shards <= 1
+            else ShardedQueueServer(n_shards,
+                                    default_timeout=visibility_timeout))
         self.ds = DataServer()
         self.n_versions = n_versions if n_versions is not None else problem.n_versions
         enqueue_problem(problem, self.qs, self.ds, n_versions=self.n_versions)
@@ -69,10 +81,27 @@ class Coordinator:
         self.bytes_sent = 0
 
     # ------------------------------------------------------------------ engine
+    def _unblock(self, vid: str):
+        """Subscription/watcher wake: mark the volunteer runnable. A wake for a
+        departed volunteer passes the event on so no wakeup is lost."""
+        v = self.volunteers.get(vid)
+        if v is not None:
+            v.blocked = False
+        else:
+            self.qs.kick(INITIAL_QUEUE)
+
+    def _block_on_queue(self, v: _Volunteer, qname: str, *, kind: str = "any"):
+        v.blocked = True
+        self.qs.subscribe(qname, v.vid, lambda: self._unblock(v.vid),
+                          kind=kind)
+
+    def _block_on_version(self, v: _Volunteer, version: int):
+        v.blocked = True
+        self.ds.watch_version(version, lambda: self._unblock(v.vid))
+
     def run(self, max_steps: int = 2_000_000) -> RunResult:
         step = 0
         churn_i = 0
-        order = list(self.volunteers)
         while self.ds.latest_version < self.n_versions:
             if step >= max_steps:
                 raise RuntimeError("coordinator did not converge (deadlock?)")
@@ -81,11 +110,11 @@ class Coordinator:
                 _, kind, vid = self.churn[churn_i]
                 churn_i += 1
                 if kind == "leave" and vid in self.volunteers:
+                    self.qs.unsubscribe(vid)
                     self.qs.drop_consumer(vid)
                     del self.volunteers[vid]
                 elif kind == "join" and vid not in self.volunteers:
                     self.volunteers[vid] = _Volunteer(vid)
-                order = list(self.volunteers)
             if not self.volunteers:
                 # everyone left; semantically the problem just pauses (paper:
                 # "If no one is collaborating, the problem simply stops").
@@ -94,23 +123,42 @@ class Coordinator:
                 step = max(step + 1, self.churn[churn_i][0])
                 continue
             self.qs.expire_all(step)
-            for vid in order:
+            ran_any = False
+            for vid in list(self.volunteers):
                 v = self.volunteers.get(vid)
-                if v is not None:
+                if v is not None and not v.blocked:
                     self._step_volunteer(v, step)
-            step += 1
+                    ran_any = True
+            if ran_any:
+                step += 1
+                continue
+            # every volunteer is waiting on a wake: jump the logical clock to
+            # the next external event (churn or a visibility-timeout expiry)
+            # instead of spinning through empty steps
+            candidates = []
+            if churn_i < len(self.churn):
+                candidates.append(self.churn[churn_i][0])
+            dl = self.qs.next_deadline()
+            if dl is not None and math.isfinite(dl):
+                candidates.append(int(math.ceil(dl)))
+            if not candidates:
+                raise RuntimeError(
+                    "coordinator deadlock: all volunteers blocked with no "
+                    "pending churn or visibility deadline")
+            step = max(step + 1, min(candidates))
         params, opt_state = self.ds.get_model(self.ds.latest_version)
         losses = [float(np.mean(self.version_losses[k]))
                   for k in sorted(self.version_losses)]
-        requeues = sum(q.requeued for q in self.qs.queues.values())
         return RunResult(params, opt_state, losses, step, dict(self.tasks_done),
-                         requeues, self.ds.latest_version)
+                         self.qs.total_requeued, self.ds.latest_version)
 
     # ------------------------------------------------------------------ protocol
     def _step_volunteer(self, v: _Volunteer, now: float):
         if not v.busy:
             got = self.qs.lease(INITIAL_QUEUE, v.vid, now)
             if got is None:
+                # task queue empty: sleep until a publish or requeue
+                self._block_on_queue(v, INITIAL_QUEUE)
                 return
             v.tag, v.task = got
         if isinstance(v.task, MapTask):
@@ -128,7 +176,9 @@ class Coordinator:
             return
         blob = self.ds.get_model(t.version, nbytes=self.problem.model_bytes)
         if blob is None:
-            return  # model version not published yet -> wait (stay leased)
+            # model version not published yet: stay leased, wake on publish
+            self._block_on_version(v, t.version)
+            return
         params, _ = blob
         grads, loss = self.problem.map_compute(params, t.version, t.mb_index)
         nbytes = self.problem.grad_bytes
@@ -154,7 +204,10 @@ class Coordinator:
             return
         rq = results_queue(t.version)
         if self.qs.depth(rq) < t.n_mb:
-            return  # barrier not reached -> wait
+            # barrier not reached: wake on the next result publish (requeues —
+            # including our own nacks below — must not wake the barrier)
+            self._block_on_queue(v, rq, kind="publish")
+            return
         grads_by_mb: Dict[int, Any] = {}
         tags: List[int] = []
         while True:
@@ -167,6 +220,7 @@ class Coordinator:
         if len(grads_by_mb) < t.n_mb:
             for tag in tags:
                 self.qs.nack(rq, tag)
+            self._block_on_queue(v, rq, kind="publish")
             return
         params, opt_state = self.ds.get_model(t.version,
                                               nbytes=self.problem.model_bytes)

@@ -5,10 +5,14 @@ is the commit point of a reduce task; ``get_model(v)`` returns None until v is
 committed, which is exactly the paper's "if the required version is not yet
 available, the task waits" synchronization (solution 2 of §IV.F step 5: check
 if a datum has been modified before starting).
+
+``watch_version(v, callback)`` turns that wait into a push: the callback fires
+the moment ``publish_model(v)`` lands (immediately if v is already committed),
+so waiters never poll — the Redis-keyspace-notification analogue.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 
 class DataServer:
@@ -16,10 +20,12 @@ class DataServer:
         self._kv: Dict[str, Any] = {}
         self._models: Dict[int, Any] = {}
         self._latest: int = -1
+        self._watchers: Dict[int, List[Callable[[], None]]] = {}
         self.reads = 0
         self.writes = 0
         self.bytes_read = 0
         self.bytes_written = 0
+        self.watch_fires = 0
 
     # -- CRUD -----------------------------------------------------------------
     def put(self, key: str, value: Any, nbytes: int = 0):
@@ -48,7 +54,20 @@ class DataServer:
         self._latest = version
         self.writes += 1
         self.bytes_written += nbytes
+        # versions commit in +1 order, so only exact-version watchers can exist
+        for cb in self._watchers.pop(version, []):
+            self.watch_fires += 1
+            cb()
         return True
+
+    def watch_version(self, version: int, callback: Callable[[], None]) -> None:
+        """Fire ``callback`` once model ``version`` is committed — immediately
+        if it already is, else at the ``publish_model(version)`` that lands it."""
+        if self._latest >= version:
+            self.watch_fires += 1
+            callback()
+            return
+        self._watchers.setdefault(version, []).append(callback)
 
     def get_model(self, version: int, nbytes: int = 0) -> Optional[Any]:
         blob = self._models.get(version)

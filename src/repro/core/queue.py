@@ -11,16 +11,29 @@ Mirrors the semantics JSDoop gets from RabbitMQ (paper §IV.D/§IV.F step 5):
 - ``expire``/``drop_consumer`` requeue in-flight messages whose deadline passed
   or whose consumer disconnected ("if a volunteer disconnects while solving a
   task, the task is added back to the queue").
+- ``subscribe`` registers a one-shot waiter: the next publish or requeue wakes
+  exactly one registered waiter (FIFO), replacing client-side polling. This is
+  the push/notify coordination Pando and DistML.js use to scale volunteer
+  computing beyond a handful of browsers.
 
 Time is explicit (virtual): both the real coordinator (logical step clock) and
 the discrete-event simulator (seconds) drive the same implementation.
+
+``ShardedQueueServer`` federates K ``QueueServer`` instances behind the same
+API, routing queue names with consistent hashing — the paper's §IV observation
+that "it is possible to use several QueueServers in which each one stores a
+different type of task", made concrete as a load-balanced hash ring.
 """
 from __future__ import annotations
 
+import bisect
+import hashlib
+import heapq
 import itertools
+import math
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Dict, Iterable, List, Optional, Tuple
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
 
 
 @dataclass
@@ -38,15 +51,27 @@ class Queue:
         self._pending: deque = deque()            # (tag, body)
         self._in_flight: Dict[int, _InFlight] = {}
         self._tags = itertools.count()
+        # expiry index: (deadline, tag) min-heap; entries go stale when a tag is
+        # acked or re-leased — validated lazily against the in-flight table.
+        self._deadlines: List[Tuple[float, int]] = []
+        # one-shot waiters. "any" wakes on publish OR requeue (a task became
+        # leasable); "publish" wakes on publish only (new data arrived — the
+        # reduce-barrier watcher, which must not be woken by its own nacks).
+        self._waiters: deque = deque()            # (consumer, callback)
+        self._pub_waiters: deque = deque()
+        self._signal = False                      # event arrived with no waiter
+        self._pub_signal = False
         self.published = 0
         self.acked = 0
         self.requeued = 0
+        self.wakeups = 0
 
     # -- producer ------------------------------------------------------------
     def publish(self, body: Any) -> int:
         tag = next(self._tags)
         self._pending.append((tag, body))
         self.published += 1
+        self._notify(publish=True)
         return tag
 
     # -- consumer ------------------------------------------------------------
@@ -56,7 +81,10 @@ class Queue:
             return None
         tag, body = self._pending.popleft()
         t = self.default_timeout if timeout is None else timeout
-        self._in_flight[tag] = _InFlight(body, consumer, now + t, 0)
+        deadline = now + t
+        self._in_flight[tag] = _InFlight(body, consumer, deadline, 0)
+        if math.isfinite(deadline):
+            heapq.heappush(self._deadlines, (deadline, tag))
         return tag, body
 
     def ack(self, tag: int) -> bool:
@@ -76,15 +104,86 @@ class Queue:
         else:
             self._pending.append((tag, inf.body))
         self.requeued += 1
+        self._notify(publish=False)
         return True
+
+    # -- subscriptions ---------------------------------------------------------
+    def subscribe(self, consumer: str, callback: Callable[[], None], *,
+                  kind: str = "any") -> None:
+        """Register a one-shot waiter. The next publish (or, for kind="any",
+        requeue) wakes exactly ONE waiter in FIFO order. If an event already
+        arrived while nobody was waiting, the callback fires immediately —
+        a spurious wake at worst; waiters re-check queue state on wake, so the
+        check-then-subscribe pattern is lossless under this single-threaded
+        virtual clock."""
+        if kind not in ("any", "publish"):
+            raise ValueError(f"unknown subscription kind {kind!r}")
+        if kind == "publish":
+            if self._pub_signal:
+                self._pub_signal = False
+                self.wakeups += 1
+                callback()
+            else:
+                self._pub_waiters.append((consumer, callback))
+            return
+        if self._signal:
+            self._signal = False
+            self.wakeups += 1
+            callback()
+        else:
+            self._waiters.append((consumer, callback))
+
+    def unsubscribe(self, consumer: str) -> int:
+        """Remove every waiter registered by this consumer (volunteer left)."""
+        n = len(self._waiters) + len(self._pub_waiters)
+        self._waiters = deque((c, cb) for c, cb in self._waiters
+                              if c != consumer)
+        self._pub_waiters = deque((c, cb) for c, cb in self._pub_waiters
+                                  if c != consumer)
+        return n - len(self._waiters) - len(self._pub_waiters)
+
+    def kick(self) -> None:
+        """Hand a consumed wake to the next waiter — used when a woken consumer
+        turns out to have left and cannot serve the event it was woken for."""
+        self._notify(publish=False)
+
+    def _notify(self, *, publish: bool) -> None:
+        if self._waiters:
+            _, cb = self._waiters.popleft()
+            self.wakeups += 1
+            cb()
+        else:
+            self._signal = True
+        if publish:
+            if self._pub_waiters:
+                _, cb = self._pub_waiters.popleft()
+                self.wakeups += 1
+                cb()
+            else:
+                self._pub_signal = True
 
     # -- fault tolerance -------------------------------------------------------
     def expire(self, now: float) -> int:
-        """Requeue every in-flight message whose visibility deadline passed."""
-        dead = [t for t, inf in self._in_flight.items() if inf.deadline <= now]
-        for t in dead:
-            self.nack(t, front=True)
-        return len(dead)
+        """Requeue every in-flight message whose visibility deadline passed.
+        Amortized O(expired) via the deadline heap (stale entries skipped)."""
+        n = 0
+        while self._deadlines and self._deadlines[0][0] <= now:
+            _, tag = heapq.heappop(self._deadlines)
+            inf = self._in_flight.get(tag)
+            if inf is not None and inf.deadline <= now:
+                self.nack(tag, front=True)
+                n += 1
+        return n
+
+    def next_deadline(self) -> Optional[float]:
+        """Earliest live visibility deadline, or None."""
+        while self._deadlines:
+            dl, tag = self._deadlines[0]
+            inf = self._in_flight.get(tag)
+            if inf is not None and inf.deadline == dl:
+                return dl
+            heapq.heappop(self._deadlines)
+        return None
 
     def drop_consumer(self, consumer: str) -> int:
         """A volunteer closed the browser: requeue everything it held."""
@@ -106,13 +205,18 @@ class Queue:
     def drained(self) -> bool:
         return not self._pending and not self._in_flight
 
+    @property
+    def waiters(self) -> int:
+        return len(self._waiters) + len(self._pub_waiters)
+
     def peek_all(self) -> List[Any]:
         return [b for _, b in self._pending]
 
 
 class QueueServer:
     """Named queues. Multiple QueueServers are modelled by multiple instances
-    (the paper's load-balancing story); the API is identical."""
+    (the paper's load-balancing story — see ShardedQueueServer); the API is
+    identical."""
 
     def __init__(self, default_timeout: float = float("inf")):
         self.default_timeout = default_timeout
@@ -137,15 +241,149 @@ class QueueServer:
     def nack(self, qname: str, tag: int, *, front: bool = True) -> bool:
         return self.declare(qname).nack(tag, front=front)
 
+    def subscribe(self, qname: str, consumer: str,
+                  callback: Callable[[], None], *, kind: str = "any") -> None:
+        self.declare(qname).subscribe(consumer, callback, kind=kind)
+
+    def unsubscribe(self, consumer: str) -> int:
+        return sum(q.unsubscribe(consumer) for q in self.queues.values())
+
+    def kick(self, qname: str) -> None:
+        self.declare(qname).kick()
+
     def expire_all(self, now: float) -> int:
         return sum(q.expire(now) for q in self.queues.values())
+
+    def next_deadline(self) -> Optional[float]:
+        dls = [d for d in (q.next_deadline() for q in self.queues.values())
+               if d is not None]
+        return min(dls) if dls else None
 
     def drop_consumer(self, consumer: str) -> int:
         return sum(q.drop_consumer(consumer) for q in self.queues.values())
 
     def drained(self, names: Optional[Iterable[str]] = None) -> bool:
-        qs = (self.queues[n] for n in names) if names else self.queues.values()
+        qs = (self.queues[n] for n in names if n in self.queues) if names \
+            else self.queues.values()
         return all(q.drained for q in qs)
 
     def depth(self, qname: str) -> int:
         return self.declare(qname).depth
+
+    @property
+    def total_requeued(self) -> int:
+        return sum(q.requeued for q in self.queues.values())
+
+    @property
+    def total_wakeups(self) -> int:
+        return sum(q.wakeups for q in self.queues.values())
+
+
+def _stable_hash(key: str) -> int:
+    """Process-independent 64-bit hash (Python's str hash is salted)."""
+    return int.from_bytes(
+        hashlib.blake2b(key.encode(), digest_size=8).digest(), "big")
+
+
+class ShardedQueueServer:
+    """K federated QueueServer instances behind the QueueServer API.
+
+    Queue names route to shards via a consistent-hash ring with virtual nodes,
+    so (a) load spreads evenly over the federation and (b) adding/removing a
+    shard remaps only ~1/K of the queue names — the standard scaling story for
+    the paper's "several QueueServers" deployment. Every per-queue operation is
+    a pure delegation to the owning shard, so federation is semantics-invisible
+    (asserted by tests: a sharded run bit-matches a single-server run).
+    """
+
+    def __init__(self, n_shards: int, default_timeout: float = float("inf"),
+                 *, vnodes: int = 64):
+        if n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+        self.shards: List[QueueServer] = [
+            QueueServer(default_timeout) for _ in range(n_shards)]
+        self.default_timeout = default_timeout
+        ring: List[Tuple[int, int]] = []
+        for i in range(n_shards):
+            for r in range(vnodes):
+                ring.append((_stable_hash(f"qshard-{i}#{r}"), i))
+        ring.sort()
+        self._ring_keys = [h for h, _ in ring]
+        self._ring_vals = [i for _, i in ring]
+
+    def shard_of(self, qname: str) -> int:
+        """Index of the shard owning this queue name (clockwise successor)."""
+        h = _stable_hash(qname)
+        i = bisect.bisect_right(self._ring_keys, h) % len(self._ring_keys)
+        return self._ring_vals[i]
+
+    def route(self, qname: str) -> QueueServer:
+        return self.shards[self.shard_of(qname)]
+
+    # -- per-queue ops: delegate to the owning shard ---------------------------
+    def declare(self, name: str, timeout: Optional[float] = None) -> Queue:
+        return self.route(name).declare(name, timeout)
+
+    def publish(self, qname: str, body: Any) -> int:
+        return self.route(qname).publish(qname, body)
+
+    def lease(self, qname: str, consumer: str, now: float,
+              timeout: Optional[float] = None):
+        return self.route(qname).lease(qname, consumer, now, timeout)
+
+    def ack(self, qname: str, tag: int) -> bool:
+        return self.route(qname).ack(qname, tag)
+
+    def nack(self, qname: str, tag: int, *, front: bool = True) -> bool:
+        return self.route(qname).nack(qname, tag, front=front)
+
+    def subscribe(self, qname: str, consumer: str,
+                  callback: Callable[[], None], *, kind: str = "any") -> None:
+        self.route(qname).subscribe(qname, consumer, callback, kind=kind)
+
+    def kick(self, qname: str) -> None:
+        self.route(qname).kick(qname)
+
+    def depth(self, qname: str) -> int:
+        return self.route(qname).depth(qname)
+
+    # -- federation-wide ops ---------------------------------------------------
+    def unsubscribe(self, consumer: str) -> int:
+        return sum(s.unsubscribe(consumer) for s in self.shards)
+
+    def expire_all(self, now: float) -> int:
+        return sum(s.expire_all(now) for s in self.shards)
+
+    def next_deadline(self) -> Optional[float]:
+        dls = [d for d in (s.next_deadline() for s in self.shards)
+               if d is not None]
+        return min(dls) if dls else None
+
+    def drop_consumer(self, consumer: str) -> int:
+        return sum(s.drop_consumer(consumer) for s in self.shards)
+
+    def drained(self, names: Optional[Iterable[str]] = None) -> bool:
+        if names:
+            return all(self.route(n).drained([n]) for n in names)
+        return all(s.drained() for s in self.shards)
+
+    @property
+    def queues(self) -> Dict[str, Queue]:
+        """Merged read-only view over all shards (names are unique: each queue
+        lives on exactly one shard)."""
+        merged: Dict[str, Queue] = {}
+        for s in self.shards:
+            merged.update(s.queues)
+        return merged
+
+    @property
+    def total_requeued(self) -> int:
+        return sum(s.total_requeued for s in self.shards)
+
+    @property
+    def total_wakeups(self) -> int:
+        return sum(s.total_wakeups for s in self.shards)
+
+    def shard_loads(self) -> List[int]:
+        """Queues per shard — the load-balance observable."""
+        return [len(s.queues) for s in self.shards]

@@ -15,6 +15,18 @@ semantics the real Coordinator uses. Costs:
 
 All semantics (lease/ack/requeue, version waits, reduce barrier, churn) are
 identical to the real Coordinator — asserted by tests.
+
+Two coordination modes share every cost and protocol rule:
+
+- ``mode="event"`` (default): waits are push-based. An idle volunteer
+  subscribes to the task queue (woken by the next publish/requeue), a map task
+  whose model version is missing registers a ``DataServer.watch_version``, and
+  a reduce task's barrier subscribes to publishes on its results queue. Total
+  events scale with the amount of WORK, not with waiting time.
+- ``mode="poll"``: the pre-subscription baseline — every wait reschedules
+  itself every ``cost.poll_interval`` seconds, so events scale with
+  O(volunteers x makespan / poll_interval). Kept for benchmarking
+  (`benchmarks/volunteer_scaling.py`) and the cross-mode equivalence tests.
 """
 from __future__ import annotations
 
@@ -22,11 +34,11 @@ import heapq
 import itertools
 import math
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple, Union
 
 from repro.core.dataserver import DataServer
 from repro.core.mapreduce import TrainingProblem
-from repro.core.queue import QueueServer
+from repro.core.queue import QueueServer, ShardedQueueServer
 from repro.core.tasks import (INITIAL_QUEUE, GradResult, MapTask, ReduceTask,
                               results_queue)
 
@@ -39,12 +51,63 @@ class VolunteerSpec:
     leave_time: float = math.inf
 
 
+@dataclass(frozen=True)
+class _SyntheticTrainParams:
+    batch_size: int
+    mini_batch_size: int
+    mini_batches_to_accumulate: int
+    sample_len: int
+    batches_per_epoch: int
+
+
+@dataclass(frozen=True)
+class _SyntheticConfig:
+    vocab: int
+
+
+class SyntheticProblem:
+    """Duck-typed TrainingProblem stand-in for timing-only simulations.
+
+    The Simulator never calls map_compute/reduce_compute, so scale studies
+    (1k-10k volunteers) don't need a jax model at all — just the task schedule
+    and the byte/flop sizes the cost model consumes. Constructs in microseconds
+    at any scale.
+    """
+
+    def __init__(self, *, n_versions: int = 20, n_mb: int = 32,
+                 mini_batch_size: int = 8, sample_len: int = 50,
+                 vocab: int = 96, model_bytes: float = 2.0e6,
+                 grad_bytes: float = 1.0e6, map_flops: float = 1.0e9,
+                 reduce_flops: float = 2.0e7, batches_per_epoch: int = 0):
+        self.tp = _SyntheticTrainParams(
+            batch_size=n_mb * mini_batch_size,
+            mini_batch_size=mini_batch_size,
+            mini_batches_to_accumulate=n_mb,
+            sample_len=sample_len,
+            batches_per_epoch=batches_per_epoch or n_versions)
+        self.cfg = _SyntheticConfig(vocab=vocab)
+        self.n_versions = n_versions
+        self.model_bytes = model_bytes
+        self.grad_bytes = grad_bytes
+        self._map_flops = map_flops
+        self._reduce_flops = reduce_flops
+
+    def version_to_epoch_batch(self, version: int):
+        return divmod(version, self.tp.batches_per_epoch)
+
+    def flops_per_map(self) -> float:
+        return self._map_flops
+
+    def flops_per_reduce(self) -> float:
+        return self._reduce_flops
+
+
 @dataclass
 class CostModel:
     flops_per_sec: float = 2.0e9    # sustained JS/WebGL throughput of one device
     latency: float = 0.030          # one-way message latency (s)
     bandwidth: float = 12.5e6       # bytes/s (100 Mbit LAN)
-    poll_interval: float = 0.200    # dependency-wait poll (s)
+    poll_interval: float = 0.200    # dependency-wait poll (s) — poll mode only
     # cache-effect model (superlinearity, paper §V.A):
     cache_bytes: float = 4.0e6      # fast-memory budget per device
     thrash_penalty: float = 0.22    # throughput multiplier when set exceeds cache
@@ -77,6 +140,9 @@ class SimResult:
     final_version: int
     bytes_sent: float
     busy_time: Dict[str, float]
+    events: int = 0                  # simulator events processed
+    poll_events: int = 0             # events that were poll reschedules
+    mode: str = "event"
 
 
 class Simulator:
@@ -85,11 +151,18 @@ class Simulator:
     def __init__(self, problem: TrainingProblem, specs: List[VolunteerSpec], *,
                  cost: CostModel = None, n_versions: Optional[int] = None,
                  visibility_timeout: float = 900.0, grad_bytes=None,
-                 model_bytes=None):
+                 model_bytes=None, mode: str = "event", n_shards: int = 1,
+                 max_events: int = 5_000_000):
         from repro.core.initiator import enqueue_problem
+        if mode not in ("event", "poll"):
+            raise ValueError(f"unknown mode {mode!r}")
         self.problem = problem
         self.cost = cost or CostModel()
-        self.qs = QueueServer(default_timeout=visibility_timeout)
+        self.mode = mode
+        self.max_events = max_events
+        self.qs: Union[QueueServer, ShardedQueueServer] = (
+            QueueServer(default_timeout=visibility_timeout) if n_shards <= 1
+            else ShardedQueueServer(n_shards, default_timeout=visibility_timeout))
         self.ds = DataServer()
         self.n_versions = (n_versions if n_versions is not None
                            else problem.n_versions)
@@ -108,46 +181,66 @@ class Simulator:
         self.busy: Dict[str, float] = {}
         self.bytes_sent = 0.0
         self.done_time = 0.0
+        self.events = 0
+        self.poll_events = 0
 
     # ------------------------------------------------------------------ engine
     def _post(self, t: float, fn: Callable):
         heapq.heappush(self._heap, (t, next(self._seq), fn))
 
+    def _post_poll(self, t: float, fn: Callable):
+        self.poll_events += 1
+        self._post(t, fn)
+
     def run(self) -> SimResult:
         for s in self.specs.values():
             self._post(s.join_time, lambda vid=s.vid: self._wake(vid))
-        guard = 0
         while self._heap and self.ds.latest_version < self.n_versions:
-            guard += 1
-            if guard > 5_000_000:
+            self.events += 1
+            if self.events > self.max_events:
                 raise RuntimeError("simulator runaway")
             t, _, fn = heapq.heappop(self._heap)
             self._now = t
             self.qs.expire_all(t)
             fn()
-        requeues = sum(q.requeued for q in self.qs.queues.values())
         return SimResult(self.done_time, self.timeline,
-                         dict(self.tasks_by_worker), requeues,
+                         dict(self.tasks_by_worker), self.qs.total_requeued,
                          self.ds.latest_version, self.bytes_sent,
-                         dict(self.busy))
+                         dict(self.busy), self.events, self.poll_events,
+                         self.mode)
 
     def _alive(self, vid: str) -> bool:
         s = self.specs[vid]
         return s.join_time <= self._now < s.leave_time
+
+    # wait primitives: poll reschedules, event subscribes ----------------------
+    def _resume(self, fn: Callable):
+        """Subscription callback -> simulator event at the current virtual time
+        (the wake happens inside whatever event triggered the notify)."""
+        self._post(self._now, fn)
 
     def _wake(self, vid: str):
         """Volunteer becomes idle at _now: try to lease the next task."""
         if self.ds.latest_version >= self.n_versions:
             return
         if not self._alive(vid):
-            self.qs.drop_consumer(vid)
+            # a departed volunteer: requeue whatever it held (wakes the next
+            # waiter via the requeue notification); if it consumed a wake while
+            # holding nothing, pass that wake on so no event is lost
+            if self.qs.drop_consumer(vid) == 0:
+                self.qs.kick(INITIAL_QUEUE)
             return
         now = self._now
         got = self.qs.lease(INITIAL_QUEUE, vid, now)
         if got is None:
             if not self.qs.drained([INITIAL_QUEUE]):
-                self._post(now + self.cost.poll_interval,
-                           lambda: self._wake(vid))
+                if self.mode == "poll":
+                    self._post_poll(now + self.cost.poll_interval,
+                                    lambda: self._wake(vid))
+                else:
+                    self.qs.subscribe(INITIAL_QUEUE, vid,
+                                      lambda: self._resume(
+                                          lambda: self._wake(vid)))
             return
         tag, task = got
         self._post(now + self.cost.latency,
@@ -170,8 +263,13 @@ class Simulator:
             self._post(now, lambda: self._wake(vid))
             return
         if self.ds.get_model(t.version) is None:
-            self._post(now + self.cost.poll_interval,
-                       lambda: self._dispatch(vid, tag, t))
+            if self.mode == "poll":
+                self._post_poll(now + self.cost.poll_interval,
+                                lambda: self._dispatch(vid, tag, t))
+            else:
+                self.ds.watch_version(
+                    t.version,
+                    lambda: self._resume(lambda: self._dispatch(vid, tag, t)))
             return
         spec = self.specs[vid]
         # working set: a lone volunteer cycles model+opt+the whole 128-batch
@@ -221,9 +319,21 @@ class Simulator:
             self._post(now, lambda: self._wake(vid))
             return
         rq = results_queue(t.version)
+
+        def wait_for_results():
+            if self.mode == "poll":
+                self._post_poll(now + self.cost.poll_interval,
+                                lambda: self._dispatch(vid, tag, t))
+            else:
+                # woken by the NEXT publish on the results queue — requeues
+                # (e.g. our own nacks below) must not wake the barrier
+                self.qs.subscribe(rq, vid,
+                                  lambda: self._resume(
+                                      lambda: self._dispatch(vid, tag, t)),
+                                  kind="publish")
+
         if self.qs.depth(rq) < t.n_mb:
-            self._post(now + self.cost.poll_interval,
-                       lambda: self._dispatch(vid, tag, t))
+            wait_for_results()
             return
         tags = []
         seen = set()
@@ -237,8 +347,7 @@ class Simulator:
         if len(seen) < t.n_mb:
             for rtag in tags:
                 self.qs.nack(rq, rtag)
-            self._post(now + self.cost.poll_interval,
-                       lambda: self._dispatch(vid, tag, t))
+            wait_for_results()
             return
         spec = self.specs[vid]
         pull = self.cost.xfer(self.grad_bytes * t.n_mb) + self.cost.xfer(

@@ -144,7 +144,7 @@ def lower_one(arch: str, shape_name: str, mesh, *, rt: Optional[Runtime] = None,
 
     opt = rmsprop(0.1) if optimizer == "rmsprop" else adamw(1e-4)
 
-    with jax.set_mesh(mesh):
+    with MESH.compat_set_mesh(mesh):
         if shape.kind == "train":
             b = ST.bind_train(mesh, cfg, rt, opt, shape, policy=policy,
                               num_microbatches=num_microbatches, donate=False)
@@ -169,7 +169,7 @@ def lower_one(arch: str, shape_name: str, mesh, *, rt: Optional[Runtime] = None,
         t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = hlo_cost.xla_cost_analysis(compiled)
     hlo = compiled.as_text()
     # loop-aware re-analysis: XLA's cost_analysis counts while bodies once
     # (see hlo_cost docstring); ours scales by known_trip_count.
@@ -254,11 +254,9 @@ def elastic_plan(arch: str, shape_name: str, *, steps=((4, 16), (8, 16),
     sequence and reports per-step compile cost + roofline terms, proving the
     schedule is valid at every membership size.
     """
-    from jax.sharding import AxisType
     recs = []
     for shape_dp in steps:
-        mesh = jax.make_mesh(shape_dp, ("data", "model"),
-                             axis_types=(AxisType.Auto,) * 2)
+        mesh = MESH.compat_make_mesh(shape_dp, ("data", "model"))
         rec = lower_one(arch, shape_name, mesh)
         print(f"[elastic] dp={shape_dp[0]:3d} x tp={shape_dp[1]} "
               f"compile={rec['compile_s']:.1f}s "

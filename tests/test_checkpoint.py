@@ -31,6 +31,18 @@ def test_serialize_compression_smaller_on_redundant_data():
     assert len(dumps(big)) < len(dumps(big, compress=False)) / 10
 
 
+def test_serialize_codec_recorded_in_header():
+    """The zlib fallback works without zstandard and the header byte lets the
+    reader pick the right decoder."""
+    t = _tree()
+    blob = dumps(t, codec="zlib")
+    assert blob[:1] == b"D"
+    t2 = loads(blob)
+    np.testing.assert_array_equal(np.asarray(t["w"]), t2["w"])
+    assert loads(dumps(t, compress=False))["n"] == 7
+    assert dumps(t, compress=False)[:1] == b"R"
+
+
 def test_store_versions_and_retention(tmp_path):
     st = CheckpointStore(str(tmp_path), keep=2)
     for v in range(1, 5):

@@ -1,12 +1,22 @@
-"""Gradient-compression contracts (paper §III/§VI) + hypothesis properties."""
+"""Gradient-compression contracts (paper §III/§VI) + hypothesis properties.
+
+The round-trip properties also run as plain parametrized tests so the suite
+does not depend on hypothesis being installed.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
 from repro.optim import compression as CP
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 
 def _tree(key, sizes=(37, 256)):
@@ -40,9 +50,7 @@ def test_ternary_decodes_to_three_levels():
     assert nbytes < dense / 10              # ~16x smaller
 
 
-@given(st.integers(1, 2000), st.floats(0.001, 1.0))
-@settings(max_examples=50, deadline=None)
-def test_topk_roundtrip_properties(n, frac):
+def _check_topk_roundtrip(n, frac):
     g = {"w": jax.random.normal(jax.random.PRNGKey(n), (n,))}
     payload, _ = CP.topk_encode(g, frac)
     dec = CP.topk_decode(payload)
@@ -55,15 +63,36 @@ def test_topk_roundtrip_properties(n, frac):
     assert all(np.isclose(v, orig).any() for v in nz)
 
 
-@given(st.integers(1, 999))
-@settings(max_examples=30, deadline=None)
-def test_ternary_error_bounded(n):
+def _check_ternary_error_bounded(n):
     g = {"w": jax.random.normal(jax.random.PRNGKey(n), (n,))}
     payload, _ = CP.ternary_encode(g)
     dec = CP.ternary_decode(payload)
     s = float(jnp.max(jnp.abs(g["w"])))
     # threshold variant: |g - dec| <= s/2 elementwise
     assert float(jnp.max(jnp.abs(g["w"] - dec["w"]))) <= s / 2 + 1e-6
+
+
+@pytest.mark.parametrize("n,frac", [(1, 1.0), (2, 0.001), (7, 0.5),
+                                    (64, 0.1), (333, 0.03), (2000, 0.01)])
+def test_topk_roundtrip_parametrized(n, frac):
+    _check_topk_roundtrip(n, frac)
+
+
+@pytest.mark.parametrize("n", [1, 2, 5, 33, 256, 999])
+def test_ternary_error_bounded_parametrized(n):
+    _check_ternary_error_bounded(n)
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(1, 2000), st.floats(0.001, 1.0))
+    @settings(max_examples=50, deadline=None)
+    def test_topk_roundtrip_properties(n, frac):
+        _check_topk_roundtrip(n, frac)
+
+    @given(st.integers(1, 999))
+    @settings(max_examples=30, deadline=None)
+    def test_ternary_error_bounded(n):
+        _check_ternary_error_bounded(n)
 
 
 def test_error_feedback_reduces_bias():

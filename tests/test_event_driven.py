@@ -1,0 +1,155 @@
+"""Event-driven coordination: subscriptions replace polling.
+
+Three contracts from the issue:
+(a) an event-driven simulation processes ZERO poll events,
+(b) polling and subscription modes are semantically identical — same task
+    counts and final model version on a fixed scenario (including churn and
+    heterogeneous speeds),
+(c) subscriptions are churn-safe — a wake delivered to a volunteer that has
+    left requeues its leases and passes the wake on, so no event is lost and
+    the run still completes.
+
+Plus: the sharded QueueServer federation is semantics-invisible, for both the
+timing Simulator and the REAL Coordinator (bit-identical model).
+"""
+from __future__ import annotations
+
+import math
+
+import pytest
+
+from repro.core.simulator import (CostModel, Simulator, SimResult,
+                                  SyntheticProblem, VolunteerSpec)
+
+
+def _cost():
+    return CostModel(flops_per_sec=2.0e9, latency=0.020, bandwidth=12.5e6,
+                     poll_interval=0.200, cache_bytes=1e12)
+
+
+def _problem():
+    return SyntheticProblem(n_versions=6, n_mb=8, model_bytes=1.0e6,
+                            grad_bytes=2.0e5, map_flops=1.0e9,
+                            reduce_flops=2.0e7)
+
+
+def _specs(n=6, churn=False):
+    specs = []
+    for i in range(n):
+        specs.append(VolunteerSpec(
+            f"v{i:02d}", speed=0.6 + 0.25 * i,
+            join_time=0.0 if i % 3 else 0.5 * i,
+            leave_time=25.0 + 4.0 * i if (churn and i % 2 == 0) else math.inf))
+    return specs
+
+
+def _run(mode, *, churn=False, n_shards=1):
+    sim = Simulator(_problem(), _specs(churn=churn), cost=_cost(), mode=mode,
+                    visibility_timeout=1e9, n_shards=n_shards)
+    return sim.run()
+
+
+def test_event_mode_has_zero_poll_events():
+    res = _run("event")
+    assert res.final_version == 6
+    assert res.poll_events == 0
+    assert res.mode == "event"
+
+
+def test_poll_mode_still_polls():
+    res = _run("poll")
+    assert res.final_version == 6
+    assert res.poll_events > 0
+    assert res.mode == "poll"
+
+
+@pytest.mark.parametrize("churn", [False, True])
+def test_modes_agree_on_tasks_and_version(churn):
+    ev = _run("event", churn=churn)
+    po = _run("poll", churn=churn)
+    assert ev.final_version == po.final_version == 6
+    n_tasks = 6 * (8 + 1)            # n_versions x (n_mb maps + 1 reduce)
+    assert sum(ev.tasks_by_worker.values()) == n_tasks
+    assert sum(po.tasks_by_worker.values()) == n_tasks
+    # event mode does strictly less bookkeeping work for the same semantics
+    assert ev.events < po.events
+
+
+def test_event_mode_far_fewer_events_than_polling():
+    """With volunteers >> tasks (the 10k-browser regime scaled down), polling
+    burns events on every idle waiter while subscriptions stay silent."""
+    problem = SyntheticProblem(n_versions=12, n_mb=8, model_bytes=1.0e6,
+                               grad_bytes=2.0e5, map_flops=1.0e9,
+                               reduce_flops=2.0e7)
+    specs = [VolunteerSpec(f"v{i:03d}", speed=0.7 + (i % 7) * 0.2)
+             for i in range(300)]
+    results = {}
+    for mode in ("event", "poll"):
+        results[mode] = Simulator(problem, specs, cost=_cost(), mode=mode,
+                                  visibility_timeout=1e9).run()
+    ev, po = results["event"], results["poll"]
+    assert ev.final_version == po.final_version == 12
+    assert sum(ev.tasks_by_worker.values()) == \
+        sum(po.tasks_by_worker.values()) == 12 * 9
+    assert ev.events * 10 <= po.events, (ev.events, po.events)
+
+
+def test_subscription_survives_churn_of_woken_consumer():
+    """(c) volunteers leave while subscribed or while holding leases: the wake
+    is passed on (requeue/kick) and the remaining volunteers finish the run."""
+    problem = _problem()
+    specs = [
+        # v00 grabs tasks early, then leaves mid-run while holding a lease
+        VolunteerSpec("v00", speed=2.0, leave_time=6.0),
+        # v01 joins at once but is slow: it spends time subscribed/waiting
+        VolunteerSpec("v01", speed=0.5),
+        # v02 leaves so early it mostly exists as a dangling subscription
+        VolunteerSpec("v02", speed=1.0, leave_time=1.0),
+        VolunteerSpec("v03", speed=1.0, join_time=10.0),
+    ]
+    res = Simulator(problem, specs, cost=_cost(), mode="event",
+                    visibility_timeout=1e9).run()
+    assert res.final_version == 6
+    assert res.poll_events == 0
+    assert sum(res.tasks_by_worker.values()) == 6 * 9
+    # the departed volunteers' leases were requeued and re-executed by others
+    assert res.requeues >= 1
+    assert "v00" not in res.tasks_by_worker or res.tasks_by_worker.get(
+        "v03", 0) > 0
+
+
+def test_sharded_federation_matches_single_server_simulation():
+    single = _run("event", churn=True, n_shards=1)
+    sharded = _run("event", churn=True, n_shards=4)
+    assert sharded.final_version == single.final_version == 6
+    assert sum(sharded.tasks_by_worker.values()) == \
+        sum(single.tasks_by_worker.values())
+    assert sharded.makespan == pytest.approx(single.makespan)
+
+
+def test_coordinator_event_driven_and_sharded_bitmatch_sequential():
+    """The REAL coordinator on the same subscription primitives (and on a
+    4-shard federation) still reproduces the paper's exact-equality claim."""
+    jax = pytest.importorskip("jax")
+    import numpy as np
+    from repro.configs.paper_lstm import TrainParams
+    from repro.core.coordinator import Coordinator
+    from repro.core.mapreduce import TrainingProblem, sequential_accumulated
+    from repro.data.text import synthetic_corpus
+
+    tp = TrainParams(batch_size=8, examples_per_epoch=32, num_epochs=1,
+                     sample_len=16, mini_batch_size=4,
+                     mini_batches_to_accumulate=2)
+    prob = TrainingProblem.paper_problem(corpus=synthetic_corpus(3000), tp=tp)
+    seq_params, _, _ = sequential_accumulated(prob)
+
+    def bitmatch(a, b):
+        return all(bool((np.asarray(x) == np.asarray(y)).all())
+                   for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+    churn = [(2, "leave", "w0"), (5, "join", "w7")]
+    res = Coordinator(prob, n_workers=3, churn=churn).run()
+    assert bitmatch(res.params, seq_params)
+    res_shard = Coordinator(prob, n_workers=3, churn=churn, n_shards=4).run()
+    assert bitmatch(res_shard.params, seq_params)
+    assert res_shard.final_version == res.final_version == prob.n_versions

@@ -65,10 +65,9 @@ def test_dryrun_small_mesh_subprocess(tmp_path):
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
 import json, jax
-from jax.sharding import AxisType
 from repro.launch import dryrun as DR
-mesh = jax.make_mesh((4, 4), ("data", "model"),
-                     axis_types=(AxisType.Auto,) * 2)
+from repro.launch.mesh import compat_make_mesh
+mesh = compat_make_mesh((4, 4), ("data", "model"))
 for arch, shape in [("stablelm-1.6b", "train_4k"),
                     ("falcon-mamba-7b", "decode_32k")]:
     rec = DR.lower_one(arch, shape, mesh)

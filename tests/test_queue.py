@@ -1,17 +1,26 @@
 """Queue-server semantics: the paper's fault-tolerance claims as invariants.
 
-Property (hypothesis): under ANY interleaving of publish/lease/ack/nack/
-expire/drop-consumer, no message is lost and no message is acked twice —
-every published message is eventually either pending, in flight, or acked
-exactly once ("tasks are not removed from the queue until an ACK").
+Property (hypothesis, when installed): under ANY interleaving of publish/lease/
+ack/nack/expire/drop-consumer, no message is lost and no message is acked
+twice — every published message is eventually either pending, in flight, or
+acked exactly once ("tasks are not removed from the queue until an ACK").
+The same invariant also runs as a plain seeded-random test so the suite does
+not depend on hypothesis.
 """
 from __future__ import annotations
 
 import math
+import random
 
-from hypothesis import given, settings, strategies as st
+import pytest
 
-from repro.core.queue import Queue, QueueServer
+from repro.core.queue import Queue, QueueServer, ShardedQueueServer
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 
 def test_lease_ack_basic():
@@ -58,21 +67,160 @@ def test_nack_front_preserves_order():
     assert body2 == "a"
 
 
-@st.composite
-def _script(draw):
-    n_msgs = draw(st.integers(1, 12))
-    ops = draw(st.lists(st.tuples(
-        st.sampled_from(["lease", "ack", "nack", "expire", "drop"]),
-        st.integers(0, 3),          # worker id
-        st.floats(0, 100)),          # time
-        min_size=1, max_size=60))
-    return n_msgs, ops
+def test_next_deadline_tracks_releases():
+    q = Queue("q", default_timeout=10.0)
+    q.publish("a")
+    q.publish("b")
+    t1, _ = q.lease("w0", now=0.0)
+    t2, _ = q.lease("w1", now=3.0)
+    assert q.next_deadline() == 10.0
+    q.ack(t1)
+    assert q.next_deadline() == 13.0       # stale heap entry skipped
+    q.ack(t2)
+    assert q.next_deadline() is None
 
 
-@given(_script())
-@settings(max_examples=200, deadline=None)
-def test_no_loss_no_double_completion(script):
-    n_msgs, ops = script
+# ---------------------------------------------------------------------------
+# subscriptions (event-driven waits)
+# ---------------------------------------------------------------------------
+
+def test_subscribe_woken_by_publish():
+    q = Queue("q")
+    woken = []
+    q.subscribe("w0", lambda: woken.append("w0"))
+    q.subscribe("w1", lambda: woken.append("w1"))
+    q.publish("a")
+    assert woken == ["w0"]                 # exactly one waiter per event, FIFO
+    q.publish("b")
+    assert woken == ["w0", "w1"]
+
+
+def test_subscribe_woken_by_requeue():
+    q = Queue("q")
+    q.publish("a")
+    tag, _ = q.lease("w0", 0.0)
+    woken = []
+    q.subscribe("w1", lambda: woken.append("w1"))
+    q.nack(tag)
+    assert woken == ["w1"]
+
+
+def test_subscribe_fires_immediately_after_missed_event():
+    q = Queue("q")
+    q.publish("a")                         # nobody waiting -> signal banked
+    woken = []
+    q.subscribe("w0", lambda: woken.append("w0"))
+    assert woken == ["w0"]                 # no lost wakeup
+    q.subscribe("w1", lambda: woken.append("w1"))
+    assert woken == ["w0"]                 # signal consumed once
+
+
+def test_publish_kind_ignores_requeues():
+    q = Queue("q")
+    q.publish("a")
+    tag, _ = q.lease("w0", 0.0)
+    woken = []
+    # the earlier publish was banked: first subscribe fires immediately
+    q.subscribe("barrier", lambda: woken.append("banked"), kind="publish")
+    assert woken == ["banked"]
+    q.subscribe("barrier", lambda: woken.append("pub"), kind="publish")
+    q.nack(tag)                            # requeue must NOT wake the barrier
+    assert woken == ["banked"]
+    q.publish("b")
+    assert woken == ["banked", "pub"]
+
+
+def test_unsubscribe_and_kick_pass_wake_to_next_waiter():
+    q = Queue("q")
+    woken = []
+    q.subscribe("gone", lambda: woken.append("gone"))
+    q.subscribe("w1", lambda: woken.append("w1"))
+    assert q.unsubscribe("gone") == 1
+    q.publish("a")
+    assert woken == ["w1"]
+    # a consumed wake handed back via kick reaches the next waiter
+    q.subscribe("w2", lambda: woken.append("w2"))
+    q.kick()
+    assert woken == ["w1", "w2"]
+
+
+def test_queueserver_namespaces():
+    qs = QueueServer()
+    qs.publish("a", 1)
+    qs.publish("b", 2)
+    assert qs.depth("a") == 1 and qs.depth("b") == 1
+    got = qs.lease("a", "w0", 0.0)
+    assert got and got[1] == 1
+    assert not qs.drained()
+    qs.ack("a", got[0])
+    got = qs.lease("b", "w0", 0.0)
+    qs.ack("b", got[0])
+    assert qs.drained()
+
+
+# ---------------------------------------------------------------------------
+# sharded federation (consistent-hash routing)
+# ---------------------------------------------------------------------------
+
+def test_sharded_routing_is_stable_and_total():
+    fed = ShardedQueueServer(4)
+    names = [f"map-results:v{i}" for i in range(64)] + ["initial"]
+    first = {n: fed.shard_of(n) for n in names}
+    for n in names:                        # deterministic routing
+        assert fed.shard_of(n) == first[n]
+        assert 0 <= first[n] < 4
+    # the ring must actually spread queues over shards
+    fed2 = ShardedQueueServer(4)
+    for n in names:
+        fed2.declare(n)
+    loads = fed2.shard_loads()
+    assert sum(loads) == len(names)
+    assert sum(1 for l in loads if l > 0) >= 3, loads
+
+
+def test_sharded_consistent_hash_minimal_remap():
+    a = ShardedQueueServer(4)
+    b = ShardedQueueServer(5)              # one shard added
+    names = [f"q{i}" for i in range(400)]
+    moved = sum(1 for n in names if a.shard_of(n) != b.shard_of(n))
+    # consistent hashing: ~1/K of keys remap, far from all of them
+    assert moved < len(names) * 0.5, moved
+
+
+def test_sharded_same_semantics_as_single_server():
+    single, fed = QueueServer(), ShardedQueueServer(3)
+    for qs in (single, fed):
+        for i in range(5):
+            qs.publish("tasks", i)
+        got = qs.lease("tasks", "w0", 0.0)
+        assert got[1] == 0
+        qs.nack("tasks", got[0])
+        got2 = qs.lease("tasks", "w0", 0.0)
+        assert got2[1] == 0                # nack-to-front preserved
+        qs.ack("tasks", got2[0])
+        assert qs.depth("tasks") == 4
+        assert qs.drop_consumer("w0") == 0
+        assert not qs.drained(["tasks"])
+    assert fed.total_requeued == single.total_requeued == 1
+
+
+def test_sharded_subscribe_and_expire():
+    fed = ShardedQueueServer(3, default_timeout=10.0)
+    woken = []
+    fed.subscribe("tasks", "w0", lambda: woken.append("w0"))
+    fed.publish("tasks", "a")
+    assert woken == ["w0"]
+    tag, _ = fed.lease("tasks", "w1", 0.0)
+    assert fed.next_deadline() == 10.0
+    assert fed.expire_all(10.0) == 1
+    assert fed.depth("tasks") == 1
+
+
+# ---------------------------------------------------------------------------
+# no-loss / no-double-ack invariant: plain seeded port of the property test
+# ---------------------------------------------------------------------------
+
+def _run_script(n_msgs, ops):
     q = Queue("q", default_timeout=15.0)
     for i in range(n_msgs):
         q.publish(i)
@@ -104,15 +252,29 @@ def test_no_loss_no_double_completion(script):
     assert q.acked == len(acked)
 
 
-def test_queueserver_namespaces():
-    qs = QueueServer()
-    qs.publish("a", 1)
-    qs.publish("b", 2)
-    assert qs.depth("a") == 1 and qs.depth("b") == 1
-    got = qs.lease("a", "w0", 0.0)
-    assert got and got[1] == 1
-    assert not qs.drained()
-    qs.ack("a", got[0])
-    got = qs.lease("b", "w0", 0.0)
-    qs.ack("b", got[0])
-    assert qs.drained()
+@pytest.mark.parametrize("seed", range(25))
+def test_no_loss_no_double_completion_seeded(seed):
+    rng = random.Random(seed)
+    n_msgs = rng.randint(1, 12)
+    ops = [(rng.choice(["lease", "ack", "nack", "expire", "drop"]),
+            rng.randint(0, 3), rng.uniform(0, 100))
+           for _ in range(rng.randint(1, 60))]
+    _run_script(n_msgs, ops)
+
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def _script(draw):
+        n_msgs = draw(st.integers(1, 12))
+        ops = draw(st.lists(st.tuples(
+            st.sampled_from(["lease", "ack", "nack", "expire", "drop"]),
+            st.integers(0, 3),          # worker id
+            st.floats(0, 100)),          # time
+            min_size=1, max_size=60))
+        return n_msgs, ops
+
+    @given(_script())
+    @settings(max_examples=200, deadline=None)
+    def test_no_loss_no_double_completion(script):
+        n_msgs, ops = script
+        _run_script(n_msgs, ops)
