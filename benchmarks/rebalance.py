@@ -1,0 +1,79 @@
+"""Elastic federation rebalance benchmark: cost of a live shard join/leave.
+
+The consistent-hash contract is that a membership change remaps ~1/K of queue
+names (K = post-change shard count for a join, pre-change count for a leave)
+and leaves every other queue untouched. This benchmark loads a federation with
+N live queues — pending backlogs AND leased in-flight messages with visibility
+deadlines — then walks the membership up and back down, measuring for every
+change:
+
+- fraction of queue names migrated vs the 1.5/K acceptance bound,
+- wall time of the rebalance (full live-state migration included),
+- a conservation census (publishes/acks/depth/in-flight/pending bodies) that
+  must be bit-identical across the change: a leave loses zero messages.
+
+CSV: op,shards_before,shards_after,queues,moved,frac,bound,wall_ms
+
+Usage: PYTHONPATH=src python benchmarks/rebalance.py [--quick] [--queues N]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.core.chaos import federation_census
+from repro.core.queue import ShardedQueueServer
+
+
+def build_federation(k: int, n_queues: int) -> ShardedQueueServer:
+    fed = ShardedQueueServer(k, default_timeout=30.0)
+    for i in range(n_queues):
+        name = f"queue-{i:05d}"
+        fed.publish(name, f"{i}-a")
+        fed.publish(name, f"{i}-b")
+        if i % 2 == 0:                       # half the queues hold a live lease
+            fed.lease(name, f"w{i % 17}", now=float(i % 9))
+    return fed
+
+
+def main(quick: bool = False, queues: int = 0) -> None:
+    n = queues or (2_000 if quick else 20_000)
+    k0, k_max = 4, (6 if quick else 10)
+    fed = build_federation(k0, n)
+    print("op,shards_before,shards_after,queues,moved,frac,bound,wall_ms")
+    worst = 0.0
+    plan = [("join", None)] * (k_max - k0) + \
+           [("leave", i % 3) for i in range(k_max - k0 + 1)]
+    for op, arg in plan:
+        k_before = len(fed.shards)
+        before = federation_census(fed)
+        t0 = time.perf_counter()
+        if op == "join":
+            moved = fed.add_shard()
+        else:
+            moved = fed.remove_shard(arg % k_before)
+        wall_ms = (time.perf_counter() - t0) * 1e3
+        k_after = len(fed.shards)
+        k_bound = k_after if op == "join" else k_before
+        frac, bound = len(moved) / n, 1.5 / k_bound
+        worst = max(worst, frac * k_bound)
+        print(f"rebalance_{op},{k_before},{k_after},{n},{len(moved)},"
+              f"{frac:.4f},{bound:.4f},{wall_ms:.1f}")
+        assert frac <= bound, \
+            f"{op}: moved {frac:.3f} of names, above the {bound:.3f} bound"
+        assert federation_census(fed) == before, \
+            f"{op}: rebalance changed live queue state"
+        for q in fed.queues.values():
+            q.check_invariants()
+    print(f"# OK: every membership change moved <= {worst:.2f}/K of {n} "
+          f"queue names (bound 1.5/K), conserved all live state, and kept "
+          f"per-queue invariants")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="2k queues, 4->6 shards (CI smoke)")
+    ap.add_argument("--queues", type=int, default=0,
+                    help="override queue count")
+    main(**vars(ap.parse_args()))

@@ -11,3 +11,13 @@ python -m pytest -x -q "$@"
 # smoke the volunteer-scaling benchmark (1k volunteers, ~5 s): proves the
 # event-driven coordination win is still >=10x at identical semantics
 python benchmarks/volunteer_scaling.py --quick
+
+# 5-seed chaos smoke (<30 s): for fixed seeds x {churn, reshard, mixed}
+# schedules, in both event and poll modes — including a tight-visibility leg
+# with live lease expiry — a sharded federation's SimResult must bit-match the
+# single-server SimResult (metamorphic contract of ISSUE 2)
+python -m repro.core.chaos --seeds 5
+
+# elastic rebalance smoke: every shard join/leave migrates <= 1.5/K of queue
+# names, conserves all live state, and keeps per-queue invariants
+python benchmarks/rebalance.py --quick

@@ -3,9 +3,11 @@
 K volunteer state machines are interleaved round-robin over the shared
 QueueServer/DataServer, actually computing gradients and RMSprop updates with
 JAX. The logical clock is the scheduler iteration count (used for visibility
-timeouts). Churn is injected as (step, 'leave'/'join', volunteer) events:
-a leaving volunteer's leased tasks requeue, exactly like closing the browser
-tab mid-task.
+timeouts). Churn is injected as (step, kind, arg) events: 'leave'/'join' of a
+volunteer (a leaving volunteer's leased tasks requeue, exactly like closing
+the browser tab mid-task), and — when running on a ShardedQueueServer —
+'add_shard'/'remove_shard' membership changes, which rebalance the federation
+live (queues migrate with their full state; see queue.ShardedQueueServer).
 
 Waiting is event-driven, on the same primitives the Simulator uses: a
 volunteer that would block (empty task queue, unpublished model version, or an
@@ -115,6 +117,13 @@ class Coordinator:
                     del self.volunteers[vid]
                 elif kind == "join" and vid not in self.volunteers:
                     self.volunteers[vid] = _Volunteer(vid)
+                elif kind == "add_shard" and \
+                        isinstance(self.qs, ShardedQueueServer):
+                    self.qs.add_shard()
+                elif kind == "remove_shard" and \
+                        isinstance(self.qs, ShardedQueueServer) and \
+                        len(self.qs.shards) > 1:
+                    self.qs.remove_shard(int(vid) % len(self.qs.shards))
             if not self.volunteers:
                 # everyone left; semantically the problem just pauses (paper:
                 # "If no one is collaborating, the problem simply stops").
@@ -122,6 +131,8 @@ class Coordinator:
                     raise RuntimeError("no volunteers and no future joins")
                 step = max(step + 1, self.churn[churn_i][0])
                 continue
+            # O(expired): expire_all self-gates on the server's lazy deadline
+            # index and returns immediately while nothing is due
             self.qs.expire_all(step)
             ran_any = False
             for vid in list(self.volunteers):

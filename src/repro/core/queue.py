@@ -22,7 +22,15 @@ the discrete-event simulator (seconds) drive the same implementation.
 ``ShardedQueueServer`` federates K ``QueueServer`` instances behind the same
 API, routing queue names with consistent hashing — the paper's §IV observation
 that "it is possible to use several QueueServers in which each one stores a
-different type of task", made concrete as a load-balanced hash ring.
+different type of task", made concrete as a load-balanced hash ring. The
+federation is *elastic*: ``add_shard()`` / ``remove_shard(i)`` recompute the
+ring and migrate the full live state of every remapped queue (pending FIFO,
+in-flight table + deadlines, banked signals, registered waiters, counters), so
+a rebalance is invisible to consumers except that ~1/K of queue names change
+owner. Cross-queue side-effect order (expiry requeues, consumer drops) is
+defined by (deadline, queue-name) / queue-name, NOT by shard layout, so a
+sharded run is bit-identical to a single-server run — asserted by the chaos
+metamorphic suite (``repro.core.chaos``).
 """
 from __future__ import annotations
 
@@ -51,6 +59,10 @@ class Queue:
         self._pending: deque = deque()            # (tag, body)
         self._in_flight: Dict[int, _InFlight] = {}
         self._tags = itertools.count()
+        # owning QueueServer's deadline index hook (set by declare/attach):
+        # called with (qname, deadline) whenever a finite deadline is created,
+        # so the server can skip expiry scans until something can have expired.
+        self._server_note: Optional[Callable[[str, float], None]] = None
         # expiry index: (deadline, tag) min-heap; entries go stale when a tag is
         # acked or re-leased — validated lazily against the in-flight table.
         self._deadlines: List[Tuple[float, int]] = []
@@ -85,6 +97,8 @@ class Queue:
         self._in_flight[tag] = _InFlight(body, consumer, deadline, 0)
         if math.isfinite(deadline):
             heapq.heappush(self._deadlines, (deadline, tag))
+            if self._server_note is not None:
+                self._server_note(self.name, deadline)
         return tag, body
 
     def ack(self, tag: int) -> bool:
@@ -212,6 +226,33 @@ class Queue:
     def peek_all(self) -> List[Any]:
         return [b for _, b in self._pending]
 
+    def check_invariants(self) -> None:
+        """Structural invariants that must hold at every quiescent point.
+
+        - a tag is pending XOR in flight (never both, never duplicated),
+        - every finite-deadline in-flight message has a live entry in the
+          deadline heap (stale heap entries are allowed — they are lazily
+          discarded — but a deadline the heap does not cover would never
+          expire),
+        - conservation: every publish is accounted for — acked, still
+          pending, or in flight; nothing is lost to nothing.
+        """
+        pending_tags = [t for t, _ in self._pending]
+        assert len(pending_tags) == len(set(pending_tags)), \
+            f"{self.name}: duplicate tag in pending"
+        overlap = set(pending_tags) & set(self._in_flight)
+        assert not overlap, f"{self.name}: tags both pending and in flight: {overlap}"
+        heap_entries = set(self._deadlines)
+        for tag, inf in self._in_flight.items():
+            if math.isfinite(inf.deadline):
+                assert (inf.deadline, tag) in heap_entries, \
+                    f"{self.name}: in-flight tag {tag} deadline " \
+                    f"{inf.deadline} missing from deadline heap"
+        assert self.published == self.acked + self.depth + self.in_flight, \
+            f"{self.name}: conservation violated: published={self.published} " \
+            f"!= acked={self.acked} + depth={self.depth} + " \
+            f"in_flight={self.in_flight}"
+
 
 class QueueServer:
     """Named queues. Multiple QueueServers are modelled by multiple instances
@@ -221,12 +262,45 @@ class QueueServer:
     def __init__(self, default_timeout: float = float("inf")):
         self.default_timeout = default_timeout
         self.queues: Dict[str, Queue] = {}
+        # server-level deadline index: (deadline, qname), lazily pruned — lets
+        # next_deadline()/expire_all() cost O(log) instead of O(all queues).
+        self._dl_heap: List[Tuple[float, str]] = []
+
+    def _note_deadline(self, qname: str, deadline: float) -> None:
+        heapq.heappush(self._dl_heap, (deadline, qname))
 
     def declare(self, name: str, timeout: Optional[float] = None) -> Queue:
         if name not in self.queues:
-            self.queues[name] = Queue(
-                name, self.default_timeout if timeout is None else timeout)
+            q = Queue(name, self.default_timeout if timeout is None else timeout)
+            q._server_note = self._note_deadline
+            self.queues[name] = q
         return self.queues[name]
+
+    # -- live-state migration (elastic federation) -----------------------------
+    def detach(self, name: str) -> Queue:
+        """Remove a queue — with its FULL live state — for migration to
+        another server. Stale entries for it in this server's deadline index
+        are pruned lazily."""
+        q = self.queues.pop(name)
+        q._server_note = None
+        return q
+
+    def attach(self, q: Queue) -> None:
+        """Adopt a migrated queue: index its live in-flight deadlines in this
+        server's deadline heap (and compact the queue's own heap, dropping
+        entries that went stale at the source). Pending FIFO order, the
+        in-flight table, banked signals, registered waiters, the tag counter
+        and all counters ride along inside the Queue — no callback fires, so
+        migration is invisible to consumers."""
+        assert q.name not in self.queues, f"queue {q.name!r} already attached"
+        q._deadlines = [(inf.deadline, tag)
+                        for tag, inf in q._in_flight.items()
+                        if math.isfinite(inf.deadline)]
+        heapq.heapify(q._deadlines)
+        for dl, _ in q._deadlines:
+            heapq.heappush(self._dl_heap, (dl, q.name))
+        q._server_note = self._note_deadline
+        self.queues[q.name] = q
 
     def publish(self, qname: str, body: Any) -> int:
         return self.declare(qname).publish(body)
@@ -251,16 +325,38 @@ class QueueServer:
     def kick(self, qname: str) -> None:
         self.declare(qname).kick()
 
+    def _peek_deadline(self) -> Optional[Tuple[float, str]]:
+        """Earliest live (deadline, qname), lazily pruning stale index entries
+        (acked / re-leased / migrated-away queues)."""
+        while self._dl_heap:
+            dl, qn = self._dl_heap[0]
+            q = self.queues.get(qn)
+            if q is not None and q.next_deadline() == dl:
+                return dl, qn
+            heapq.heappop(self._dl_heap)
+        return None
+
     def expire_all(self, now: float) -> int:
-        return sum(q.expire(now) for q in self.queues.values())
+        """Requeue every expired in-flight message, queue by queue in
+        (deadline, qname) order — O(expired), and an order that is a pure
+        function of queue state (never of shard layout)."""
+        n = 0
+        while True:
+            head = self._peek_deadline()
+            if head is None or head[0] > now:
+                break
+            n += self.queues[head[1]].expire(now)
+        return n
 
     def next_deadline(self) -> Optional[float]:
-        dls = [d for d in (q.next_deadline() for q in self.queues.values())
-               if d is not None]
-        return min(dls) if dls else None
+        head = self._peek_deadline()
+        return None if head is None else head[0]
 
     def drop_consumer(self, consumer: str) -> int:
-        return sum(q.drop_consumer(consumer) for q in self.queues.values())
+        # qname order, so requeue notifications fire in an order independent
+        # of queue-creation (and, federated, shard) layout
+        return sum(self.queues[n].drop_consumer(consumer)
+                   for n in sorted(self.queues))
 
     def drained(self, names: Optional[Iterable[str]] = None) -> bool:
         qs = (self.queues[n] for n in names if n in self.queues) if names \
@@ -294,22 +390,71 @@ class ShardedQueueServer:
     the paper's "several QueueServers" deployment. Every per-queue operation is
     a pure delegation to the owning shard, so federation is semantics-invisible
     (asserted by tests: a sharded run bit-matches a single-server run).
+
+    The federation is elastic: ``add_shard()`` / ``remove_shard(i)`` change
+    ring membership at runtime and migrate the full live state of every
+    remapped queue to its new owner (see ``QueueServer.detach/attach``). Shards
+    carry stable ids independent of their list position, so a membership
+    change only adds/removes that member's virtual nodes — every other vnode
+    keeps its ring position, which is what bounds the remap to ~1/K of names.
+    Both methods return the migrated queue names (the rebalance observable).
     """
 
     def __init__(self, n_shards: int, default_timeout: float = float("inf"),
                  *, vnodes: int = 64):
         if n_shards < 1:
             raise ValueError("n_shards must be >= 1")
-        self.shards: List[QueueServer] = [
-            QueueServer(default_timeout) for _ in range(n_shards)]
         self.default_timeout = default_timeout
-        ring: List[Tuple[int, int]] = []
-        for i in range(n_shards):
-            for r in range(vnodes):
-                ring.append((_stable_hash(f"qshard-{i}#{r}"), i))
-        ring.sort()
-        self._ring_keys = [h for h, _ in ring]
-        self._ring_vals = [i for _, i in ring]
+        self._vnodes = vnodes
+        self.shards: List[QueueServer] = []
+        self._sids: List[int] = []            # stable id per shard (ring key)
+        self._next_sid = 0
+        self._ring: List[Tuple[int, int]] = []  # sorted (hash, sid)
+        self._ring_keys: List[int] = []
+        self._ring_vals: List[int] = []         # shard INDEX per ring slot
+        for _ in range(n_shards):
+            self.add_shard()
+
+    def _reindex(self) -> None:
+        index_of = {sid: i for i, sid in enumerate(self._sids)}
+        self._ring_keys = [h for h, _ in self._ring]
+        self._ring_vals = [index_of[sid] for _, sid in self._ring]
+
+    def add_shard(self) -> List[str]:
+        """Join a new (empty) shard and migrate the ~1/K of live queues whose
+        ring successor is now one of its virtual nodes. Returns the migrated
+        queue names."""
+        sid = self._next_sid
+        self._next_sid += 1
+        self.shards.append(QueueServer(self.default_timeout))
+        self._sids.append(sid)
+        for r in range(self._vnodes):
+            bisect.insort(self._ring, (_stable_hash(f"qshard-{sid}#{r}"), sid))
+        self._reindex()
+        migrated: List[str] = []
+        for si, shard in enumerate(self.shards[:-1]):
+            for name in sorted(n for n in shard.queues
+                               if self.shard_of(n) != si):
+                self.shards[self.shard_of(name)].attach(shard.detach(name))
+                migrated.append(name)
+        return migrated
+
+    def remove_shard(self, index: int) -> List[str]:
+        """Leave: retire the shard at ``index``, migrating ALL of its live
+        queues (≈1/K of the federation) to their new ring successors — zero
+        messages lost, waiters and banked signals included. Returns the
+        migrated queue names."""
+        if len(self.shards) <= 1:
+            raise ValueError("cannot remove the last shard")
+        sid = self._sids.pop(index)
+        src = self.shards.pop(index)
+        self._ring = [(h, s) for h, s in self._ring if s != sid]
+        self._reindex()
+        migrated: List[str] = []
+        for name in sorted(src.queues):
+            self.shards[self.shard_of(name)].attach(src.detach(name))
+            migrated.append(name)
+        return migrated
 
     def shard_of(self, qname: str) -> int:
         """Index of the shard owning this queue name (clockwise successor)."""
@@ -352,7 +497,22 @@ class ShardedQueueServer:
         return sum(s.unsubscribe(consumer) for s in self.shards)
 
     def expire_all(self, now: float) -> int:
-        return sum(s.expire_all(now) for s in self.shards)
+        """Merge per-shard deadline indexes so expiry requeues fire in global
+        (deadline, qname) order — identical to a single server holding the
+        same queues, whatever the shard layout."""
+        n = 0
+        while True:
+            best: Optional[Tuple[float, str]] = None
+            best_shard: Optional[QueueServer] = None
+            for s in self.shards:
+                head = s._peek_deadline()
+                if head is not None and head[0] <= now and \
+                        (best is None or head < best):
+                    best, best_shard = head, s
+            if best is None:
+                break
+            n += best_shard.queues[best[1]].expire(now)
+        return n
 
     def next_deadline(self) -> Optional[float]:
         dls = [d for d in (s.next_deadline() for s in self.shards)
@@ -360,7 +520,10 @@ class ShardedQueueServer:
         return min(dls) if dls else None
 
     def drop_consumer(self, consumer: str) -> int:
-        return sum(s.drop_consumer(consumer) for s in self.shards)
+        # global qname order — matches the single-server requeue order
+        named = sorted(((n, s) for s in self.shards for n in s.queues),
+                       key=lambda t: t[0])
+        return sum(s.queues[n].drop_consumer(consumer) for n, s in named)
 
     def drained(self, names: Optional[Iterable[str]] = None) -> bool:
         if names:

@@ -143,6 +143,7 @@ class SimResult:
     events: int = 0                  # simulator events processed
     poll_events: int = 0             # events that were poll reschedules
     mode: str = "event"
+    expire_scans: int = 0            # expiry sweeps actually performed
 
 
 class Simulator:
@@ -183,6 +184,8 @@ class Simulator:
         self.done_time = 0.0
         self.events = 0
         self.poll_events = 0
+        self.expire_scans = 0
+        self.expired = 0                 # messages requeued by expiry sweeps
 
     # ------------------------------------------------------------------ engine
     def _post(self, t: float, fn: Callable):
@@ -201,13 +204,19 @@ class Simulator:
                 raise RuntimeError("simulator runaway")
             t, _, fn = heapq.heappop(self._heap)
             self._now = t
-            self.qs.expire_all(t)
+            # O(expired), not O(queues x events): sweep only when the earliest
+            # live visibility deadline has actually passed — each sweep is then
+            # guaranteed to requeue at least one message.
+            dl = self.qs.next_deadline()
+            if dl is not None and dl <= t:
+                self.expire_scans += 1
+                self.expired += self.qs.expire_all(t)
             fn()
         return SimResult(self.done_time, self.timeline,
                          dict(self.tasks_by_worker), self.qs.total_requeued,
                          self.ds.latest_version, self.bytes_sent,
                          dict(self.busy), self.events, self.poll_events,
-                         self.mode)
+                         self.mode, self.expire_scans)
 
     def _alive(self, vid: str) -> bool:
         s = self.specs[vid]

@@ -5,5 +5,32 @@ import os
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import jax  # noqa: E402
+import pytest  # noqa: E402
 
 jax.config.update("jax_default_matmul_precision", "highest")
+
+# Queue-heavy test modules get every Queue constructed during the test
+# checked for structural invariants (tag disjointness, deadline-heap cover,
+# publish conservation) at teardown — see Queue.check_invariants.
+_QUEUE_INVARIANT_MODULES = ("test_queue", "test_chaos", "test_elastic")
+
+
+@pytest.fixture(autouse=True)
+def _queue_invariants(request, monkeypatch):
+    modname = request.module.__name__
+    if not any(m in modname for m in _QUEUE_INVARIANT_MODULES):
+        yield
+        return
+    from repro.core.queue import Queue
+
+    created = []
+    orig_init = Queue.__init__
+
+    def tracking_init(self, *args, **kwargs):
+        orig_init(self, *args, **kwargs)
+        created.append(self)
+
+    monkeypatch.setattr(Queue, "__init__", tracking_init)
+    yield
+    for q in created:
+        q.check_invariants()

@@ -1,0 +1,134 @@
+"""Chaos harness: deterministic fault injection + the metamorphic contract.
+
+Headline property (ISSUE 2): shard membership is semantics-invisible, so ANY
+chaos schedule — volunteer churn, forced expiry, live shard add/remove — must
+produce the IDENTICAL SimResult on a K-shard federation as on one QueueServer,
+in both event and poll modes. The ChaosSimulator additionally asserts, around
+every membership change, that migration preserved a full census of live queue
+state (remove_shard loses zero messages) and every queue's structural
+invariants.
+"""
+from __future__ import annotations
+
+import pytest
+
+from repro.core.chaos import (ChaosEvent, ChaosSchedule, ChaosSimulator,
+                              churn_schedule, federation_census,
+                              metamorphic_check, mixed_schedule, reshard_schedule,
+                              run_chaos, _smoke_cost, _smoke_problem,
+                              _smoke_specs)
+
+SEEDS = range(5)
+
+# the same workload/population/cost the CI smoke uses — imported, not copied,
+# so tuning one cannot silently desynchronize the other
+_problem, _specs, _cost = _smoke_problem, _smoke_specs, _smoke_cost
+
+LEAVABLE = [s.vid for s in _specs() if s.vid.startswith("x")]
+
+SCHEDULES = {
+    "churn": lambda seed: churn_schedule(seed, leavable=LEAVABLE),
+    "reshard": reshard_schedule,
+    "mixed": lambda seed: mixed_schedule(seed, leavable=LEAVABLE),
+}
+
+
+# ---------------------------------------------------------------------------
+# the metamorphic contract: 5 seeds x 3 schedule families x 2 modes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["event", "poll"])
+@pytest.mark.parametrize("family", sorted(SCHEDULES))
+@pytest.mark.parametrize("seed", SEEDS)
+def test_sharded_simresult_bitmatches_single_server(seed, family, mode):
+    schedule = SCHEDULES[family](seed)
+    single, sharded = metamorphic_check(schedule, mode=mode, n_shards=3)
+    assert single == sharded                 # full dataclass: timeline floats,
+    assert single.final_version == 5         # event counts, byte counts, all
+    assert single.mode == mode
+
+
+@pytest.mark.parametrize("mode", ["event", "poll"])
+@pytest.mark.parametrize("seed", SEEDS)
+def test_metamorphic_holds_with_live_expiries(seed, mode):
+    """Tight visibility: leases expire mid-task, so shard migrations carry
+    in-flight messages WITH pending deadlines — the deadline index must be
+    rebuilt at the destination or expiry would silently stop."""
+    schedule = mixed_schedule(seed, leavable=LEAVABLE)
+    single, sharded = metamorphic_check(schedule, mode=mode, n_shards=4,
+                                        visibility_timeout=0.6)
+    assert single == sharded
+    assert single.final_version == 5
+    assert single.requeues > 0 and single.expire_scans > 0
+
+
+def test_chaos_replay_is_bit_identical():
+    """Same (seed, schedule, specs) -> the same SimResult, twice over: the
+    harness has no hidden entropy, so any failure replays from its seed."""
+    schedule = mixed_schedule(3, leavable=LEAVABLE)
+    a = run_chaos(_problem(), _specs(), schedule, mode="event", n_shards=3,
+                  cost=_cost())
+    b = run_chaos(_problem(), _specs(), schedule, mode="event", n_shards=3,
+                  cost=_cost())
+    assert a == b
+    assert a.timeline == b.timeline and a.makespan == b.makespan
+
+
+def test_scripted_schedule_joins_and_resharding():
+    """Hand-written script: a mid-run join picks up work; shard membership
+    shrinks to 1 and grows again; the run completes with every task done."""
+    script = ChaosSchedule([
+        ChaosEvent(1.0, "add_shard"),
+        ChaosEvent(2.0, "join", vid="late", speed=2.5),
+        ChaosEvent(3.0, "remove_shard", shard=0),
+        ChaosEvent(4.0, "remove_shard", shard=1),
+        ChaosEvent(5.0, "remove_shard", shard=0),   # down to a single shard
+        ChaosEvent(6.0, "add_shard"),
+        ChaosEvent(8.0, "leave", vid="x00"),
+        ChaosEvent(9.0, "expire"),
+    ], label="scripted")
+    single, sharded = (
+        run_chaos(_problem(), _specs(), script, mode="event", n_shards=k,
+                  cost=_cost()) for k in (1, 3))
+    assert single == sharded
+    n_tasks = 5 * (6 + 1)
+    assert sum(single.tasks_by_worker.values()) == n_tasks
+    assert single.tasks_by_worker.get("late", 0) > 0    # the join contributed
+
+
+def test_remove_shard_conservation_census():
+    """Census-level zero-loss check, visible from the test (the simulator also
+    asserts it internally on every membership change)."""
+    problem, specs = _problem(), _specs()
+    schedule = ChaosSchedule([ChaosEvent(2.0, "remove_shard", shard=1)])
+    sim = ChaosSimulator(problem, specs, schedule=schedule, mode="event",
+                         n_shards=4, cost=_cost(), visibility_timeout=1e9)
+    # run manually up to just before the chaos event, snapshot, then finish
+    before = {}
+    orig = sim._chaos
+
+    def instrumented(ev):
+        before.update(federation_census(sim.qs))
+        n_shards_before = len(sim.qs.shards)
+        orig(ev)
+        assert len(sim.qs.shards) == n_shards_before - 1
+        after = federation_census(sim.qs)
+        assert after == before               # zero messages lost or mutated
+        assert sim.queues_migrated > 0       # ...and something actually moved
+
+    sim._chaos = instrumented
+    res = sim.run()
+    assert res.final_version == 5
+    assert before, "chaos event never fired"
+
+
+def test_leave_of_lease_holder_requeues_and_run_completes():
+    """A chaos leave of a volunteer mid-task behaves like closing the tab:
+    its leases requeue at leave time and the survivors finish everything."""
+    schedule = ChaosSchedule([ChaosEvent(0.7, "leave", vid="x00"),
+                              ChaosEvent(0.8, "leave", vid="x01")])
+    res = run_chaos(_problem(), _specs(), schedule, mode="event", n_shards=2,
+                    cost=_cost())
+    assert res.final_version == 5
+    assert res.requeues >= 1                 # the dropped leases came back
+    assert sum(res.tasks_by_worker.values()) == 5 * 7

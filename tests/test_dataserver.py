@@ -32,6 +32,23 @@ def test_gc_keeps_recent():
     assert ds.latest_version == 4
 
 
+def test_watch_version_fires_immediately_for_published_version():
+    """Watching an ALREADY-committed version must fire synchronously (the
+    check-then-watch pattern would otherwise lose the wake forever)."""
+    ds = DataServer()
+    ds.publish_model(0, "m0")
+    ds.publish_model(1, "m1")
+    fired = []
+    ds.watch_version(0, lambda: fired.append(0))    # older than latest
+    ds.watch_version(1, lambda: fired.append(1))    # exactly latest
+    assert fired == [0, 1]
+    ds.watch_version(2, lambda: fired.append(2))    # future: deferred
+    assert fired == [0, 1]
+    ds.publish_model(2, "m2")
+    assert fired == [0, 1, 2]
+    assert ds.watch_fires == 3
+
+
 def test_kv_crud():
     ds = DataServer()
     ds.put("k", 123, nbytes=8)

@@ -1,0 +1,263 @@
+"""Elastic queue federation: live shard join/leave with full-state migration.
+
+``ShardedQueueServer.add_shard()`` / ``remove_shard(i)`` recompute the
+consistent-hash ring and migrate every remapped queue's COMPLETE live state —
+pending FIFO, in-flight table with deadlines (re-indexed at the destination),
+banked signals, registered waiters, tag counter, stats counters — so a
+rebalance is invisible to consumers except that ~1/K of names change owner
+(the bound is asserted below). The property test drives a single QueueServer
+and a federation through identical random op sequences — including membership
+changes — and asserts observational equivalence op by op and state by state.
+"""
+from __future__ import annotations
+
+import random
+
+import pytest
+
+from repro.core.queue import Queue, QueueServer, ShardedQueueServer
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _loaded_federation(k: int, n_names: int, **kw) -> ShardedQueueServer:
+    fed = ShardedQueueServer(k, **kw)
+    for i in range(n_names):
+        fed.publish(f"queue-{i}", i)
+    return fed
+
+
+# ---------------------------------------------------------------------------
+# the ~1/K remap bound (deterministic: blake2b ring, fixed vnodes)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [2, 3, 4, 5, 8])
+def test_add_shard_remaps_at_most_1_5_over_k(k):
+    n = 600
+    fed = _loaded_federation(k, n)
+    moved = fed.add_shard()
+    assert 0 < len(moved) <= 1.5 * n / (k + 1), (k, len(moved))
+    # every migrated queue now lives on (and routes to) the new shard
+    for name in moved:
+        assert fed.shard_of(name) == k
+        assert name in fed.shards[k].queues
+    # nothing was lost federation-wide
+    assert sum(fed.shard_loads()) == n
+
+
+@pytest.mark.parametrize("k,idx", [(3, 0), (3, 2), (5, 1), (5, 4), (8, 6)])
+def test_remove_shard_remaps_at_most_1_5_over_k(k, idx):
+    n = 600
+    fed = _loaded_federation(k, n)
+    moved = fed.remove_shard(idx)
+    assert 0 < len(moved) <= 1.5 * n / k, (k, idx, len(moved))
+    assert len(fed.shards) == k - 1
+    assert sum(fed.shard_loads()) == n          # zero queues lost
+    for name in moved:                          # re-routed consistently
+        assert name in fed.shards[fed.shard_of(name)].queues
+
+
+def test_remove_last_shard_raises():
+    fed = ShardedQueueServer(1)
+    with pytest.raises(ValueError):
+        fed.remove_shard(0)
+
+
+def test_ring_stable_for_surviving_shards():
+    """A membership change must not reshuffle names between SURVIVING shards:
+    only names owned by (or claimed by) the changed member move."""
+    n = 500
+    names = [f"queue-{i}" for i in range(n)]
+    fed = _loaded_federation(4, n)
+    before = {nm: fed.shard_of(nm) for nm in names}
+    moved = set(fed.add_shard())
+    for nm in names:
+        if nm not in moved:
+            assert fed.shard_of(nm) == before[nm]
+    before = {nm: fed.shard_of(nm) for nm in names}
+    sids_before = list(fed._sids)
+    moved = set(fed.remove_shard(2))
+    for nm in names:
+        if nm not in moved:
+            assert fed._sids[fed.shard_of(nm)] == sids_before[before[nm]]
+
+
+# ---------------------------------------------------------------------------
+# migration carries the FULL live state
+# ---------------------------------------------------------------------------
+
+def test_migration_preserves_pending_fifo_and_tag_counter():
+    fed = ShardedQueueServer(2)
+    for i in range(50):
+        for body in ("a", "b", "c"):
+            fed.publish(f"q{i}", f"{i}-{body}")
+    moved = fed.add_shard()
+    assert moved
+    name = moved[0]
+    got1 = fed.lease(name, "w0", 0.0)
+    got2 = fed.lease(name, "w0", 0.0)
+    i = name[1:]
+    assert (got1[1], got2[1]) == (f"{i}-a", f"{i}-b")   # FIFO preserved
+    assert got2[0] == got1[0] + 1                        # tag order intact
+    new_tag = fed.publish(name, f"{i}-d")
+    assert new_tag == 3                                  # counter migrated too
+    q = fed.queues[name]
+    assert q.published == 4 and q.acked == 0
+
+
+def test_migration_preserves_in_flight_deadlines():
+    """In-flight messages migrate WITH their visibility deadlines, re-indexed
+    in the destination shard's deadline heap — expiry keeps working."""
+    fed = ShardedQueueServer(2, default_timeout=7.0)
+    n = 40
+    for i in range(n):
+        fed.publish(f"q{i}", i)
+        fed.lease(f"q{i}", "holder", now=0.0)
+    assert fed.next_deadline() == 7.0
+    moved = fed.add_shard()
+    assert moved
+    assert fed.next_deadline() == 7.0          # index survived the handoff
+    assert fed.expire_all(6.9) == 0
+    assert fed.expire_all(7.0) == n            # every lease expires on time
+    for i in range(n):
+        assert fed.depth(f"q{i}") == 1         # ...and is pending again
+    assert fed.next_deadline() is None
+
+
+def test_migration_preserves_waiters_and_banked_signals():
+    fed = ShardedQueueServer(2)
+    woken = {}
+    for i in range(30):
+        name = f"q{i}"
+        fed.publish(name, "seed")              # banks "any" + publish signals
+        fed.subscribe(name, "s0", lambda n=name: woken.setdefault(n, []).append("s0"))
+        # s0 consumed the banked any-signal; s1 becomes a REGISTERED waiter
+        fed.subscribe(name, "s1", lambda n=name: woken.setdefault(n, []).append("s1"))
+    moved = fed.add_shard()
+    assert moved
+    name = moved[0]
+    assert woken[name] == ["s0"]
+    fed.publish(name, "after-move")            # must wake the migrated waiter
+    assert woken[name] == ["s0", "s1"]
+    # the publish-kind signal banked before migration also survived
+    fed2_woken = []
+    fed.subscribe(name, "b", lambda: fed2_woken.append("pub"), kind="publish")
+    assert fed2_woken == ["pub"]
+
+
+def test_remove_shard_zero_loss_census():
+    from repro.core.chaos import federation_census
+
+    fed = ShardedQueueServer(4, default_timeout=9.0)
+    for i in range(120):
+        fed.publish(f"q{i}", f"{i}-a")
+        fed.publish(f"q{i}", f"{i}-b")
+        if i % 3 == 0:
+            fed.lease(f"q{i}", "w0", now=0.0)
+
+    before = federation_census(fed)
+    for idx in (2, 0, 1):                      # shrink 4 -> 1, step by step
+        fed.remove_shard(idx)
+        # bit-equal live state each time: pending bodies in order AND the
+        # full in-flight table (tag, consumer, deadline, body)
+        assert federation_census(fed) == before
+    assert len(fed.shards) == 1
+    assert fed.expire_all(9.0) == 40           # deadlines all survived 3 hops
+
+
+def test_queue_check_invariants_catches_violations():
+    q = Queue("q", default_timeout=5.0)
+    q.publish("a")
+    tag, _ = q.lease("w0", now=0.0)
+    q.check_invariants()                       # healthy state passes
+    q._deadlines.clear()                       # corrupt: uncovered deadline
+    with pytest.raises(AssertionError):
+        q.check_invariants()
+    q._deadlines.append((5.0, tag))            # repair for teardown check
+    q2 = Queue("q2")
+    q2.publish("a")
+    entry = q2._pending.popleft()              # corrupt: message vanished
+    with pytest.raises(AssertionError):
+        q2.check_invariants()
+    q2._pending.append(entry)                  # repair for teardown check
+
+
+# ---------------------------------------------------------------------------
+# observational equivalence: single server vs elastic federation under random
+# op sequences (publish/lease/ack/nack/expire/drop/add_shard/remove_shard).
+# Plain seeded port always runs; the hypothesis version widens the search.
+# ---------------------------------------------------------------------------
+
+_EQ_OPS = ("publish", "lease", "ack", "nack", "expire", "drop",
+           "add_shard", "remove_shard")
+
+
+def _run_equivalence_script(ops):
+    single = QueueServer(default_timeout=6.0)
+    fed = ShardedQueueServer(3, default_timeout=6.0)
+    held = []                                  # (qname, tag) — tags match
+    now = 0.0
+    for op, a, dt in ops:
+        now += dt
+        qn = f"q{a % 7}"
+        wid = f"w{a % 3}"
+        if op == "publish":
+            assert single.publish(qn, a) == fed.publish(qn, a)
+        elif op == "lease":
+            g1 = single.lease(qn, wid, now)
+            g2 = fed.lease(qn, wid, now)
+            assert g1 == g2
+            if g1 is not None:
+                held.append((qn, g1[0]))
+        elif op == "ack" and held:
+            hq, tag = held.pop(a % len(held))
+            assert single.ack(hq, tag) == fed.ack(hq, tag)
+        elif op == "nack" and held:
+            hq, tag = held.pop(a % len(held))
+            front = bool(a % 2)
+            assert single.nack(hq, tag, front=front) == \
+                fed.nack(hq, tag, front=front)
+        elif op == "expire":
+            assert single.expire_all(now) == fed.expire_all(now)
+        elif op == "drop":
+            assert single.drop_consumer(wid) == fed.drop_consumer(wid)
+        elif op == "add_shard":
+            if len(fed.shards) < 8:
+                fed.add_shard()                # no-op on the single server
+        elif op == "remove_shard":
+            if len(fed.shards) > 1:
+                fed.remove_shard(a % len(fed.shards))
+    # end-state observational equivalence
+    assert set(single.queues) == set(fed.queues)
+    for qn in single.queues:
+        q1, q2 = single.queues[qn], fed.queues[qn]
+        assert q1.peek_all() == q2.peek_all()              # pending, in order
+        assert (q1.published, q1.acked, q1.requeued, q1.depth, q1.in_flight) \
+            == (q2.published, q2.acked, q2.requeued, q2.depth, q2.in_flight)
+        assert q1.next_deadline() == q2.next_deadline()
+    assert single.next_deadline() == fed.next_deadline()
+    assert single.drained() == fed.drained()
+    assert single.total_requeued == fed.total_requeued
+
+
+@pytest.mark.parametrize("seed", range(15))
+def test_federation_equivalence_seeded(seed):
+    rng = random.Random(seed)
+    ops = [(rng.choice(_EQ_OPS), rng.randint(0, 40),
+            round(rng.uniform(0.0, 3.0), 3))
+           for _ in range(rng.randint(10, 120))]
+    _run_equivalence_script(ops)
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.lists(st.tuples(st.sampled_from(_EQ_OPS),
+                              st.integers(0, 40),
+                              st.floats(0.0, 3.0, allow_nan=False)),
+                    min_size=1, max_size=120))
+    @settings(max_examples=150, deadline=None)
+    def test_federation_equivalence_hypothesis(ops):
+        _run_equivalence_script(ops)

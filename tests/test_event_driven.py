@@ -118,6 +118,33 @@ def test_subscription_survives_churn_of_woken_consumer():
         "v03", 0) > 0
 
 
+def test_expiry_scans_skipped_when_nothing_can_expire():
+    """Regression (ISSUE 2): the run loop used to call expire_all on EVERY
+    event — O(all queues x events). It must now consult next_deadline() and
+    skip the sweep entirely while no visibility deadline has passed."""
+    res = _run("event", churn=True)
+    assert res.final_version == 6
+    assert res.events > 50                     # plenty of events processed...
+    assert res.expire_scans == 0               # ...but zero expiry sweeps
+
+
+def test_expiry_scans_stay_o_of_expired():
+    """With a tight visibility timeout every sweep must pay for itself: a scan
+    only happens when >= 1 lease has actually expired (checked against the
+    expiry-specific counter, not total requeues, which include barrier nacks)."""
+    problem = SyntheticProblem(n_versions=4, n_mb=6, model_bytes=1.0e6,
+                               grad_bytes=2.0e5, map_flops=1.0e9,
+                               reduce_flops=2.0e7)
+    specs = [VolunteerSpec(f"v{i:02d}", speed=0.8 + 0.2 * i) for i in range(5)]
+    sim = Simulator(problem, specs, cost=_cost(), mode="event",
+                    visibility_timeout=0.5)
+    res = sim.run()
+    assert res.final_version == 4
+    assert res.expire_scans > 0                # timeouts actually fired
+    assert res.expire_scans <= sim.expired     # every scan expired >= 1 lease
+    assert res.expire_scans < res.events / 4   # nowhere near one per event
+
+
 def test_sharded_federation_matches_single_server_simulation():
     single = _run("event", churn=True, n_shards=1)
     sharded = _run("event", churn=True, n_shards=4)
@@ -150,6 +177,10 @@ def test_coordinator_event_driven_and_sharded_bitmatch_sequential():
     churn = [(2, "leave", "w0"), (5, "join", "w7")]
     res = Coordinator(prob, n_workers=3, churn=churn).run()
     assert bitmatch(res.params, seq_params)
-    res_shard = Coordinator(prob, n_workers=3, churn=churn, n_shards=4).run()
+    # the sharded run additionally reshards the federation LIVE mid-training
+    # (elastic join + leave) — the rebalance must be invisible to the protocol
+    shard_churn = churn + [(3, "add_shard", 0), (6, "remove_shard", 1)]
+    res_shard = Coordinator(prob, n_workers=3, churn=shard_churn,
+                            n_shards=4).run()
     assert bitmatch(res_shard.params, seq_params)
     assert res_shard.final_version == res.final_version == prob.n_versions

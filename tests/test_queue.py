@@ -144,6 +144,47 @@ def test_unsubscribe_and_kick_pass_wake_to_next_waiter():
     assert woken == ["w1", "w2"]
 
 
+def test_kick_with_zero_waiters_banks_the_signal():
+    """A kick with nobody waiting must not vanish: it banks the signal so the
+    next subscriber fires immediately (the wake a departed volunteer consumed
+    is handed to whoever subscribes next)."""
+    q = Queue("q")
+    q.kick()                                   # no waiters registered
+    woken = []
+    q.subscribe("w0", lambda: woken.append("w0"))
+    assert woken == ["w0"]                     # banked kick delivered
+    q.subscribe("w1", lambda: woken.append("w1"))
+    assert woken == ["w0"]                     # consumed exactly once
+
+
+def test_unsubscribe_removes_both_any_and_publish_waiters():
+    q = Queue("q")
+    woken = []
+    q.subscribe("dual", lambda: woken.append("any"), kind="any")
+    q.subscribe("dual", lambda: woken.append("pub"), kind="publish")
+    q.subscribe("other", lambda: woken.append("other-any"))
+    assert q.waiters == 3
+    assert q.unsubscribe("dual") == 2          # both kinds removed at once
+    assert q.waiters == 1
+    q.publish("a")                             # only the survivor wakes
+    assert woken == ["other-any"]
+
+
+def test_nack_back_goes_behind_existing_pending():
+    q = Queue("q")
+    q.publish("a")
+    q.publish("b")
+    tag, body = q.lease("w0", 0.0)
+    assert body == "a"
+    q.nack(tag, front=False)                   # voluntary give-back to the END
+    assert q.peek_all() == ["b", "a"]
+    _, first = q.lease("w1", 0.0)
+    assert first == "b"
+    _, second = q.lease("w1", 0.0)
+    assert second == "a"
+    assert q.requeued == 1
+
+
 def test_queueserver_namespaces():
     qs = QueueServer()
     qs.publish("a", 1)
