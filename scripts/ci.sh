@@ -14,9 +14,17 @@ python benchmarks/volunteer_scaling.py --quick
 
 # 5-seed chaos smoke (<30 s): for fixed seeds x {churn, reshard, mixed}
 # schedules, in both event and poll modes — including a tight-visibility leg
-# with live lease expiry — a sharded federation's SimResult must bit-match the
-# single-server SimResult (metamorphic contract of ISSUE 2)
+# with live lease expiry AND a wire-transport leg with seeded notification
+# faults (dropped/duplicated/delayed Wake and VersionReady deliveries) — a
+# sharded federation's SimResult must bit-match the single-server SimResult
+# (metamorphic contracts of ISSUEs 2 and 3)
 python -m repro.core.chaos --seeds 5
+
+# gateway loopback smoke (<30 s): start `python -m repro.core.gateway` as a
+# separate server process and drive one out-of-process volunteer over a real
+# TCP socket with WireTransport framing; its final model version and task
+# count must match the identical volunteer loop run in process (ISSUE 3)
+python -m repro.core.gateway --smoke
 
 # elastic rebalance smoke: every shard join/leave migrates <= 1.5/K of queue
 # names, conserves all live state, and keeps per-queue invariants

@@ -8,6 +8,14 @@ from repro.core.mapreduce import (  # noqa: F401
     TrainingProblem, sequential_accumulated, sequential_fullbatch,
 )
 from repro.core.initiator import enqueue_problem  # noqa: F401
+from repro.core.protocol import (  # noqa: F401
+    ServerEndpoint, VolunteerSession, encode_message, decode_message,
+    wire_size,
+)
+from repro.core.transport import (  # noqa: F401
+    Transport, InProcessTransport, WireTransport, FaultyTransport, FaultSpec,
+    make_transport,
+)
 from repro.core.coordinator import Coordinator, RunResult  # noqa: F401
 from repro.core.simulator import (  # noqa: F401
     Simulator, SimResult, VolunteerSpec, CostModel, TimelineEvent,

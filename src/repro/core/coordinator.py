@@ -1,52 +1,57 @@
 """Coordinator — REAL execution of the JSDoop protocol, in process.
 
-K volunteer state machines are interleaved round-robin over the shared
-QueueServer/DataServer, actually computing gradients and RMSprop updates with
-JAX. The logical clock is the scheduler iteration count (used for visibility
-timeouts). Churn is injected as (step, kind, arg) events: 'leave'/'join' of a
-volunteer (a leaving volunteer's leased tasks requeue, exactly like closing
-the browser tab mid-task), and — when running on a ShardedQueueServer —
+K volunteers are interleaved round-robin, actually computing gradients and
+RMSprop updates with JAX. Each volunteer is a ``protocol.VolunteerSession`` —
+the sans-IO state machine owning every protocol rule (lease, model-version
+wait, reduce barrier, duplicate ack, requeue) — speaking typed messages to the
+QueueServer/DataServer through a ``transport`` ("inproc" for direct zero-copy
+calls, "wire" to round-trip every message through canonical bytes; either way
+the final model is identical). The Coordinator itself owns only engine policy:
+the logical clock (scheduler iteration count, used for visibility timeouts),
+real compute + gradient compression, and churn.
+
+Churn is injected as (step, kind, arg) events: 'leave'/'join' of a volunteer
+(a leaving volunteer Byes — its leased tasks requeue, exactly like closing the
+browser tab mid-task), and — when running on a ShardedQueueServer —
 'add_shard'/'remove_shard' membership changes, which rebalance the federation
 live (queues migrate with their full state; see queue.ShardedQueueServer).
 
-Waiting is event-driven, on the same primitives the Simulator uses: a
-volunteer that would block (empty task queue, unpublished model version, or an
-unfilled reduce barrier) registers a subscription/watcher and is skipped by
+Waiting is event-driven: a session that reports ``Blocked`` subscribes (a
+``Wake``/``VersionReady`` notification message un-blocks it) and is skipped by
 the scheduler until woken. When every volunteer is blocked the logical clock
 fast-forwards to the next churn event or visibility deadline instead of
 spinning — no step ever busy-polls.
 
 This is the engine behind the paper's invariance claim tests: the final model
-must bit-match ``sequential_accumulated`` for ANY worker count and ANY churn.
+must bit-match ``sequential_accumulated`` for ANY worker count, ANY churn, and
+ANY transport.
 """
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple, Union
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
 from repro.core.dataserver import DataServer
 from repro.core.initiator import enqueue_problem
 from repro.core.mapreduce import TrainingProblem
+from repro.core.protocol import (Blocked, KickQueue, MapWork, NoTask,
+                                 ReduceWork, ServerEndpoint, TaskDone,
+                                 VolunteerSession)
 from repro.core.queue import QueueServer, ShardedQueueServer
-from repro.core.tasks import (GradResult, INITIAL_QUEUE, MapTask, ReduceTask,
-                              results_queue)
+from repro.core.tasks import INITIAL_QUEUE
+from repro.core.transport import make_transport
 from repro.optim.compression import Codec, ef_init, ef_compress
 
 
 @dataclass
 class _Volunteer:
     vid: str
-    tag: Optional[int] = None
-    task: Any = None
+    sess: VolunteerSession
     ef_residual: Any = None     # error-feedback state (when codec is set)
-    blocked: bool = False       # waiting on a subscription/watcher wake
-
-    @property
-    def busy(self) -> bool:
-        return self.task is not None
+    blocked: bool = False       # waiting on a Wake/VersionReady notification
 
 
 @dataclass
@@ -65,41 +70,40 @@ class Coordinator:
                  n_versions: Optional[int] = None,
                  churn: Optional[List[Tuple[int, str, str]]] = None,
                  visibility_timeout: float = float("inf"),
-                 codec: Optional[Codec] = None, n_shards: int = 1):
+                 codec: Optional[Codec] = None, n_shards: int = 1,
+                 transport: Union[str, Callable, None] = "inproc"):
         self.problem = problem
         self.qs: Union[QueueServer, ShardedQueueServer] = (
             QueueServer(default_timeout=visibility_timeout) if n_shards <= 1
             else ShardedQueueServer(n_shards,
                                     default_timeout=visibility_timeout))
         self.ds = DataServer()
+        self.endpoint = ServerEndpoint(self.qs, self.ds)
+        self.port = make_transport(transport, self.endpoint)
+        self.port.set_deliver(self._on_notify)
         self.n_versions = n_versions if n_versions is not None else problem.n_versions
         enqueue_problem(problem, self.qs, self.ds, n_versions=self.n_versions)
         self.volunteers: Dict[str, _Volunteer] = {
-            f"w{i}": _Volunteer(f"w{i}") for i in range(n_workers)}
+            f"w{i}": self._make_volunteer(f"w{i}") for i in range(n_workers)}
         self.churn = sorted(churn or [])
         self.codec = codec
         self.version_losses: Dict[int, List[float]] = {}
         self.tasks_done: Dict[str, int] = {}
         self.bytes_sent = 0
 
+    def _make_volunteer(self, vid: str) -> _Volunteer:
+        return _Volunteer(vid, VolunteerSession(
+            vid, self.port, model_nbytes=self.problem.model_bytes))
+
     # ------------------------------------------------------------------ engine
-    def _unblock(self, vid: str):
-        """Subscription/watcher wake: mark the volunteer runnable. A wake for a
-        departed volunteer passes the event on so no wakeup is lost."""
+    def _on_notify(self, vid: str, msg) -> None:
+        """Notification sink: mark the volunteer runnable. A wake for a
+        departed volunteer is passed on so no wakeup is lost."""
         v = self.volunteers.get(vid)
         if v is not None:
             v.blocked = False
         else:
-            self.qs.kick(INITIAL_QUEUE)
-
-    def _block_on_queue(self, v: _Volunteer, qname: str, *, kind: str = "any"):
-        v.blocked = True
-        self.qs.subscribe(qname, v.vid, lambda: self._unblock(v.vid),
-                          kind=kind)
-
-    def _block_on_version(self, v: _Volunteer, version: int):
-        v.blocked = True
-        self.ds.watch_version(version, lambda: self._unblock(v.vid))
+            self.port.call(KickQueue(INITIAL_QUEUE))
 
     def run(self, max_steps: int = 2_000_000) -> RunResult:
         step = 0
@@ -112,11 +116,10 @@ class Coordinator:
                 _, kind, vid = self.churn[churn_i]
                 churn_i += 1
                 if kind == "leave" and vid in self.volunteers:
-                    self.qs.unsubscribe(vid)
-                    self.qs.drop_consumer(vid)
+                    self.volunteers[vid].sess.bye()
                     del self.volunteers[vid]
                 elif kind == "join" and vid not in self.volunteers:
-                    self.volunteers[vid] = _Volunteer(vid)
+                    self.volunteers[vid] = self._make_volunteer(vid)
                 elif kind == "add_shard" and \
                         isinstance(self.qs, ShardedQueueServer):
                     self.qs.add_shard()
@@ -163,34 +166,35 @@ class Coordinator:
         return RunResult(params, opt_state, losses, step, dict(self.tasks_done),
                          self.qs.total_requeued, self.ds.latest_version)
 
-    # ------------------------------------------------------------------ protocol
+    # ------------------------------------------------------------------ compute
     def _step_volunteer(self, v: _Volunteer, now: float):
-        if not v.busy:
-            got = self.qs.lease(INITIAL_QUEUE, v.vid, now)
-            if got is None:
-                # task queue empty: sleep until a publish or requeue
-                self._block_on_queue(v, INITIAL_QUEUE)
+        """One scheduler slice: drive the session one protocol move; answer
+        MapWork/ReduceWork with real JAX compute."""
+        sess = v.sess
+        if sess.task is None:
+            if isinstance(sess.lease(now), NoTask):
+                v.blocked = True
+                sess.subscribe_idle()      # sleep until a publish or requeue
                 return
-            v.tag, v.task = got
-        if isinstance(v.task, MapTask):
-            self._try_map(v, now)
+        out = sess.advance(now)
+        if isinstance(out, Blocked):
+            v.blocked = True
+            sess.subscribe(out)
+            return
+        if isinstance(out, TaskDone):      # obsolete duplicate, acked
+            return
+        if isinstance(out, MapWork):
+            self._do_map(v, out)
+        elif isinstance(out, ReduceWork):
+            self._do_reduce(v, out)
         else:
-            self._try_reduce(v, now)
+            # Busy is unreachable here (compute is synchronous, so nothing
+            # can redeliver a wake mid-task) — keep the invariant loud
+            raise RuntimeError(f"{v.vid}: unexpected session outcome {out!r}")
 
-    def _try_map(self, v: _Volunteer, now: float):
-        t: MapTask = v.task
-        if self.ds.latest_version > t.version:
-            # obsolete duplicate (we were requeued after someone else's result
-            # was already reduced) — ack without compute, at-least-once + idempotent
-            self.qs.ack(INITIAL_QUEUE, v.tag)
-            v.tag = v.task = None
-            return
-        blob = self.ds.get_model(t.version, nbytes=self.problem.model_bytes)
-        if blob is None:
-            # model version not published yet: stay leased, wake on publish
-            self._block_on_version(v, t.version)
-            return
-        params, _ = blob
+    def _do_map(self, v: _Volunteer, work: MapWork):
+        t = work.task
+        params = work.model[0]             # blob = (params, opt_state)
         grads, loss = self.problem.map_compute(params, t.version, t.mb_index)
         nbytes = self.problem.grad_bytes
         if self.codec is not None:
@@ -199,50 +203,16 @@ class Coordinator:
             grads, v.ef_residual, nbytes = ef_compress(self.codec, grads,
                                                        v.ef_residual)
         self.bytes_sent += nbytes
-        self.qs.publish(results_queue(t.version),
-                        GradResult(t.version, t.mb_index, grads, nbytes, loss,
-                                   v.vid))
-        self.qs.ack(INITIAL_QUEUE, v.tag)
-        self.tasks_done[v.vid] = self.tasks_done.get(v.vid, 0) + 1
-        self.version_losses.setdefault(t.version, []).append(loss)
-        v.tag = v.task = None
+        done = v.sess.finish_map(grads, nbytes, loss)
+        if not done.stale:
+            self.tasks_done[v.vid] = self.tasks_done.get(v.vid, 0) + 1
+            self.version_losses.setdefault(t.version, []).append(loss)
 
-    def _try_reduce(self, v: _Volunteer, now: float):
-        t: ReduceTask = v.task
-        if self.ds.latest_version > t.version:
-            self.qs.ack(INITIAL_QUEUE, v.tag)  # duplicate reduce, already applied
-            v.tag = v.task = None
-            return
-        rq = results_queue(t.version)
-        if self.qs.depth(rq) < t.n_mb:
-            # barrier not reached: wake on the next result publish (requeues —
-            # including our own nacks below — must not wake the barrier)
-            self._block_on_queue(v, rq, kind="publish")
-            return
-        grads_by_mb: Dict[int, Any] = {}
-        tags: List[int] = []
-        while True:
-            got = self.qs.lease(rq, v.vid, now)
-            if got is None:
-                break
-            tag, res = got
-            tags.append(tag)
-            grads_by_mb.setdefault(res.mb_index, res.payload)  # dedup by mb
-        if len(grads_by_mb) < t.n_mb:
-            for tag in tags:
-                self.qs.nack(rq, tag)
-            self._block_on_queue(v, rq, kind="publish")
-            return
-        params, opt_state = self.ds.get_model(t.version,
-                                              nbytes=self.problem.model_bytes)
+    def _do_reduce(self, v: _Volunteer, work: ReduceWork):
+        params, opt_state = v.sess.fetch_model(self.problem.model_bytes)
         params, opt_state = self.problem.reduce_compute(params, opt_state,
-                                                        grads_by_mb)
-        self.ds.publish_model(t.version + 1, (params, opt_state),
-                              nbytes=self.problem.model_bytes)
-        self.ds.gc_models(keep_last=2)
-        for tag in tags:
-            self.qs.ack(rq, tag)
-        self.qs.ack(INITIAL_QUEUE, v.tag)
+                                                        work.results)
+        v.sess.finish_reduce((params, opt_state), self.problem.model_bytes,
+                             gc_keep=2)
         self.tasks_done[v.vid] = self.tasks_done.get(v.vid, 0) + 1
         self.bytes_sent += self.problem.model_bytes
-        v.tag = v.task = None

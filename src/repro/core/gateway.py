@@ -1,0 +1,397 @@
+"""Gateway — the volunteer protocol over a real loopback socket.
+
+``python -m repro.core.gateway`` hosts a QueueServer + DataServer behind
+``protocol.ServerEndpoint`` on a TCP socket (length-prefixed frames of
+canonically encoded messages), so a genuinely **out-of-process** volunteer can
+join a training run — the end-to-end proof that the sans-IO redesign works:
+the same ``VolunteerSession`` that drives the Coordinator's JAX compute and
+the Simulator's virtual time here drives a blocking socket client, with zero
+protocol code of its own.
+
+Pieces:
+
+- ``GatewayServer`` — accept loop + per-connection reader threads; one global
+  lock serializes endpoint dispatch (the in-process servers are
+  single-threaded by design). A connection binds to a consumer id with
+  ``Hello``; ``Wake``/``VersionReady`` notification frames are pushed down
+  that consumer's connection.
+- ``SocketTransport`` — the client half: ``call`` writes a request frame and
+  reads until the reply frame arrives, stashing any notification frames that
+  interleave; ``wait_notification`` blocks on the socket for the next push.
+- ``run_volunteer`` — the engine-free driver: lease -> advance -> synthetic
+  compute -> finish, blocking on notifications while ``Blocked``. Works over
+  ANY transport (the ``--smoke`` mode runs it over ``InProcessTransport`` as
+  the reference, then over a socket against a spawned server process, and
+  asserts both reach the same final version with the same task count).
+
+This is a liveness/serializability proof, not a production server: visibility
+timeouts need a clock owner (the engines' virtual clocks, or a sweeper thread
+in a real deployment), so the gateway runs with infinite leases.
+
+Usage:
+  python -m repro.core.gateway --serve --port 0 --port-file /tmp/gw.port
+  python -m repro.core.gateway --volunteer --port 12345 --expect-final 4
+  python -m repro.core.gateway --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import socket
+import struct
+import subprocess
+import sys
+import tempfile
+import threading
+import time
+from collections import deque
+from typing import Deque, Dict, Optional, Tuple
+
+from repro.core.dataserver import DataServer
+from repro.core.initiator import enqueue_problem
+from repro.core.protocol import (Blocked, Hello, MapWork, NoTask,
+                                 NOTIFICATION_TYPES, ReduceWork,
+                                 ServerEndpoint, TaskDone, VolunteerSession,
+                                 decode_message, encode_message)
+from repro.core.queue import QueueServer
+from repro.core.simulator import SyntheticProblem
+from repro.core.transport import InProcessTransport, Transport
+
+_LEN = struct.Struct(">I")
+
+
+def _send_frame(sock: socket.socket, msg) -> int:
+    data = encode_message(msg)
+    sock.sendall(_LEN.pack(len(data)) + data)
+    return _LEN.size + len(data)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> Optional[bytes]:
+    buf = b""
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            return None
+        buf += chunk
+    return buf
+
+
+def _recv_frame(sock: socket.socket):
+    head = _recv_exact(sock, _LEN.size)
+    if head is None:
+        return None
+    body = _recv_exact(sock, _LEN.unpack(head)[0])
+    return None if body is None else decode_message(body)
+
+
+# ---------------------------------------------------------------------------
+# server
+# ---------------------------------------------------------------------------
+
+class GatewayServer:
+    def __init__(self, problem, *, host: str = "127.0.0.1", port: int = 0,
+                 n_versions: Optional[int] = None):
+        self.qs = QueueServer()                  # infinite visibility timeout
+        self.ds = DataServer()
+        self.n_versions = (n_versions if n_versions is not None
+                           else problem.n_versions)
+        enqueue_problem(problem, self.qs, self.ds,
+                        n_versions=self.n_versions, store_real_model=False)
+        self.endpoint = ServerEndpoint(self.qs, self.ds, self._notify)
+        self._lock = threading.Lock()            # serializes ALL dispatch + writes
+        self._conns: Dict[str, socket.socket] = {}
+        self.done = threading.Event()
+        self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._sock.bind((host, port))
+        self._sock.listen(16)
+        self.port = self._sock.getsockname()[1]
+
+    def _notify(self, consumer: str, msg) -> None:
+        # called inside endpoint.handle, under self._lock. The send is
+        # bounded: a client that stops draining its socket would otherwise
+        # block here with the global lock held and stall the whole server —
+        # treat a wedged buffer like a disconnect and drop the registration.
+        conn = self._conns.get(consumer)
+        if conn is not None:
+            try:
+                conn.settimeout(10.0)
+                _send_frame(conn, msg)
+            except OSError:
+                self._conns.pop(consumer, None)
+            finally:
+                try:
+                    conn.settimeout(None)
+                except OSError:
+                    pass
+
+    def _serve_conn(self, conn: socket.socket) -> None:
+        consumer = None
+        try:
+            while True:
+                msg = _recv_frame(conn)
+                if msg is None:
+                    break
+                with self._lock:
+                    if isinstance(msg, Hello):
+                        consumer = msg.consumer
+                        self._conns[consumer] = conn
+                    reply = self.endpoint.handle(msg)
+                    _send_frame(conn, reply)
+                    if self.ds.latest_version >= self.n_versions:
+                        self.done.set()
+        finally:
+            with self._lock:
+                if consumer is not None and self._conns.get(consumer) is conn:
+                    del self._conns[consumer]
+            conn.close()
+
+    def serve_forever(self) -> None:
+        while True:
+            try:
+                conn, _ = self._sock.accept()
+            except OSError:
+                return
+            threading.Thread(target=self._serve_conn, args=(conn,),
+                             daemon=True).start()
+
+    def start(self) -> threading.Thread:
+        t = threading.Thread(target=self.serve_forever, daemon=True)
+        t.start()
+        return t
+
+    def close(self) -> None:
+        self._sock.close()
+
+
+# ---------------------------------------------------------------------------
+# client transport
+# ---------------------------------------------------------------------------
+
+class SocketTransport(Transport):
+    """Blocking request/reply over the gateway socket; pushed notification
+    frames are stashed (or blocked for) rather than delivered by callback."""
+
+    def __init__(self, host: str, port: int, consumer: str,
+                 connect_timeout: float = 10.0):
+        deadline = time.monotonic() + connect_timeout
+        last_err = None
+        while True:                      # the server may still be binding
+            try:
+                self.sock = socket.create_connection((host, port), timeout=30)
+                # the connect timeout must not linger: a volunteer may sit in
+                # wait_notification far longer than any connect should take
+                self.sock.settimeout(None)
+                break
+            except OSError as e:
+                last_err = e
+                if time.monotonic() >= deadline:
+                    raise ConnectionError(
+                        f"gateway at {host}:{port} unreachable: {last_err}")
+                time.sleep(0.05)
+        self.inbox: Deque = deque()
+        self.consumer = consumer
+        self.bytes_moved = 0
+        self.call(Hello(consumer))
+
+    def set_deliver(self, deliver) -> None:
+        """SocketTransport is a BLOCKING client port: notifications are
+        consumed via ``wait_notification``/``inbox``, never pushed through a
+        callback — so the virtual-clock engines (which need synchronous
+        delivery) cannot run over it. Fail loudly instead of deadlocking."""
+        raise RuntimeError(
+            "SocketTransport has no callback delivery; drive it with a "
+            "blocking client loop (gateway.run_volunteer), not an engine")
+
+    def call(self, msg):
+        self.bytes_moved += _send_frame(self.sock, msg)
+        while True:
+            reply = _recv_frame(self.sock)
+            if reply is None:
+                raise ConnectionError("gateway closed the connection")
+            if isinstance(reply, NOTIFICATION_TYPES):
+                self.inbox.append(reply)
+                continue
+            return reply
+
+    def wait_notification(self):
+        """Block until the server pushes a Wake/VersionReady frame."""
+        if self.inbox:
+            return self.inbox.popleft()
+        msg = _recv_frame(self.sock)
+        if msg is None:
+            raise ConnectionError("gateway closed while waiting")
+        if not isinstance(msg, NOTIFICATION_TYPES):
+            raise RuntimeError(f"unexpected frame while idle: {msg}")
+        return msg
+
+    def close(self) -> None:
+        self.sock.close()
+
+
+# ---------------------------------------------------------------------------
+# the engine-free volunteer
+# ---------------------------------------------------------------------------
+
+def _wait(transport: Transport, inbox: Deque) -> None:
+    if inbox:
+        inbox.popleft()
+        return
+    waiter = getattr(transport, "wait_notification", None)
+    if waiter is None:
+        raise RuntimeError(
+            "volunteer blocked on a transport that cannot wait — with no "
+            "other actors this is a protocol deadlock")
+    waiter()
+
+
+def run_volunteer(transport: Transport, vid: str, n_versions: int,
+                  ) -> Tuple[int, int]:
+    """Drive one volunteer to run completion over any transport. Compute is
+    synthetic (gradient payloads None, model blobs version strings). Returns
+    (final_version, tasks_done)."""
+    sess = VolunteerSession(vid, transport)
+    inbox: Deque = getattr(transport, "inbox", None)
+    if inbox is None:
+        inbox = deque()
+        transport.set_deliver(lambda c, m: inbox.append(m))
+    # end-of-run nudge: a volunteer idling on the task queue when ANOTHER
+    # volunteer publishes the final version would otherwise wait forever —
+    # the VersionReady push for the final version breaks that wait
+    sess.subscribe(Blocked(version=n_versions))
+    tasks_done = 0
+    while True:
+        if sess.task is None:
+            # termination is only checked while idle — while a task is held,
+            # advance()'s own LatestReq covers staleness, so the socket path
+            # pays one version poll per task, not one per protocol move
+            if sess.latest() >= n_versions:
+                break
+            if isinstance(sess.lease(0.0), NoTask):
+                sess.subscribe_idle()
+                _wait(transport, inbox)
+                continue
+        out = sess.advance(0.0)
+        if isinstance(out, Blocked):
+            sess.subscribe(out)
+            _wait(transport, inbox)
+            continue
+        if isinstance(out, TaskDone):
+            continue
+        if isinstance(out, MapWork):
+            if not sess.finish_map(None, 0, 0.0).stale:
+                tasks_done += 1
+        elif isinstance(out, ReduceWork):
+            sess.finish_reduce(f"v{out.task.version + 1}")
+            tasks_done += 1
+    final = sess.latest()
+    sess.bye()
+    return final, tasks_done
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def _problem(args) -> SyntheticProblem:
+    return SyntheticProblem(n_versions=args.n_versions, n_mb=args.n_mb)
+
+
+def _serve(args) -> int:
+    server = GatewayServer(_problem(args), port=args.port,
+                           n_versions=args.n_versions)
+    if args.port_file:
+        tmp = args.port_file + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(str(server.port))
+        os.replace(tmp, args.port_file)         # atomic: readers never see ""
+    print(f"gateway: serving {args.n_versions} versions x "
+          f"{args.n_mb}+1 tasks on 127.0.0.1:{server.port}", flush=True)
+    server.start()
+    server.done.wait(timeout=args.timeout)
+    # linger until connected volunteers finish their goodbyes (Bye + close)
+    deadline = time.monotonic() + 5.0
+    while server._conns and time.monotonic() < deadline:
+        time.sleep(0.02)
+    ok = server.ds.latest_version >= args.n_versions
+    print(f"gateway: final_version={server.ds.latest_version} "
+          f"({'done' if ok else 'TIMEOUT'})", flush=True)
+    server.close()
+    return 0 if ok else 1
+
+
+def _volunteer(args) -> int:
+    transport = SocketTransport("127.0.0.1", args.port, args.vid)
+    final, tasks = run_volunteer(transport, args.vid, args.n_versions)
+    transport.close()
+    print(f"volunteer {args.vid}: final_version={final} tasks={tasks} "
+          f"bytes_sent={transport.bytes_moved}", flush=True)
+    if args.expect_final is not None and final != args.expect_final:
+        print(f"FAIL: expected final_version={args.expect_final}")
+        return 1
+    return 0
+
+
+def _smoke(args) -> int:
+    """End-to-end proof: the identical volunteer loop over (a) direct calls
+    and (b) a real socket to a separate gateway PROCESS must agree."""
+    # (a) in-process reference
+    server = GatewayServer(_problem(args), n_versions=args.n_versions)
+    ref_final, ref_tasks = run_volunteer(
+        InProcessTransport(server.endpoint), "ref", args.n_versions)
+    server.close()
+    # (b) out-of-process over the wire
+    with tempfile.TemporaryDirectory() as td:
+        port_file = os.path.join(td, "gw.port")
+        proc = subprocess.Popen(
+            [sys.executable, "-m", "repro.core.gateway", "--serve",
+             "--port", "0", "--port-file", port_file,
+             "--n-versions", str(args.n_versions), "--n-mb", str(args.n_mb)],
+            env=os.environ.copy())
+        try:
+            deadline = time.monotonic() + 20
+            while not os.path.exists(port_file):
+                if time.monotonic() > deadline or proc.poll() is not None:
+                    raise RuntimeError("gateway server did not come up")
+                time.sleep(0.05)
+            with open(port_file) as f:
+                port = int(f.read())
+            transport = SocketTransport("127.0.0.1", port, "gw0")
+            final, tasks = run_volunteer(transport, "gw0", args.n_versions)
+            transport.close()
+            rc = proc.wait(timeout=10)
+        finally:
+            if proc.poll() is None:
+                proc.kill()
+    n_tasks = args.n_versions * (args.n_mb + 1)
+    assert final == ref_final == args.n_versions, (final, ref_final)
+    assert tasks == ref_tasks == n_tasks, (tasks, ref_tasks, n_tasks)
+    assert rc == 0, f"gateway server exited {rc}"
+    print(f"# OK gateway smoke: out-of-process volunteer over the socket "
+          f"matched in-process — final_version={final}, tasks={tasks}")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    mode = ap.add_mutually_exclusive_group(required=True)
+    mode.add_argument("--serve", action="store_true")
+    mode.add_argument("--volunteer", action="store_true")
+    mode.add_argument("--smoke", action="store_true")
+    ap.add_argument("--port", type=int, default=0)
+    ap.add_argument("--port-file", default=None)
+    ap.add_argument("--vid", default="gw0")
+    ap.add_argument("--n-versions", type=int, default=4)
+    ap.add_argument("--n-mb", type=int, default=6)
+    ap.add_argument("--expect-final", type=int, default=None)
+    ap.add_argument("--timeout", type=float, default=60.0)
+    args = ap.parse_args(argv)
+    if args.serve:
+        return _serve(args)
+    if args.volunteer:
+        return _volunteer(args)
+    return _smoke(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

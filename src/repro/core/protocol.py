@@ -1,0 +1,595 @@
+"""Sans-IO volunteer protocol: typed wire messages + the volunteer state machine.
+
+The paper's volunteers talk to the queue/data servers over a network (browser
+-> RabbitMQ/Redis); our engines used to hand-roll that conversation as direct
+Python calls, each with a private copy of the protocol rules. This module makes
+the protocol itself the product, the way Pando's pull/push message contract and
+DistML.js's serializable command API do:
+
+- **Messages** — every server interaction is a typed, immutable message
+  (``LeaseReq``/``LeaseGrant``, ``Ack``, ``Nack``, ``PublishResult``,
+  ``FetchModel``/``ModelBlob``, ``PublishModel``, ``WatchVersion``,
+  ``SubscribeQueue`` and the async ``Wake``/``VersionReady`` notifications,
+  ``Bye``...) with canonical byte serialization via
+  ``checkpoint.serialize`` (msgpack + codec header byte), so any message —
+  including a ``GradResult`` carrying a real gradient pytree — round-trips
+  bytes losslessly.
+
+- **ServerEndpoint** — the server half: dispatches one request message onto a
+  ``QueueServer``/``DataServer`` pair and returns the reply message.
+  Subscriptions are registered here; their fires are delivered as ``Wake`` /
+  ``VersionReady`` notification messages through a ``notify(consumer, msg)``
+  sink (the transport's downstream half).
+
+- **VolunteerSession** — the sans-IO client state machine owning every
+  protocol rule the engines used to duplicate: lease from the task queue ->
+  (map) fetch model version, compute, publish gradient -> ack, or (reduce)
+  check the barrier, drain + dedup the results queue, publish model v+1 ->
+  ack — including the at-least-once edges (obsolete-duplicate ack without
+  compute, incomplete-barrier nack + re-wait, dead-volunteer abort). The
+  session performs **no IO and no compute**: server effects go through a
+  ``Transport`` (``repro.core.transport``) one message at a time, and compute
+  is handed back to the engine as ``MapWork``/``ReduceWork`` outcomes — the
+  Coordinator answers them with real JAX gradients, the Simulator with virtual
+  time, and ``repro.core.gateway``'s out-of-process volunteer with synthetic
+  blobs over a socket. Waiting is likewise the engine's policy: the session
+  says *what* to wait for (a ``Blocked`` outcome); the engine decides push
+  (``subscribe``) vs poll.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+from repro.checkpoint import serialize
+from repro.core.dataserver import DataServer
+from repro.core.tasks import (GradResult, INITIAL_QUEUE, WIRE_TYPES,
+                              results_queue)
+
+# ---------------------------------------------------------------------------
+# wire registry + byte codec
+# ---------------------------------------------------------------------------
+
+_WIRE_TYPES: Dict[str, type] = {c.__name__: c for c in WIRE_TYPES}
+
+_TAG = "__wire__"
+_TUP = "__tuple__"
+
+
+def wire(cls):
+    """Register a dataclass as wire-encodable (by class name). Names are the
+    wire schema, so a collision would silently re-route every byte stream —
+    fail at import time instead."""
+    if cls.__name__ in _WIRE_TYPES:       # not an assert: must survive -O
+        raise ValueError(f"wire type name collision: {cls.__name__}")
+    _WIRE_TYPES[cls.__name__] = cls
+    return cls
+
+
+def _to_obj(x):
+    if dataclasses.is_dataclass(x) and type(x).__name__ in _WIRE_TYPES:
+        return {_TAG: type(x).__name__,
+                "f": {f.name: _to_obj(getattr(x, f.name))
+                      for f in dataclasses.fields(x)}}
+    if isinstance(x, dict):
+        return {k: _to_obj(v) for k, v in x.items()}
+    if isinstance(x, tuple):
+        # msgpack would coerce tuples to lists; tag them so pytree structure
+        # (e.g. a (params, opt_state) blob) survives the wire exactly.
+        # Namedtuples decode as plain tuples.
+        return {_TUP: [_to_obj(v) for v in x]}
+    if isinstance(x, list):
+        return [_to_obj(v) for v in x]
+    return x
+
+
+def _from_obj(x):
+    if isinstance(x, dict):
+        if _TAG in x:
+            cls = _WIRE_TYPES[x[_TAG]]
+            return cls(**{k: _from_obj(v) for k, v in x["f"].items()})
+        if _TUP in x:
+            return tuple(_from_obj(v) for v in x[_TUP])
+        return {k: _from_obj(v) for k, v in x.items()}
+    if isinstance(x, list):
+        return [_from_obj(v) for v in x]
+    return x
+
+
+def encode_message(msg, *, codec: Optional[str] = None) -> bytes:
+    """Message -> canonical bytes. Uncompressed by default (protocol messages
+    are small and latency-bound); pass codec="zlib"/"zstd" to compress bulky
+    payloads (model blobs, dense gradients) through the serialize codecs."""
+    return serialize.dumps(_to_obj(msg), compress=codec is not None,
+                           codec=codec)
+
+
+def decode_message(data: bytes):
+    return _from_obj(serialize.loads(data))
+
+
+def wire_size(msg, *, codec: Optional[str] = None) -> int:
+    """Encoded size of a message — the cost-model observable."""
+    return len(encode_message(msg, codec=codec))
+
+
+# ---------------------------------------------------------------------------
+# messages: requests
+# ---------------------------------------------------------------------------
+
+@wire
+@dataclass(frozen=True)
+class Hello:
+    """Bind this connection to a consumer id (gateway registration)."""
+    consumer: str
+
+
+@wire
+@dataclass(frozen=True)
+class LeaseReq:
+    queue: str
+    consumer: str
+    now: float
+    timeout: Optional[float] = None
+
+
+@wire
+@dataclass(frozen=True)
+class Ack:
+    queue: str
+    tag: int
+
+
+@wire
+@dataclass(frozen=True)
+class Nack:
+    """Voluntary give-back (dependency not ready); requeues at the front."""
+    queue: str
+    tag: int
+    front: bool = True
+
+
+@wire
+@dataclass(frozen=True)
+class PublishResult:
+    """Publish a GradResult onto a results queue."""
+    queue: str
+    result: Any
+
+
+@wire
+@dataclass(frozen=True)
+class FetchModel:
+    version: int
+    nbytes: int = 0
+
+
+@wire
+@dataclass(frozen=True)
+class PublishModel:
+    version: int
+    blob: Any
+    nbytes: int = 0
+
+
+@wire
+@dataclass(frozen=True)
+class GcModels:
+    keep_last: int = 2
+
+
+@wire
+@dataclass(frozen=True)
+class WatchVersion:
+    version: int
+    consumer: str
+
+
+@wire
+@dataclass(frozen=True)
+class SubscribeQueue:
+    queue: str
+    consumer: str
+    kind: str = "any"
+
+
+@wire
+@dataclass(frozen=True)
+class KickQueue:
+    """Hand a consumed wake back to the next waiter (woken consumer died)."""
+    queue: str
+
+
+@wire
+@dataclass(frozen=True)
+class DropConsumer:
+    consumer: str
+
+
+@wire
+@dataclass(frozen=True)
+class DepthReq:
+    queue: str
+
+
+@wire
+@dataclass(frozen=True)
+class DrainedReq:
+    queue: str
+
+
+@wire
+@dataclass(frozen=True)
+class LatestReq:
+    pass
+
+
+@wire
+@dataclass(frozen=True)
+class Bye:
+    """Volunteer leaves: unsubscribe everywhere + requeue held leases."""
+    consumer: str
+
+
+# ---------------------------------------------------------------------------
+# messages: replies
+# ---------------------------------------------------------------------------
+
+@wire
+@dataclass(frozen=True)
+class LeaseGrant:
+    tag: int
+    body: Any
+
+
+@wire
+@dataclass(frozen=True)
+class LeaseEmpty:
+    pass
+
+
+@wire
+@dataclass(frozen=True)
+class Ok:
+    """Generic acknowledgement reply; ``value`` carries the op's scalar result
+    (ack/nack success, depth, drained, drop count...)."""
+    value: Any = None
+
+
+@wire
+@dataclass(frozen=True)
+class ModelBlob:
+    version: int
+    present: bool
+    blob: Any = None
+
+
+@wire
+@dataclass(frozen=True)
+class LatestVersion:
+    version: int
+
+
+# ---------------------------------------------------------------------------
+# messages: async notifications (server -> client)
+# ---------------------------------------------------------------------------
+
+@wire
+@dataclass(frozen=True)
+class Wake:
+    """A queue subscription fired (publish, or requeue for kind="any")."""
+    queue: str
+    kind: str = "any"
+
+
+@wire
+@dataclass(frozen=True)
+class VersionReady:
+    """A watched model version committed."""
+    version: int
+
+
+NOTIFICATION_TYPES = (Wake, VersionReady)
+
+REQUEST_TYPES = (Hello, LeaseReq, Ack, Nack, PublishResult, FetchModel,
+                 PublishModel, GcModels, WatchVersion, SubscribeQueue,
+                 KickQueue, DropConsumer, DepthReq, DrainedReq, LatestReq,
+                 Bye)
+
+REPLY_TYPES = (LeaseGrant, LeaseEmpty, Ok, ModelBlob, LatestVersion)
+
+
+# ---------------------------------------------------------------------------
+# server half
+# ---------------------------------------------------------------------------
+
+class ServerEndpoint:
+    """Dispatch one request message onto (QueueServer, DataServer) and return
+    the reply message. Subscription/watch fires leave as ``Wake`` /
+    ``VersionReady`` notifications through ``notify(consumer, msg)`` — which a
+    transport routes back to the owning engine (possibly over bytes, possibly
+    through injected faults)."""
+
+    def __init__(self, qs, ds: DataServer,
+                 notify: Optional[Callable[[str, Any], None]] = None):
+        self.qs = qs
+        self.ds = ds
+        self._notify = notify if notify is not None else (lambda c, m: None)
+
+    def set_notify(self, notify: Callable[[str, Any], None]) -> None:
+        self._notify = notify
+
+    def handle(self, m):
+        if isinstance(m, LeaseReq):
+            got = self.qs.lease(m.queue, m.consumer, m.now, m.timeout)
+            return LeaseEmpty() if got is None else LeaseGrant(*got)
+        if isinstance(m, Ack):
+            return Ok(self.qs.ack(m.queue, m.tag))
+        if isinstance(m, Nack):
+            return Ok(self.qs.nack(m.queue, m.tag, front=m.front))
+        if isinstance(m, PublishResult):
+            return Ok(self.qs.publish(m.queue, m.result))
+        if isinstance(m, FetchModel):
+            blob = self.ds.get_model(m.version, nbytes=m.nbytes)
+            return ModelBlob(m.version, blob is not None, blob)
+        if isinstance(m, PublishModel):
+            return Ok(self.ds.publish_model(m.version, m.blob,
+                                            nbytes=m.nbytes))
+        if isinstance(m, GcModels):
+            self.ds.gc_models(keep_last=m.keep_last)
+            return Ok()
+        if isinstance(m, WatchVersion):
+            self.ds.watch_version(
+                m.version,
+                lambda: self._notify(m.consumer, VersionReady(m.version)))
+            return Ok()
+        if isinstance(m, SubscribeQueue):
+            self.qs.subscribe(
+                m.queue, m.consumer,
+                lambda: self._notify(m.consumer, Wake(m.queue, m.kind)),
+                kind=m.kind)
+            return Ok()
+        if isinstance(m, KickQueue):
+            self.qs.kick(m.queue)
+            return Ok()
+        if isinstance(m, DropConsumer):
+            return Ok(self.qs.drop_consumer(m.consumer))
+        if isinstance(m, DepthReq):
+            return Ok(self.qs.depth(m.queue))
+        if isinstance(m, DrainedReq):
+            return Ok(self.qs.drained([m.queue]))
+        if isinstance(m, LatestReq):
+            return LatestVersion(self.ds.latest_version)
+        if isinstance(m, Bye):
+            self.qs.unsubscribe(m.consumer)
+            return Ok(self.qs.drop_consumer(m.consumer))
+        if isinstance(m, Hello):
+            return Ok(m.consumer)
+        raise TypeError(f"unknown protocol message {type(m).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# client half: session outcomes
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class NoTask:
+    """The task queue is empty; wait for a publish/requeue (or stop if the
+    queue is drained and the run is ending)."""
+
+
+@dataclass(frozen=True)
+class TaskLeased:
+    task: Any
+
+
+@dataclass(frozen=True)
+class Blocked:
+    """What to wait for. Exactly one of (queue, version) is set; the engine
+    chooses the mechanism — ``session.subscribe(blocked)`` for push, or its
+    own reschedule for poll."""
+    queue: Optional[str] = None
+    kind: str = "any"
+    version: Optional[int] = None
+
+
+@dataclass(frozen=True)
+class MapWork:
+    """Model fetched: the engine must produce this map task's gradient (real
+    or simulated) and call ``finish_map``."""
+    task: Any
+    model: Any
+
+
+@dataclass(frozen=True)
+class ReduceWork:
+    """Barrier met, results drained + deduped: the engine must produce model
+    version+1 (real or simulated) and call ``finish_reduce``."""
+    task: Any
+    results: Dict[int, Any]           # mb_index -> gradient payload
+
+
+@dataclass(frozen=True)
+class TaskDone:
+    task: Any
+    stale: bool = False               # acked an obsolete duplicate, no work
+
+
+@dataclass(frozen=True)
+class Busy:
+    """A compute was already handed out (``MapWork``/``ReduceWork``) and not
+    finished: the wake that triggered this advance is spurious (duplicate or
+    delayed delivery) and must be dropped, not acted on."""
+    task: Any
+
+
+class VolunteerSession:
+    """One volunteer's sans-IO protocol state machine.
+
+    Drive it with ``lease`` -> ``advance`` -> (``finish_map`` |
+    ``finish_reduce``); every server effect is a message through ``port.call``.
+    The session owns the protocol rules; the engine owns time, compute, and
+    the waiting mechanism.
+    """
+
+    def __init__(self, vid: str, port, *, model_nbytes: int = 0):
+        self.vid = vid
+        self.port = port
+        self.model_nbytes = model_nbytes  # accounting hint for FetchModel
+        self.tag: Optional[int] = None
+        self.task: Any = None
+        self._rtags: list = []            # leased results-queue tags (reduce)
+        self._handed = False              # compute handed out, not yet finished
+
+    # -- plumbing -----------------------------------------------------------
+    def _call(self, msg):
+        return self.port.call(msg)
+
+    def latest(self) -> int:
+        return self._call(LatestReq()).version
+
+    def _clear(self):
+        self.tag = self.task = None
+        self._rtags = []
+        self._handed = False
+
+    # -- protocol: lease ----------------------------------------------------
+    def lease(self, now: float):
+        """Try to lease the next task from the task queue."""
+        assert self.task is None, f"{self.vid}: lease while holding a task"
+        r = self._call(LeaseReq(INITIAL_QUEUE, self.vid, now))
+        if isinstance(r, LeaseEmpty):
+            return NoTask()
+        self.tag, self.task = r.tag, r.body
+        return TaskLeased(self.task)
+
+    # -- protocol: advance a held task up to its compute --------------------
+    def advance(self, now: float):
+        """Move the held task forward until it blocks, completes as a stale
+        duplicate, or is ready for engine compute. Re-entrant: call again
+        after a wake (or poll tick) while it returns ``Blocked``."""
+        t = self.task
+        assert t is not None, f"{self.vid}: advance with no task"
+        if self._handed:                  # spurious wake mid-compute
+            return Busy(t)
+        if self.latest() > t.version:
+            # obsolete duplicate (requeued after someone else's result was
+            # reduced) — ack without compute: at-least-once + idempotent
+            self._call(Ack(INITIAL_QUEUE, self.tag))
+            done = TaskDone(t, stale=True)
+            self._clear()
+            return done
+        if t.kind == "map":
+            r = self._call(FetchModel(t.version, self.model_nbytes))
+            if not r.present:
+                return Blocked(version=t.version)
+            self._handed = True
+            return MapWork(t, r.blob)
+        return self._advance_reduce(now, t)
+
+    def _advance_reduce(self, now: float, t):
+        rq = results_queue(t.version)
+        if self._call(DepthReq(rq)).value < t.n_mb:
+            # barrier not reached: wait for the next result publish (requeues
+            # — including our own nacks below — must not wake the barrier)
+            return Blocked(queue=rq, kind="publish")
+        tags, results = [], {}
+        while True:
+            r = self._call(LeaseReq(rq, self.vid, now))
+            if isinstance(r, LeaseEmpty):
+                break
+            tags.append(r.tag)
+            results.setdefault(r.body.mb_index, r.body.payload)  # dedup by mb
+        if len(results) < t.n_mb:
+            for tg in tags:
+                self._call(Nack(rq, tg, front=True))
+            return Blocked(queue=rq, kind="publish")
+        self._rtags = tags
+        self._handed = True
+        return ReduceWork(t, results)
+
+    # -- protocol: completions ----------------------------------------------
+    def finish_map(self, payload, nbytes: int, loss: float):
+        """Publish the gradient and ack the map task (re-checking staleness:
+        in virtual-time engines the version may have advanced mid-compute)."""
+        t = self.task
+        if self.latest() > t.version:
+            self._call(Ack(INITIAL_QUEUE, self.tag))
+            done = TaskDone(t, stale=True)
+            self._clear()
+            return done
+        self._call(PublishResult(
+            results_queue(t.version),
+            GradResult(t.version, t.mb_index, payload, nbytes, loss,
+                       self.vid)))
+        self._call(Ack(INITIAL_QUEUE, self.tag))
+        done = TaskDone(t)
+        self._clear()
+        return done
+
+    def fetch_model(self, nbytes: int = 0):
+        """Fetch the held (reduce) task's model blob — engine compute input."""
+        return self._call(FetchModel(self.task.version, nbytes)).blob
+
+    def result_message(self, payload, nbytes: int, loss: float) -> PublishResult:
+        """The PublishResult ``finish_map`` would send — lets a measuring
+        engine price the push before committing to it."""
+        t = self.task
+        return PublishResult(
+            results_queue(t.version),
+            GradResult(t.version, t.mb_index, payload, nbytes, loss, self.vid))
+
+    def model_message(self, blob, nbytes: int = 0) -> PublishModel:
+        """The PublishModel ``finish_reduce`` would send (pricing, as above)."""
+        return PublishModel(self.task.version + 1, blob, nbytes)
+
+    def finish_reduce(self, blob, nbytes: int = 0,
+                      gc_keep: Optional[int] = None):
+        """Publish model version+1, then ack the drained results and the
+        reduce task. Duplicate publishes are absorbed by the DataServer."""
+        t = self.task
+        self._call(PublishModel(t.version + 1, blob, nbytes))
+        if gc_keep is not None:
+            self._call(GcModels(gc_keep))
+        rq = results_queue(t.version)
+        for tg in self._rtags:
+            self._call(Ack(rq, tg))
+        self._call(Ack(INITIAL_QUEUE, self.tag))
+        done = TaskDone(t)
+        self._clear()
+        return done
+
+    # -- protocol: waits ----------------------------------------------------
+    def subscribe(self, blocked: Blocked) -> None:
+        """Push-mode wait: register for exactly the wake ``blocked`` names."""
+        if blocked.version is not None:
+            self._call(WatchVersion(blocked.version, self.vid))
+        else:
+            self._call(SubscribeQueue(blocked.queue, self.vid, blocked.kind))
+
+    def subscribe_idle(self) -> None:
+        """Idle wait: wake on the next task-queue publish or requeue."""
+        self._call(SubscribeQueue(INITIAL_QUEUE, self.vid, "any"))
+
+    def queue_drained(self) -> bool:
+        return self._call(DrainedReq(INITIAL_QUEUE)).value
+
+    # -- protocol: departure -------------------------------------------------
+    def abort(self, *, kick_if_empty: bool = False) -> int:
+        """The volunteer died mid-protocol: requeue everything it held —
+        DropConsumer covers the task lease AND any drained results-queue
+        leases in one sweep. A consumed wake it can no longer serve is passed
+        on (``kick_if_empty``) so no event is lost. Returns the number of
+        requeued leases."""
+        n = self._call(DropConsumer(self.vid)).value
+        if n == 0 and kick_if_empty:
+            self._call(KickQueue(INITIAL_QUEUE))
+        self._clear()
+        return n
+
+    def bye(self) -> int:
+        """Clean departure: unsubscribe everywhere + requeue held leases."""
+        n = self._call(Bye(self.vid)).value
+        self._clear()
+        return n

@@ -69,8 +69,16 @@ class Queue:
         # one-shot waiters. "any" wakes on publish OR requeue (a task became
         # leasable); "publish" wakes on publish only (new data arrived — the
         # reduce-barrier watcher, which must not be woken by its own nacks).
+        # At most ONE live waiter per consumer per kind: a re-subscribe while
+        # the previous waiter is still registered is a no-op (the client
+        # cannot tell a live waiter from a consumed-and-lost wake, so lossy
+        # transports re-subscribe defensively — without the dedupe those
+        # retries would stack duplicate waiters that steal other consumers'
+        # wakes). The name sets shadow the deques for O(1) membership.
         self._waiters: deque = deque()            # (consumer, callback)
         self._pub_waiters: deque = deque()
+        self._waiter_names: set = set()
+        self._pub_waiter_names: set = set()
         self._signal = False                      # event arrived with no waiter
         self._pub_signal = False
         self.published = 0
@@ -137,15 +145,17 @@ class Queue:
                 self._pub_signal = False
                 self.wakeups += 1
                 callback()
-            else:
+            elif consumer not in self._pub_waiter_names:
                 self._pub_waiters.append((consumer, callback))
+                self._pub_waiter_names.add(consumer)
             return
         if self._signal:
             self._signal = False
             self.wakeups += 1
             callback()
-        else:
+        elif consumer not in self._waiter_names:
             self._waiters.append((consumer, callback))
+            self._waiter_names.add(consumer)
 
     def unsubscribe(self, consumer: str) -> int:
         """Remove every waiter registered by this consumer (volunteer left)."""
@@ -154,6 +164,8 @@ class Queue:
                               if c != consumer)
         self._pub_waiters = deque((c, cb) for c, cb in self._pub_waiters
                                   if c != consumer)
+        self._waiter_names.discard(consumer)
+        self._pub_waiter_names.discard(consumer)
         return n - len(self._waiters) - len(self._pub_waiters)
 
     def kick(self) -> None:
@@ -163,14 +175,16 @@ class Queue:
 
     def _notify(self, *, publish: bool) -> None:
         if self._waiters:
-            _, cb = self._waiters.popleft()
+            c, cb = self._waiters.popleft()
+            self._waiter_names.discard(c)
             self.wakeups += 1
             cb()
         else:
             self._signal = True
         if publish:
             if self._pub_waiters:
-                _, cb = self._pub_waiters.popleft()
+                c, cb = self._pub_waiters.popleft()
+                self._pub_waiter_names.discard(c)
                 self.wakeups += 1
                 cb()
             else:
@@ -252,6 +266,10 @@ class Queue:
             f"{self.name}: conservation violated: published={self.published} " \
             f"!= acked={self.acked} + depth={self.depth} + " \
             f"in_flight={self.in_flight}"
+        assert self._waiter_names == {c for c, _ in self._waiters}, \
+            f"{self.name}: waiter name set out of sync"
+        assert self._pub_waiter_names == {c for c, _ in self._pub_waiters}, \
+            f"{self.name}: publish-waiter name set out of sync"
 
 
 class QueueServer:

@@ -1,10 +1,16 @@
 """Discrete-event simulator of the JSDoop deployment (cluster & classroom).
 
 Reproduces the paper's scalability experiments (Figs. 4-8, Table 4) on one CPU
-by simulating heterogeneous volunteers over the *same* queue/dataserver
-semantics the real Coordinator uses. Costs:
+by simulating heterogeneous volunteers over the *same* protocol the real
+Coordinator uses: each volunteer is a ``protocol.VolunteerSession`` speaking
+typed messages to the QueueServer/DataServer through a ``transport``. The
+Simulator owns only virtual time and costs:
 
-- network: latency + bytes/bandwidth per transfer (model pull, gradient push),
+- network: latency + bytes/bandwidth per transfer (model pull, gradient push).
+  With ``transport="wire"`` every message round-trips through canonical bytes
+  and the cost model prices the MEASURED envelope sizes (plus the logical
+  payload bytes the synthetic placeholders stand in for) instead of
+  hand-estimating whole exchanges from ``model_bytes``/``grad_bytes``;
 - compute: task_flops / (volunteer speed * effective_throughput),
 - cache effect: the paper attributes its superlinear relative speedup to "more
   of its data can be placed in fast memory" when the work is spread over more
@@ -13,34 +19,43 @@ semantics the real Coordinator uses. Costs:
   through its cache sustains a penalized throughput; when k>=2 volunteers split
   the batch, the per-volunteer working set fits and throughput recovers.
 
-All semantics (lease/ack/requeue, version waits, reduce barrier, churn) are
-identical to the real Coordinator — asserted by tests.
+All protocol semantics (lease/ack/requeue, version waits, reduce barrier,
+churn) live in the shared ``VolunteerSession`` — identical to the real
+Coordinator by construction, and asserted by tests.
 
 Two coordination modes share every cost and protocol rule:
 
-- ``mode="event"`` (default): waits are push-based. An idle volunteer
-  subscribes to the task queue (woken by the next publish/requeue), a map task
-  whose model version is missing registers a ``DataServer.watch_version``, and
-  a reduce task's barrier subscribes to publishes on its results queue. Total
-  events scale with the amount of WORK, not with waiting time.
+- ``mode="event"`` (default): waits are push-based. A ``Blocked`` session
+  subscribes (task queue, ``DataServer.watch_version``, or the reduce
+  barrier's publish-only subscription) and the ``Wake``/``VersionReady``
+  notification message resumes it. Total events scale with the amount of
+  WORK, not with waiting time.
 - ``mode="poll"``: the pre-subscription baseline — every wait reschedules
   itself every ``cost.poll_interval`` seconds, so events scale with
   O(volunteers x makespan / poll_interval). Kept for benchmarking
   (`benchmarks/volunteer_scaling.py`) and the cross-mode equivalence tests.
+
+``faults=FaultSpec(...)`` wraps the transport in a ``FaultyTransport`` that
+drops/duplicates/delays notification deliveries; a lost wake strands its
+volunteer, and the run recovers through the visibility-timeout expiry path
+(the run loop advances the clock to the next deadline when the event heap
+would otherwise starve).
 """
 from __future__ import annotations
 
 import heapq
 import itertools
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple, Union
 
 from repro.core.dataserver import DataServer
 from repro.core.mapreduce import TrainingProblem
+from repro.core.protocol import (Blocked, Busy, MapWork, NoTask, ReduceWork,
+                                 ServerEndpoint, TaskDone, VolunteerSession,
+                                 wire_size)
 from repro.core.queue import QueueServer, ShardedQueueServer
-from repro.core.tasks import (INITIAL_QUEUE, GradResult, MapTask, ReduceTask,
-                              results_queue)
+from repro.core.transport import FaultSpec, FaultyTransport, make_transport
 
 
 @dataclass
@@ -144,6 +159,7 @@ class SimResult:
     poll_events: int = 0             # events that were poll reschedules
     mode: str = "event"
     expire_scans: int = 0            # expiry sweeps actually performed
+    wire_bytes: float = 0.0          # measured transport bytes (wire mode)
 
 
 class Simulator:
@@ -153,7 +169,10 @@ class Simulator:
                  cost: CostModel = None, n_versions: Optional[int] = None,
                  visibility_timeout: float = 900.0, grad_bytes=None,
                  model_bytes=None, mode: str = "event", n_shards: int = 1,
-                 max_events: int = 5_000_000):
+                 max_events: int = 5_000_000,
+                 transport: str = "inproc",
+                 faults: Optional[FaultSpec] = None, fault_seed: int = 0,
+                 watchdog: Optional[bool] = None):
         from repro.core.initiator import enqueue_problem
         if mode not in ("event", "poll"):
             raise ValueError(f"unknown mode {mode!r}")
@@ -165,11 +184,30 @@ class Simulator:
             QueueServer(default_timeout=visibility_timeout) if n_shards <= 1
             else ShardedQueueServer(n_shards, default_timeout=visibility_timeout))
         self.ds = DataServer()
+        self.endpoint = ServerEndpoint(self.qs, self.ds)
+        self.port = make_transport(transport, self.endpoint)
+        if faults is not None:
+            self.port = FaultyTransport(
+                self.port, faults, seed=fault_seed,
+                defer=lambda dt, fn: self._post(self._now + dt, fn))
+        self.port.set_deliver(self._on_notify)
+        self._measuring = self.port.measures_bytes
+        # Push notifications are lossy only under injected faults; real
+        # volunteer clients back a push wait with a coarse re-check timer
+        # (paper §IV.F solution 2: "check if a datum has been modified").
+        # Armed ONLY when faults are injected so fault-free event-mode runs
+        # stay bit-identical (and event counts unpolluted).
+        self._watchdog_dt = (
+            visibility_timeout if math.isfinite(visibility_timeout)
+            else 10.0 * self.cost.poll_interval)
+        self._watchdog = (faults is not None if watchdog is None
+                          else watchdog) and mode == "event"
         self.n_versions = (n_versions if n_versions is not None
                            else problem.n_versions)
         enqueue_problem(problem, self.qs, self.ds, n_versions=self.n_versions,
                         store_real_model=False)
         self.specs = {s.vid: s for s in specs}
+        self.sessions: Dict[str, VolunteerSession] = {}
         self.grad_bytes = grad_bytes if grad_bytes is not None else problem.grad_bytes
         self.model_bytes = model_bytes if model_bytes is not None else problem.model_bytes
         self.map_flops = problem.flops_per_map()
@@ -177,6 +215,7 @@ class Simulator:
         # per-batch working set: model+opt state+minibatch activations per task
         self._heap: List[Tuple[float, int, Callable]] = []
         self._seq = itertools.count()
+        self._now = 0.0
         self.timeline: List[TimelineEvent] = []
         self.tasks_by_worker: Dict[str, int] = {}
         self.busy: Dict[str, float] = {}
@@ -195,10 +234,35 @@ class Simulator:
         self.poll_events += 1
         self._post(t, fn)
 
+    def _session(self, vid: str) -> VolunteerSession:
+        sess = self.sessions.get(vid)
+        if sess is None:
+            sess = self.sessions[vid] = VolunteerSession(vid, self.port)
+        return sess
+
+    def _wire_bytes(self) -> float:
+        inner = getattr(self.port, "inner", self.port)
+        return float(getattr(inner, "bytes_sent", 0)
+                     + getattr(inner, "bytes_received", 0))
+
     def run(self) -> SimResult:
         for s in self.specs.values():
             self._post(s.join_time, lambda vid=s.vid: self._wake(vid))
-        while self._heap and self.ds.latest_version < self.n_versions:
+        while self.ds.latest_version < self.n_versions:
+            if not self._heap:
+                # a lost notification (FaultyTransport) can strand every
+                # volunteer at once: advance the clock to the next visibility
+                # deadline so expiry requeues — and their wakes — restart the
+                # run. This is the lease-expiry recovery path; without faults
+                # it is unreachable (subscriptions keep the heap fed).
+                dl = self.qs.next_deadline()
+                if dl is None or not math.isfinite(dl):
+                    break
+                self.events += 1
+                self._now = dl
+                self.expire_scans += 1
+                self.expired += self.qs.expire_all(dl)
+                continue
             self.events += 1
             if self.events > self.max_events:
                 raise RuntimeError("simulator runaway")
@@ -216,70 +280,95 @@ class Simulator:
                          dict(self.tasks_by_worker), self.qs.total_requeued,
                          self.ds.latest_version, self.bytes_sent,
                          dict(self.busy), self.events, self.poll_events,
-                         self.mode, self.expire_scans)
+                         self.mode, self.expire_scans, self._wire_bytes())
 
     def _alive(self, vid: str) -> bool:
         s = self.specs[vid]
         return s.join_time <= self._now < s.leave_time
 
-    # wait primitives: poll reschedules, event subscribes ----------------------
-    def _resume(self, fn: Callable):
-        """Subscription callback -> simulator event at the current virtual time
-        (the wake happens inside whatever event triggered the notify)."""
-        self._post(self._now, fn)
+    # wait primitives: poll reschedules, event notifications -------------------
+    def _on_notify(self, vid: str, msg) -> None:
+        """Wake/VersionReady notification -> simulator event at the current
+        virtual time (the wake happens inside whatever event triggered it)."""
+        self._post(self._now, lambda: self._continue(vid))
+
+    def _continue(self, vid: str) -> None:
+        """Resume a volunteer where its session left off: idle volunteers try
+        to lease, task holders retry their blocked dependency."""
+        if self._session(vid).task is None:
+            self._wake(vid)
+        else:
+            self._dispatch(vid)
+
+    def _advance(self, sess: VolunteerSession):
+        """session.advance plus the measured-bytes tap around it (wire mode)."""
+        if self._measuring:
+            self.port.take_bytes()
+        out = sess.advance(self._now)
+        return out, (self.port.take_bytes() if self._measuring else 0.0)
 
     def _wake(self, vid: str):
         """Volunteer becomes idle at _now: try to lease the next task."""
         if self.ds.latest_version >= self.n_versions:
             return
+        sess = self._session(vid)
         if not self._alive(vid):
             # a departed volunteer: requeue whatever it held (wakes the next
             # waiter via the requeue notification); if it consumed a wake while
             # holding nothing, pass that wake on so no event is lost
-            if self.qs.drop_consumer(vid) == 0:
-                self.qs.kick(INITIAL_QUEUE)
+            sess.abort(kick_if_empty=True)
             return
         now = self._now
-        got = self.qs.lease(INITIAL_QUEUE, vid, now)
-        if got is None:
-            if not self.qs.drained([INITIAL_QUEUE]):
+        out = sess.lease(now)
+        if isinstance(out, NoTask):
+            if not sess.queue_drained():
                 if self.mode == "poll":
                     self._post_poll(now + self.cost.poll_interval,
                                     lambda: self._wake(vid))
                 else:
-                    self.qs.subscribe(INITIAL_QUEUE, vid,
-                                      lambda: self._resume(
-                                          lambda: self._wake(vid)))
+                    sess.subscribe_idle()
+                    if self._watchdog:
+                        # idle waits have no lease to expire, so a dropped
+                        # Wake needs the same client-side re-check fallback
+                        self._post(now + self._watchdog_dt,
+                                   lambda: self._continue(vid))
             return
-        tag, task = got
-        self._post(now + self.cost.latency,
-                   lambda: self._dispatch(vid, tag, task))
+        self._post(now + self.cost.latency, lambda: self._dispatch(vid))
 
-    def _dispatch(self, vid: str, tag: int, task):
+    def _dispatch(self, vid: str):
+        sess = self._session(vid)
         if not self._alive(vid):
-            self.qs.drop_consumer(vid)
+            sess.abort()
             return
-        if isinstance(task, MapTask):
-            self._run_map(vid, tag, task)
+        out, adv_bytes = self._advance(sess)
+        if isinstance(out, Busy):            # spurious (duplicate/late) wake
+            return
+        if isinstance(out, TaskDone):        # obsolete duplicate, acked
+            self._post(self._now, lambda: self._wake(vid))
+            return
+        if isinstance(out, Blocked):
+            if self.mode == "poll":
+                self._post_poll(self._now + self.cost.poll_interval,
+                                lambda: self._dispatch(vid))
+            else:
+                sess.subscribe(out)
+                if self._watchdog:
+                    # lost-push fallback: re-drive this volunteer later; a
+                    # session that progressed meanwhile absorbs it (Busy /
+                    # spurious lease attempt)
+                    self._post(self._now + self._watchdog_dt,
+                               lambda: self._continue(vid))
+            return
+        if isinstance(out, MapWork):
+            self._run_map(vid, sess, out, adv_bytes)
         else:
-            self._run_reduce(vid, tag, task)
+            self._run_reduce(vid, sess, out, adv_bytes)
 
     # ------------------------------------------------------------------ map
-    def _run_map(self, vid: str, tag: int, t: MapTask):
+    def _run_map(self, vid: str, sess: VolunteerSession, work: MapWork,
+                 adv_bytes: float):
         now = self._now
-        if self.ds.latest_version > t.version:
-            self.qs.ack(INITIAL_QUEUE, tag)
-            self._post(now, lambda: self._wake(vid))
-            return
-        if self.ds.get_model(t.version) is None:
-            if self.mode == "poll":
-                self._post_poll(now + self.cost.poll_interval,
-                                lambda: self._dispatch(vid, tag, t))
-            else:
-                self.ds.watch_version(
-                    t.version,
-                    lambda: self._resume(lambda: self._dispatch(vid, tag, t)))
-            return
+        t = work.task
         spec = self.specs[vid]
         # working set: a lone volunteer cycles model+opt+the whole 128-batch
         # through cache; k volunteers each hold ~1/k of the batch's tasks.
@@ -289,23 +378,27 @@ class Simulator:
                  + self.grad_bytes
                  + self._batch_bytes() / max(active, 1))
         thr = self.cost.throughput(spec.speed, share)
-        fetch = self.cost.xfer(self.model_bytes)
+        if self._measuring:
+            # envelope bytes are real; the payloads are synthetic placeholders
+            # (None gradients, string model blobs), so add the logical sizes
+            # they stand in for — measured overhead + modeled payload
+            fetch_b = adv_bytes + self.model_bytes
+            push_b = wire_size(sess.result_message(None, self.grad_bytes,
+                                                   0.0)) + self.grad_bytes
+        else:
+            fetch_b, push_b = self.model_bytes, self.grad_bytes
+        fetch = self.cost.xfer(fetch_b)
         compute = self.map_flops / thr
-        push = self.cost.xfer(self.grad_bytes)
+        push = self.cost.xfer(push_b)
         start = now + fetch
         end = start + compute + push
 
         def finish():
             if not self._alive(vid):
-                self.qs.drop_consumer(vid)  # task requeues via its lease
+                sess.abort()                # task requeues via its lease
                 return
-            if self.ds.latest_version > t.version:
-                self.qs.ack(INITIAL_QUEUE, tag)
-            else:
-                self.qs.publish(results_queue(t.version),
-                                GradResult(t.version, t.mb_index, None,
-                                           self.grad_bytes, 0.0, vid))
-                self.qs.ack(INITIAL_QUEUE, tag)
+            done = sess.finish_map(None, self.grad_bytes, 0.0)
+            if not done.stale:
                 self.timeline.append(TimelineEvent(vid, "Compute", now, end,
                                                    t.version))
                 self.tasks_by_worker[vid] = self.tasks_by_worker.get(vid, 0) + 1
@@ -321,61 +414,32 @@ class Simulator:
         return tp.batch_size * sample
 
     # ------------------------------------------------------------------ reduce
-    def _run_reduce(self, vid: str, tag: int, t: ReduceTask):
+    def _run_reduce(self, vid: str, sess: VolunteerSession, work: ReduceWork,
+                    adv_bytes: float):
         now = self._now
-        if self.ds.latest_version > t.version:
-            self.qs.ack(INITIAL_QUEUE, tag)
-            self._post(now, lambda: self._wake(vid))
-            return
-        rq = results_queue(t.version)
-
-        def wait_for_results():
-            if self.mode == "poll":
-                self._post_poll(now + self.cost.poll_interval,
-                                lambda: self._dispatch(vid, tag, t))
-            else:
-                # woken by the NEXT publish on the results queue — requeues
-                # (e.g. our own nacks below) must not wake the barrier
-                self.qs.subscribe(rq, vid,
-                                  lambda: self._resume(
-                                      lambda: self._dispatch(vid, tag, t)),
-                                  kind="publish")
-
-        if self.qs.depth(rq) < t.n_mb:
-            wait_for_results()
-            return
-        tags = []
-        seen = set()
-        while True:
-            got = self.qs.lease(rq, vid, now)
-            if got is None:
-                break
-            rtag, res = got
-            tags.append(rtag)
-            seen.add(res.mb_index)
-        if len(seen) < t.n_mb:
-            for rtag in tags:
-                self.qs.nack(rq, rtag)
-            wait_for_results()
-            return
+        t = work.task
         spec = self.specs[vid]
-        pull = self.cost.xfer(self.grad_bytes * t.n_mb) + self.cost.xfer(
-            self.model_bytes)
+        if self._measuring:
+            # envelope bytes measured; logical payloads padded in: the leased
+            # gradients, the model pull the real Coordinator performs here,
+            # and the published model blob
+            pull = self.cost.xfer(adv_bytes + self.grad_bytes * t.n_mb
+                                  + self.model_bytes)
+            push = self.cost.xfer(
+                wire_size(sess.model_message("blob", self.model_bytes))
+                + self.model_bytes)
+        else:
+            pull = self.cost.xfer(self.grad_bytes * t.n_mb) + self.cost.xfer(
+                self.model_bytes)
+            push = self.cost.xfer(self.model_bytes)
         compute = self.reduce_flops / (self.cost.flops_per_sec * spec.speed)
-        push = self.cost.xfer(self.model_bytes)
         end = now + pull + compute + push
 
         def finish():
             if not self._alive(vid):
-                self.qs.drop_consumer(vid)
-                for rtag in tags:
-                    self.qs.nack(rq, rtag)
+                sess.abort()                # drop leases + nack drained results
                 return
-            self.ds.publish_model(t.version + 1, "blob",
-                                  nbytes=self.model_bytes)
-            for rtag in tags:
-                self.qs.ack(rq, rtag)
-            self.qs.ack(INITIAL_QUEUE, tag)
+            sess.finish_reduce("blob", self.model_bytes)
             self.timeline.append(TimelineEvent(vid, "Accumulate", now, end,
                                                t.version))
             self.tasks_by_worker[vid] = self.tasks_by_worker.get(vid, 0) + 1

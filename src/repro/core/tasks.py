@@ -49,3 +49,8 @@ class GradResult:
     nbytes: int = 0
     loss: float = 0.0
     worker: str = ""
+
+
+# task/result bodies that may ride inside protocol messages — registered with
+# the wire codec in repro.core.protocol so they round-trip bytes by name
+WIRE_TYPES = (MapTask, ReduceTask, GradResult)

@@ -1,7 +1,8 @@
 """Paper Table 4's headline result as exact tests: the trained model is
-bit-identical for ANY number of volunteers, ANY churn pattern, and for the
-simulator's execution order — because the reduce rebuilds the same batch-128
-update the sequential algorithm applies.
+bit-identical for ANY number of volunteers, ANY churn pattern, ANY transport
+(direct in-process calls or every protocol message round-tripped through
+canonical bytes), and for the simulator's execution order — because the
+reduce rebuilds the same batch-128 update the sequential algorithm applies.
 """
 from __future__ import annotations
 
@@ -35,19 +36,22 @@ def _bitmatch(a, b) -> bool:
                for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
 
 
+@pytest.mark.parametrize("transport", ["inproc", "wire"])
 @pytest.mark.parametrize("k", [1, 2, 3, 5, 8])
-def test_worker_count_invariance(problem, sequential, k):
-    res = Coordinator(problem, n_workers=k).run()
+def test_worker_count_invariance(problem, sequential, k, transport):
+    res = Coordinator(problem, n_workers=k, transport=transport).run()
     assert res.final_version == problem.n_versions
     assert _bitmatch(res.params, sequential[0])
 
 
-def test_churn_invariance(problem, sequential):
+@pytest.mark.parametrize("transport", ["inproc", "wire"])
+def test_churn_invariance(problem, sequential, transport):
     # volunteers leave mid-run (their leased tasks requeue) and others join —
     # the paper's classroom scenario 3
     churn = [(5, "leave", "w0"), (9, "leave", "w1"), (12, "join", "w9"),
              (20, "join", "w10")]
-    res = Coordinator(problem, n_workers=4, churn=churn).run()
+    res = Coordinator(problem, n_workers=4, churn=churn,
+                      transport=transport).run()
     assert _bitmatch(res.params, sequential[0])
     assert res.requeues >= 0
 

@@ -1,0 +1,208 @@
+"""Sans-IO protocol layer: message serialization, endpoint dispatch,
+VolunteerSession behavior, and the transport contracts.
+
+Satellite contract (ISSUE 3): EVERY protocol message plus MapTask /
+ReduceTask / GradResult round-trips through canonical bytes and compares
+equal — including through the stdlib-zlib fallback codec path — so the wire
+transport can never silently diverge from the in-process one.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import protocol as P
+from repro.core.dataserver import DataServer
+from repro.core.gateway import run_volunteer
+from repro.core.initiator import enqueue_problem
+from repro.core.queue import QueueServer
+from repro.core.simulator import SyntheticProblem
+from repro.core.tasks import GradResult, MapTask, ReduceTask
+from repro.core.transport import (FaultSpec, FaultyTransport,
+                                  InProcessTransport, WireTransport)
+
+# one representative instance of every message type (field values chosen to
+# exercise ints, floats, None, bools, strs)
+MESSAGES = [
+    P.Hello("w0"),
+    P.LeaseReq("initial", "w0", 12.5),
+    P.LeaseReq("initial", "w0", 0.0, timeout=30.0),
+    P.Ack("initial", 7),
+    P.Nack("map-results:v3", 9, front=False),
+    P.PublishResult("map-results:v2", GradResult(2, 5, None, 1024, 0.25, "w1")),
+    P.FetchModel(4, nbytes=2048),
+    P.PublishModel(5, "v5", nbytes=4096),
+    P.GcModels(keep_last=3),
+    P.WatchVersion(6, "w2"),
+    P.SubscribeQueue("initial", "w0", kind="publish"),
+    P.KickQueue("initial"),
+    P.DropConsumer("w3"),
+    P.DepthReq("map-results:v0"),
+    P.DrainedReq("initial"),
+    P.LatestReq(),
+    P.Bye("w0"),
+    P.LeaseGrant(3, MapTask(1, 0, 1, 2, 8)),
+    P.LeaseGrant(4, ReduceTask(1, 0, 1, 16)),
+    P.LeaseEmpty(),
+    P.Ok(),
+    P.Ok(True),
+    P.Ok(17),
+    P.ModelBlob(2, True, "v2"),
+    P.ModelBlob(3, False),
+    P.LatestVersion(9),
+    P.Wake("initial", "any"),
+    P.Wake("map-results:v1", "publish"),
+    P.VersionReady(4),
+]
+
+
+def test_message_registry_is_complete():
+    """Every declared message type appears in MESSAGES (so a new message
+    cannot dodge the round-trip contract below)."""
+    covered = {type(m) for m in MESSAGES}
+    declared = set(P.REQUEST_TYPES) | set(P.REPLY_TYPES) | \
+        set(P.NOTIFICATION_TYPES)
+    assert declared <= covered, declared - covered
+
+
+@pytest.mark.parametrize("codec", [None, "zlib"])
+@pytest.mark.parametrize("msg", MESSAGES, ids=lambda m: type(m).__name__)
+def test_every_message_roundtrips_bytes(msg, codec):
+    data = P.encode_message(msg, codec=codec)
+    assert isinstance(data, bytes)
+    # codec header byte from checkpoint.serialize: R raw, D zlib/deflate
+    assert data[:1] == (b"R" if codec is None else b"D")
+    back = P.decode_message(data)
+    assert type(back) is type(msg)
+    assert back == msg
+
+
+@pytest.mark.parametrize("codec", [None, "zlib"])
+def test_tasks_roundtrip_bytes(codec):
+    for task in (MapTask(3, 0, 3, 7, 8), ReduceTask(3, 0, 3, 16),
+                 GradResult(3, 7, None, 512, 1.5, "w9")):
+        assert P.decode_message(P.encode_message(task, codec=codec)) == task
+
+
+@pytest.mark.parametrize("codec", [None, "zlib"])
+def test_gradresult_with_array_payload_roundtrips(codec):
+    """A real gradient pytree (nested dicts of float32 arrays) survives the
+    bytes round-trip bit-exactly inside its PublishResult envelope."""
+    rng = np.random.default_rng(0)
+    payload = {"lstm": {"wx": rng.standard_normal((8, 16)).astype(np.float32),
+                        "b": rng.standard_normal((16,)).astype(np.float32)},
+               "head": rng.standard_normal((16, 4)).astype(np.float32)}
+    msg = P.PublishResult("map-results:v1",
+                          GradResult(1, 2, payload, 2048, 0.7, "w0"))
+    back = P.decode_message(P.encode_message(msg, codec=codec))
+    assert back.queue == msg.queue
+    r = back.result
+    assert (r.version, r.mb_index, r.nbytes, r.loss, r.worker) == \
+        (1, 2, 2048, 0.7, "w0")
+    assert np.array_equal(r.payload["lstm"]["wx"], payload["lstm"]["wx"])
+    assert np.array_equal(r.payload["lstm"]["b"], payload["lstm"]["b"])
+    assert np.array_equal(r.payload["head"], payload["head"])
+    assert r.payload["head"].dtype == np.float32
+
+
+def test_tuple_pytree_structure_survives_the_wire():
+    """msgpack coerces tuples to lists; the wire codec must restore them so
+    a tuple-structured blob (e.g. (params, opt_state)) or a tuple-bearing
+    gradient pytree decodes with the identical tree structure."""
+    params = {"w": np.ones((2, 2), np.float32)}
+    opt_state = {"ms": {"w": np.zeros((2, 2), np.float32)}}
+    msg = P.PublishModel(3, (params, opt_state), nbytes=64)
+    back = P.decode_message(P.encode_message(msg))
+    assert isinstance(back.blob, tuple) and len(back.blob) == 2
+    assert np.array_equal(back.blob[0]["w"], params["w"])
+    nested = P.Ok((1, (2.5, "x"), [3, (4,)]))
+    assert P.decode_message(P.encode_message(nested)) == nested
+
+
+def test_unknown_message_rejected_by_endpoint():
+    ep = P.ServerEndpoint(QueueServer(), DataServer())
+    with pytest.raises(TypeError):
+        ep.handle(object())
+
+
+# ---------------------------------------------------------------------------
+# session + transports drive a full run
+# ---------------------------------------------------------------------------
+
+def _endpoint(n_versions=3, n_mb=4):
+    problem = SyntheticProblem(n_versions=n_versions, n_mb=n_mb)
+    qs, ds = QueueServer(), DataServer()
+    enqueue_problem(problem, qs, ds, store_real_model=False)
+    return P.ServerEndpoint(qs, ds), problem
+
+
+def test_session_completes_run_over_inprocess_transport():
+    ep, problem = _endpoint()
+    final, tasks = run_volunteer(InProcessTransport(ep), "w0",
+                                 problem.n_versions)
+    assert final == problem.n_versions
+    assert tasks == problem.n_versions * (4 + 1)
+    assert ep.ds.latest_version == problem.n_versions
+
+
+def test_session_over_wire_transport_matches_inprocess():
+    """Same volunteer loop, every message through bytes: identical outcome,
+    and the transport actually measured traffic."""
+    ep_a, problem = _endpoint()
+    ref = run_volunteer(InProcessTransport(ep_a), "w0", problem.n_versions)
+    ep_b, _ = _endpoint()
+    wire = WireTransport(ep_b)
+    out = run_volunteer(wire, "w0", problem.n_versions)
+    assert out == ref
+    assert wire.bytes_sent > 0 and wire.bytes_received > 0
+    assert wire.calls > 0
+    assert wire.take_bytes() > 0          # tap accumulated since construction
+    assert wire.take_bytes() == 0.0       # ...and take() drains it
+
+
+def test_session_duplicate_task_acked_without_compute():
+    """Protocol rule owned by the session: a task whose version is already
+    reduced is acked as a stale duplicate and hands back no work."""
+    ep, problem = _endpoint(n_versions=2, n_mb=2)
+    port = InProcessTransport(ep)
+    sess = P.VolunteerSession("w0", port)
+    # complete the whole run with another volunteer, leaving w0 stalled
+    out = sess.lease(0.0)                  # w0 leases v0 map... and stalls
+    assert isinstance(out, P.TaskLeased)
+    ep.qs.nack("initial", sess.tag)        # server expires w0's lease
+    run_volunteer(InProcessTransport(ep), "hog", 2)
+    # w0 finally advances: its task's version is long obsolete
+    done = sess.advance(1.0)
+    assert isinstance(done, P.TaskDone) and done.stale
+    assert sess.task is None
+
+
+def test_faulty_transport_is_seed_deterministic():
+    spec = FaultSpec(drop_version_ready=0.5, duplicate=0.3, delay=0.2,
+                     max_faults=100)
+
+    def faults_for(seed):
+        ep, problem = _endpoint()
+        ft = FaultyTransport(WireTransport(ep), spec, seed=seed)
+        final, _ = run_volunteer(ft, "w0", problem.n_versions)
+        assert final == problem.n_versions
+        return dict(ft.faults)
+
+    assert faults_for(7) == faults_for(7)  # same seed -> same fault schedule
+
+
+def test_faulty_transport_drops_version_ready():
+    """drop_version_ready=1.0 suppresses watch fires entirely; requests pass
+    through untouched."""
+    ep, _ = _endpoint()
+    seen = []
+    ft = FaultyTransport(InProcessTransport(ep),
+                         FaultSpec(drop_version_ready=1.0), seed=0)
+    ft.set_deliver(lambda c, m: seen.append(m))
+    ft.call(P.WatchVersion(0, "w0"))       # v0 committed -> fires immediately
+    assert seen == []                      # ...but the delivery was dropped
+    assert ft.faults["drop"] == 1
+    ft.call(P.SubscribeQueue("initial", "w0"))
+    assert ft.call(P.DepthReq("initial")).value > 0
+    got = ft.call(P.LeaseReq("initial", "w0", 0.0))
+    assert isinstance(got, P.LeaseGrant)   # request path unaffected
