@@ -1,16 +1,26 @@
 """Paper §VI (bandwidth threat) — gradient-compression codecs on the wire.
 
 Measures, for the paper's model: bytes/map-task on the wire, end-to-end
-simulated makespan with each codec, and the real-training loss under each
-codec (error feedback on) — i.e., both sides of the trade.
+simulated makespan + total traffic with each codec under both the sync-BSP
+baseline and the policy-aware simulate path (BoundedStaleness async SGD —
+whose cost model ships the compressed gradient up per update), and the
+real-training loss under each codec (error feedback on) — i.e., both sides
+of the trade. On the reduced problem compute dominates, so the codec shows
+up mostly in the traffic columns; the makespan gap opens at paper scale.
 
-CSV: name,codec,bytes_per_map,compression_x,makespan_min,final_loss
+CSV: name,codec,bytes_per_map,compression_x,makespan_min,makespan_async_min,
+     sim_mb,sim_async_mb,final_loss
 """
 from __future__ import annotations
 
-import dataclasses
+import jax
 
-from benchmarks.common import cluster_cost, fmt_minutes, paper_problem, simulate
+if __package__ in (None, ""):              # `python benchmarks/compression.py`
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from benchmarks.common import cluster_cost, fmt_minutes, paper_problem
 from repro.core.coordinator import Coordinator
 from repro.optim import compression as CP
 
@@ -21,7 +31,8 @@ def main(reduced: bool = True):
     codecs = [("none", None),
               ("topk1%", CP.make_codec("topk", fraction=0.01)),
               ("ternary", CP.make_codec("ternary"))]
-    print("name,codec,bytes_per_map,compression_x,makespan_min,final_loss")
+    print("name,codec,bytes_per_map,compression_x,makespan_min,"
+          "makespan_async_min,sim_mb,sim_async_mb,final_loss")
     rows = []
     for cname, codec in codecs:
         if codec is None:
@@ -29,28 +40,35 @@ def main(reduced: bool = True):
         else:
             payload, nbytes = codec.encode(
                 jax.tree.map(lambda p: p.astype("float32"), problem.params0))
-        # timing: same schedule, smaller grad payloads
+        # timing: same schedule, smaller grad payloads — sync barrier AND the
+        # policy-aware path (async SGD pushes the same compressed gradients)
         res_t = simulate_with_gradbytes(problem, 8, nbytes)
+        res_a = simulate_with_gradbytes(problem, 8, nbytes,
+                                        policy="staleness:2")
         # learning: real coordinator run with the codec (EF inside)
         res_l = Coordinator(problem, n_workers=2, codec=codec,
                             n_versions=min(problem.n_versions, 8)).run()
         rows.append((cname, nbytes, dense / nbytes,
-                     fmt_minutes(res_t.makespan), res_l.losses[-1]))
+                     fmt_minutes(res_t.makespan), fmt_minutes(res_a.makespan),
+                     res_t.bytes_sent, res_a.bytes_sent, res_l.losses[-1]))
         print(f"compression,{cname},{nbytes},{dense / nbytes:.1f},"
-              f"{fmt_minutes(res_t.makespan)},{res_l.losses[-1]:.3f}")
+              f"{fmt_minutes(res_t.makespan)},{fmt_minutes(res_a.makespan)},"
+              f"{res_t.bytes_sent / 1e6:.1f},{res_a.bytes_sent / 1e6:.1f},"
+              f"{res_l.losses[-1]:.3f}")
     assert rows[2][2] > 10, "ternary must be >10x smaller"
+    # the codec must actually shrink simulated traffic on BOTH paths
+    assert rows[1][5] < rows[0][5] and rows[2][5] < rows[0][5]
+    assert rows[1][6] < rows[0][6] and rows[2][6] < rows[0][6]
     return rows
 
 
-def simulate_with_gradbytes(problem, k, grad_bytes):
+def simulate_with_gradbytes(problem, k, grad_bytes, *, policy=None):
     from repro.core.simulator import Simulator, VolunteerSpec
     specs = [VolunteerSpec(f"v{i}") for i in range(k)]
     sim = Simulator(problem, specs, cost=cluster_cost(problem),
-                    grad_bytes=grad_bytes)
+                    grad_bytes=grad_bytes, policy=policy)
     return sim.run()
 
-
-import jax  # noqa: E402  (used in main for tree map)
 
 if __name__ == "__main__":
     main(reduced=False)

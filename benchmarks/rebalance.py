@@ -42,6 +42,7 @@ def main(quick: bool = False, queues: int = 0) -> None:
     fed = build_federation(k0, n)
     print("op,shards_before,shards_after,queues,moved,frac,bound,wall_ms")
     worst = 0.0
+    records = []
     plan = [("join", None)] * (k_max - k0) + \
            [("leave", i % 3) for i in range(k_max - k0 + 1)]
     for op, arg in plan:
@@ -59,6 +60,12 @@ def main(quick: bool = False, queues: int = 0) -> None:
         worst = max(worst, frac * k_bound)
         print(f"rebalance_{op},{k_before},{k_after},{n},{len(moved)},"
               f"{frac:.4f},{bound:.4f},{wall_ms:.1f}")
+        records.append({"name": f"rebalance_{op}",
+                        "params": {"shards_before": k_before,
+                                   "shards_after": k_after, "queues": n,
+                                   "moved_frac": round(frac, 4)},
+                        "makespan": wall_ms / 1e3,
+                        "events": len(moved), "bytes": None})
         assert frac <= bound, \
             f"{op}: moved {frac:.3f} of names, above the {bound:.3f} bound"
         assert federation_census(fed) == before, \
@@ -68,6 +75,7 @@ def main(quick: bool = False, queues: int = 0) -> None:
     print(f"# OK: every membership change moved <= {worst:.2f}/K of {n} "
           f"queue names (bound 1.5/K), conserved all live state, and kept "
           f"per-queue invariants")
+    return records
 
 
 if __name__ == "__main__":

@@ -12,13 +12,31 @@ Artifacts covered:
   (kernels)   kernel_bench        us_per_call per Pallas kernel
   (roofline)  roofline            dry-run derived terms, if records exist
   (scale)     volunteer_scaling   event-driven vs polling at 1k/10k volunteers
+  (elastic)   rebalance           live shard join/leave migration cost
+  (policies)  staleness           makespan + loss vs aggregation policy
+
+Perf trajectory: suites that return record lists additionally write
+``BENCH_<name>.json`` — a JSON list of records, each with the schema
+``{name, params, makespan, events, bytes}`` — so successive PRs can diff
+machine-readable performance, not just eyeball CSV.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import sys
 import time
 import traceback
+
+# suites whose return value is a list of perf records to persist
+BENCH_RECORD_SUITES = ("volunteer_scaling", "rebalance", "staleness")
+
+
+def write_bench_records(name: str, records) -> None:
+    path = pathlib.Path(f"BENCH_{name}.json")
+    path.write_text(json.dumps(records, indent=1, default=float) + "\n")
+    print(f"# {name}: wrote {len(records)} perf records to {path}")
 
 
 def main(argv=None) -> int:
@@ -30,8 +48,9 @@ def main(argv=None) -> int:
     reduced = not args.full
 
     from benchmarks import (classroom, cluster_scaling, compression,
-                            dynamism, kernel_bench, roofline,
-                            sequential_baseline, timeline, volunteer_scaling)
+                            dynamism, kernel_bench, rebalance, roofline,
+                            sequential_baseline, staleness, timeline,
+                            volunteer_scaling)
     suites = [
         ("volunteer_scaling", lambda: volunteer_scaling.main(quick=reduced)),
         ("cluster_scaling", lambda: cluster_scaling.main(reduced)),
@@ -42,6 +61,8 @@ def main(argv=None) -> int:
         ("dynamism", lambda: dynamism.main(reduced)),
         ("kernel_bench", lambda: kernel_bench.main(reduced)),
         ("roofline", lambda: roofline.main()),
+        ("rebalance", lambda: rebalance.main(quick=reduced)),
+        ("staleness", lambda: staleness.main(reduced)),
     ]
     failed = []
     for name, fn in suites:
@@ -50,7 +71,9 @@ def main(argv=None) -> int:
         print(f"\n===== {name} =====")
         t0 = time.time()
         try:
-            fn()
+            out = fn()
+            if name in BENCH_RECORD_SUITES and out:
+                write_bench_records(name, out)
             print(f"# {name}: ok in {time.time() - t0:.1f}s")
         except Exception:
             failed.append(name)

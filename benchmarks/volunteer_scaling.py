@@ -83,11 +83,20 @@ def main(quick: bool = False):
     n_tasks = problem.n_versions * (problem.tp.mini_batches_to_accumulate + 1)
     ok = True
     ev1k = None
+    records = []
+
+    def record(res, **params):
+        records.append({"name": "volunteer_scaling", "params": params,
+                        "makespan": res.makespan, "events": res.events,
+                        "bytes": res.bytes_sent})
+
     for n in sizes:
         rows = {}
         for mode, shards in (("poll", 1), ("event", 1), ("event", 4)):
             res, wall, wakeups = run_one(n, mode, n_shards=shards)
             rows[(mode, shards)] = res
+            record(res, volunteers=n, mode=mode, shards=shards,
+                   transport="inproc", wall_s=round(wall, 2))
             print(f"volunteer_scaling,{n},{mode},{shards},{res.events},"
                   f"{res.poll_events},{wakeups},"
                   f"{round(res.makespan / 60.0, 2)},{round(wall, 2)}")
@@ -110,6 +119,8 @@ def main(quick: bool = False):
     # bytes and MEASURED sizes feed the network cost model — semantics must
     # be unchanged (same versions, same task total), no event regression
     wire, wall, _ = run_one(1_000, "event", transport="wire")
+    record(wire, volunteers=1_000, mode="event", shards=1, transport="wire",
+           wall_s=round(wall, 2))
     print(f"volunteer_scaling_wire,1000,event,1,{wire.events},0,-,"
           f"{round(wire.makespan / 60.0, 2)},{round(wall, 2)}")
     assert wire.final_version == problem.n_versions
@@ -124,6 +135,7 @@ def main(quick: bool = False):
         raise RuntimeError("event-driven coordination missed the 10x target")
     print("# OK: event-driven coordination meets the >=10x target at "
           "identical semantics")
+    return records
 
 
 if __name__ == "__main__":

@@ -29,3 +29,18 @@ python -m repro.core.gateway --smoke
 # elastic rebalance smoke: every shard join/leave migrates <= 1.5/K of queue
 # names, conserves all live state, and keeps per-queue invariants
 python benchmarks/rebalance.py --quick
+
+# 3-policy aggregation matrix (ISSUE 4): SyncBSP / BoundedStaleness(s=2) /
+# LocalSteps(k=4) on the reduced real problem, in-process + wire — SyncBSP
+# must bit-match sequential_accumulated, the async policies their own
+# sequential references, over BOTH transports
+python -m repro.core.aggregation --smoke
+
+# chaos metamorphic contract per async policy: a seeded fault schedule on a
+# sharded federation still bit-matches single-server with no reduce barrier
+python -m repro.core.chaos --seeds 2 --policy staleness:2
+python -m repro.core.chaos --seeds 2 --policy local:4
+
+# staleness benchmark smoke: BoundedStaleness must strictly beat SyncBSP's
+# makespan under a straggler-heavy volunteer pool (final-loss deltas printed)
+python benchmarks/staleness.py --quick

@@ -1,11 +1,18 @@
 """The paper's primary contribution: the JSDoop volunteer map-reduce runtime."""
-from repro.core.queue import Queue, QueueServer, ShardedQueueServer  # noqa: F401
+from repro.core.queue import (  # noqa: F401
+    Queue, QueueServer, ShardedQueueServer, colocate_results,
+)
 from repro.core.dataserver import DataServer  # noqa: F401
 from repro.core.tasks import (  # noqa: F401
-    INITIAL_QUEUE, MapTask, ReduceTask, GradResult, results_queue,
+    INITIAL_QUEUE, MapTask, ReduceTask, LocalTask, GradResult, DeltaResult,
+    results_queue,
+)
+from repro.core.aggregation import (  # noqa: F401
+    AggregationPolicy, SyncBSP, BoundedStaleness, LocalSteps, make_policy,
 )
 from repro.core.mapreduce import (  # noqa: F401
-    TrainingProblem, sequential_accumulated, sequential_fullbatch,
+    TrainingProblem, sequential_accumulated, sequential_async,
+    sequential_fullbatch, sequential_local,
 )
 from repro.core.initiator import enqueue_problem  # noqa: F401
 from repro.core.protocol import (  # noqa: F401

@@ -24,7 +24,10 @@ spinning — no step ever busy-polls.
 
 This is the engine behind the paper's invariance claim tests: the final model
 must bit-match ``sequential_accumulated`` for ANY worker count, ANY churn, and
-ANY transport.
+ANY transport — and, per aggregation policy (``policy=``), each barrierless
+policy's sequential reference (``sequential_async`` / ``sequential_local``):
+the round-robin scheduler serializes barrierless tickets, so worker count
+cannot change the float stream.
 """
 from __future__ import annotations
 
@@ -34,11 +37,12 @@ from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
+from repro.core.aggregation import PolicyLike, make_policy
 from repro.core.dataserver import DataServer
 from repro.core.initiator import enqueue_problem
 from repro.core.mapreduce import TrainingProblem
-from repro.core.protocol import (Blocked, KickQueue, MapWork, NoTask,
-                                 ReduceWork, ServerEndpoint, TaskDone,
+from repro.core.protocol import (Blocked, KickQueue, LocalWork, MapWork,
+                                 NoTask, ReduceWork, ServerEndpoint, TaskDone,
                                  VolunteerSession)
 from repro.core.queue import QueueServer, ShardedQueueServer
 from repro.core.tasks import INITIAL_QUEUE
@@ -63,6 +67,8 @@ class RunResult:
     tasks_by_worker: Dict[str, int]
     requeues: int
     final_version: int
+    stale_discards: int = 0               # barrierless results refused as stale
+    policy: str = "sync"
 
 
 class Coordinator:
@@ -71,18 +77,26 @@ class Coordinator:
                  churn: Optional[List[Tuple[int, str, str]]] = None,
                  visibility_timeout: float = float("inf"),
                  codec: Optional[Codec] = None, n_shards: int = 1,
-                 transport: Union[str, Callable, None] = "inproc"):
+                 transport: Union[str, Callable, None] = "inproc",
+                 policy: PolicyLike = None,
+                 placement: Optional[Callable[[str], str]] = None):
         self.problem = problem
+        self.policy = make_policy(policy)
         self.qs: Union[QueueServer, ShardedQueueServer] = (
             QueueServer(default_timeout=visibility_timeout) if n_shards <= 1
             else ShardedQueueServer(n_shards,
-                                    default_timeout=visibility_timeout))
+                                    default_timeout=visibility_timeout,
+                                    placement=placement))
         self.ds = DataServer()
         self.endpoint = ServerEndpoint(self.qs, self.ds)
         self.port = make_transport(transport, self.endpoint)
         self.port.set_deliver(self._on_notify)
         self.n_versions = n_versions if n_versions is not None else problem.n_versions
-        enqueue_problem(problem, self.qs, self.ds, n_versions=self.n_versions)
+        # the run's commit target: the policy maps BSP rounds to versions
+        # (sync: 1 per round; async: 1 per gradient; local: 1 per k steps)
+        self.n_updates = self.policy.n_updates(problem, self.n_versions)
+        enqueue_problem(problem, self.qs, self.ds, n_versions=self.n_versions,
+                        policy=self.policy)
         self.volunteers: Dict[str, _Volunteer] = {
             f"w{i}": self._make_volunteer(f"w{i}") for i in range(n_workers)}
         self.churn = sorted(churn or [])
@@ -90,10 +104,12 @@ class Coordinator:
         self.version_losses: Dict[int, List[float]] = {}
         self.tasks_done: Dict[str, int] = {}
         self.bytes_sent = 0
+        self.stale_discards = 0
 
     def _make_volunteer(self, vid: str) -> _Volunteer:
         return _Volunteer(vid, VolunteerSession(
-            vid, self.port, model_nbytes=self.problem.model_bytes))
+            vid, self.port, model_nbytes=self.problem.model_bytes,
+            policy=self.policy))
 
     # ------------------------------------------------------------------ engine
     def _on_notify(self, vid: str, msg) -> None:
@@ -108,7 +124,7 @@ class Coordinator:
     def run(self, max_steps: int = 2_000_000) -> RunResult:
         step = 0
         churn_i = 0
-        while self.ds.latest_version < self.n_versions:
+        while self.ds.latest_version < self.n_updates:
             if step >= max_steps:
                 raise RuntimeError("coordinator did not converge (deadlock?)")
             # churn events
@@ -164,7 +180,8 @@ class Coordinator:
         losses = [float(np.mean(self.version_losses[k]))
                   for k in sorted(self.version_losses)]
         return RunResult(params, opt_state, losses, step, dict(self.tasks_done),
-                         self.qs.total_requeued, self.ds.latest_version)
+                         self.qs.total_requeued, self.ds.latest_version,
+                         self.stale_discards, self.policy.spec)
 
     # ------------------------------------------------------------------ compute
     def _step_volunteer(self, v: _Volunteer, now: float):
@@ -184,29 +201,87 @@ class Coordinator:
         if isinstance(out, TaskDone):      # obsolete duplicate, acked
             return
         if isinstance(out, MapWork):
-            self._do_map(v, out)
+            if self.policy.barrier:
+                self._do_map(v, out)
+            else:
+                self._do_async(v, out)
         elif isinstance(out, ReduceWork):
             self._do_reduce(v, out)
+        elif isinstance(out, LocalWork):
+            self._do_local(v, out)
         else:
             # Busy is unreachable here (compute is synchronous, so nothing
             # can redeliver a wake mid-task) — keep the invariant loud
             raise RuntimeError(f"{v.vid}: unexpected session outcome {out!r}")
 
-    def _do_map(self, v: _Volunteer, work: MapWork):
-        t = work.task
-        params = work.model[0]             # blob = (params, opt_state)
-        grads, loss = self.problem.map_compute(params, t.version, t.mb_index)
+    def _compute_grads(self, v: _Volunteer, params, version: int,
+                       mb_index: int):
+        """One mini-batch gradient (+ optional codec round-trip with error
+        feedback). Returns (grads, loss, wire nbytes)."""
+        grads, loss = self.problem.map_compute(params, version, mb_index)
         nbytes = self.problem.grad_bytes
         if self.codec is not None:
             if v.ef_residual is None:
                 v.ef_residual = ef_init(self.problem.params0)
             grads, v.ef_residual, nbytes = ef_compress(self.codec, grads,
                                                        v.ef_residual)
+        return grads, loss, nbytes
+
+    def _do_map(self, v: _Volunteer, work: MapWork):
+        t = work.task
+        params = work.model[0]             # blob = (params, opt_state)
+        grads, loss, nbytes = self._compute_grads(v, params, t.version,
+                                                  t.mb_index)
         self.bytes_sent += nbytes
         done = v.sess.finish_map(grads, nbytes, loss)
         if not done.stale:
             self.tasks_done[v.vid] = self.tasks_done.get(v.vid, 0) + 1
             self.version_losses.setdefault(t.version, []).append(loss)
+
+    def _do_async(self, v: _Volunteer, work: MapWork):
+        """BoundedStaleness: gradient at the fetched (latest) version, then
+        the admission edge; an admitted gradient applies to the CURRENT model
+        and commits the next version, all in this scheduler slice."""
+        t = work.task
+        params = work.model[0]
+        grads, loss, nbytes = self._compute_grads(v, params, t.version,
+                                                  t.mb_index)
+        self.bytes_sent += nbytes
+        out = v.sess.finish_update(v.sess.grad_result(grads, nbytes, loss))
+        if isinstance(out, TaskDone):      # too stale: discarded + requeued
+            self.stale_discards += 1
+            return
+        params, opt_state = out.model
+        params, opt_state = self.problem.apply_one(params, opt_state, grads)
+        v.sess.commit_update((params, opt_state), self.problem.model_bytes,
+                             gc_keep=2)
+        self.bytes_sent += self.problem.model_bytes
+        self.tasks_done[v.vid] = self.tasks_done.get(v.vid, 0) + 1
+        self.version_losses.setdefault(out.version, []).append(loss)
+
+    def _do_local(self, v: _Volunteer, work: LocalWork):
+        """LocalSteps: k local optimizer steps from the fetched model; the
+        weighted delta applies to the CURRENT model via commit_update.
+        (The stale branch mirrors _do_async for accounting consistency; it
+        is unreachable under this engine's serialized round-robin scheduler,
+        where admission always sees a fresh model.)"""
+        t = work.task
+        p0, s0 = work.model
+        delta, loss = self.problem.local_compute(p0, s0, t.start, t.k)
+        self.bytes_sent += self.problem.model_bytes      # delta pushed up
+        out = v.sess.finish_update(
+            v.sess.delta_result(delta, self.problem.model_bytes, loss))
+        if isinstance(out, TaskDone):
+            self.stale_discards += 1
+            return
+        params, opt_state = out.model
+        params, opt_state = self.problem.apply_delta(
+            params, opt_state, delta, self.policy.weight)
+        v.sess.commit_update((params, opt_state), self.problem.model_bytes,
+                             gc_keep=2)
+        self.bytes_sent += self.problem.model_bytes      # model pulled down
+        self.tasks_done[v.vid] = self.tasks_done.get(v.vid, 0) + 1
+        self.version_losses.setdefault(out.version, []).append(loss)
 
     def _do_reduce(self, v: _Volunteer, work: ReduceWork):
         params, opt_state = v.sess.fetch_model(self.problem.model_bytes)

@@ -1,31 +1,31 @@
 """Initiator — sets up the problem and enqueues the task graph (paper §IV.B,
-§IV.F steps 0-1): n_mb map tasks + 1 reduce task per batch, FIFO into the
-InitialQueue; the model's version-0 blob into the DataServer."""
+§IV.F steps 0-1). The aggregation policy owns the work-unit schedule: SyncBSP
+enqueues n_mb map tasks + 1 reduce task per batch (the paper's graph),
+BoundedStaleness one gradient ticket per stream slot (no barriers), LocalSteps
+one k-step ticket per averaging round. FIFO into the InitialQueue; the model's
+version-0 blob into the DataServer."""
 from __future__ import annotations
 
 from typing import Optional
 
+from repro.core.aggregation import PolicyLike, make_policy
 from repro.core.dataserver import DataServer
 from repro.core.mapreduce import TrainingProblem
 from repro.core.queue import QueueServer
-from repro.core.tasks import INITIAL_QUEUE, MapTask, ReduceTask
+from repro.core.tasks import INITIAL_QUEUE
 
 
 def enqueue_problem(problem: TrainingProblem, qs: QueueServer, ds: DataServer,
                     *, n_versions: Optional[int] = None,
+                    policy: PolicyLike = None,
                     store_real_model: bool = True) -> int:
     """Returns the number of tasks enqueued."""
-    tp = problem.tp
+    pol = make_policy(policy)
     n = n_versions if n_versions is not None else problem.n_versions
     count = 0
     qs.declare(INITIAL_QUEUE)
-    for v in range(n):
-        e, b = problem.version_to_epoch_batch(v)
-        for mb in range(tp.mini_batches_to_accumulate):
-            qs.publish(INITIAL_QUEUE, MapTask(v, e, b, mb, tp.mini_batch_size))
-            count += 1
-        qs.publish(INITIAL_QUEUE,
-                   ReduceTask(v, e, b, tp.mini_batches_to_accumulate))
+    for task in pol.schedule(problem, n):
+        qs.publish(INITIAL_QUEUE, task)
         count += 1
     blob = ((problem.params0, problem.opt_state0) if store_real_model else "v0")
     ds.publish_model(0, blob, nbytes=problem.model_bytes)

@@ -65,7 +65,17 @@ class TrainingProblem:
             g_mean = jax.tree.map(lambda g: jnp.mean(g, axis=0), grads_stacked)
             return self.optimizer.update(params, opt_state, g_mean)
 
+        # per-policy apply fns (repro.core.aggregation): SyncBSP reduces the
+        # stacked mini-batch gradients; BoundedStaleness applies ONE gradient
+        # per commit; LocalSteps adds a weighted (params, opt_state) delta.
         self._acc_apply_fn = jax.jit(acc_apply)
+        self._apply_one_fn = jax.jit(self.optimizer.update)
+
+        def delta_apply(blob, delta, weight):
+            return jax.tree.map(
+                lambda c, d: (c + weight * d).astype(c.dtype), blob, delta)
+
+        self._delta_apply_fn = jax.jit(delta_apply)
 
     # ------------------------------------------------------------------ schedule
     @property
@@ -80,6 +90,13 @@ class TrainingProblem:
         return self.data.minibatch(e, b, self.tp.batch_size, mb_index,
                                    self.tp.mini_batch_size)
 
+    def stream_slot(self, i: int) -> Tuple[int, int]:
+        """The global mini-batch stream shared by every aggregation policy:
+        slot i -> (version, mb_index), wrapping at the problem horizon (a
+        LocalSteps tail slot may run past n_versions * n_mb)."""
+        n_mb = self.tp.mini_batches_to_accumulate
+        return divmod(i % (self.n_versions * n_mb), n_mb)
+
     # ------------------------------------------------------------------ compute
     def map_compute(self, params, version: int, mb_index: int):
         """Returns (grads, loss)."""
@@ -92,6 +109,29 @@ class TrainingProblem:
         ordered = [grads_by_mb[i] for i in sorted(grads_by_mb)]
         stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *ordered)
         return self._acc_apply_fn(params, opt_state, stacked)
+
+    def apply_one(self, params, opt_state, grads):
+        """BoundedStaleness commit: apply one (possibly stale) gradient."""
+        return self._apply_one_fn(params, opt_state, grads)
+
+    def local_compute(self, params, opt_state, start: int, k: int):
+        """LocalSteps ticket: k local optimizer steps from stream offset
+        ``start``. Returns ((delta_params, delta_opt_state), mean_loss)."""
+        p0, s0 = params, opt_state
+        losses: List[float] = []
+        for j in range(k):
+            v, mb = self.stream_slot(start + j)
+            g, l = self.map_compute(params, v, mb)
+            params, opt_state = self._apply_one_fn(params, opt_state, g)
+            losses.append(l)
+        delta = jax.tree.map(lambda a, b: a - b, (params, opt_state),
+                             (p0, s0))
+        return delta, float(np.mean(losses))
+
+    def apply_delta(self, params, opt_state, delta, weight: float = 1.0):
+        """LocalSteps commit: current blob + weight * delta (dtype-preserving,
+        so the int32 optimizer step counter survives a fractional weight)."""
+        return self._delta_apply_fn((params, opt_state), delta, weight)
 
     # ------------------------------------------------------------------ sizes
     @functools.cached_property
@@ -133,6 +173,41 @@ def sequential_accumulated(problem: TrainingProblem, *, n_versions=None,
         params, opt_state = problem.reduce_compute(params, opt_state, grads_by_mb)
         if (v % record_every) == 0:
             losses.append(float(np.mean(ls)))
+    return params, opt_state, losses
+
+
+def sequential_async(problem: TrainingProblem, *, n_updates=None):
+    """BoundedStaleness run on ONE worker (every gradient is perfectly
+    fresh): plain minibatch SGD over the global mini-batch stream. The exact
+    reference for ``Coordinator(policy=BoundedStaleness(...))`` — the
+    Coordinator's round-robin scheduler serializes barrierless tickets, so
+    ANY worker count must bit-match this."""
+    params, opt_state = problem.params0, problem.opt_state0
+    n_mb = problem.tp.mini_batches_to_accumulate
+    n = n_updates if n_updates is not None else problem.n_versions * n_mb
+    losses: List[float] = []
+    for i in range(n):
+        v, mb = problem.stream_slot(i)
+        g, l = problem.map_compute(params, v, mb)
+        params, opt_state = problem.apply_one(params, opt_state, g)
+        losses.append(l)
+    return params, opt_state, losses
+
+
+def sequential_local(problem: TrainingProblem, *, k: int = 4,
+                     weight: float = 1.0, n_updates=None):
+    """LocalSteps run on ONE worker: k local optimizer steps per round, the
+    round's delta applied through the same jitted ``apply_delta`` the
+    distributed commit uses (so a 1-worker Coordinator bit-matches)."""
+    params, opt_state = problem.params0, problem.opt_state0
+    total = problem.n_versions * problem.tp.mini_batches_to_accumulate
+    n = n_updates if n_updates is not None else -(-total // k)
+    losses: List[float] = []
+    for slot in range(n):
+        delta, l = problem.local_compute(params, opt_state, slot * k, k)
+        params, opt_state = problem.apply_delta(params, opt_state, delta,
+                                                weight)
+        losses.append(l)
     return params, opt_state, losses
 
 

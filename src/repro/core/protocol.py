@@ -35,6 +35,13 @@ DistML.js's serializable command API do:
   blobs over a socket. Waiting is likewise the engine's policy: the session
   says *what* to wait for (a ``Blocked`` outcome); the engine decides push
   (``subscribe``) vs poll.
+
+  The protocol *shape* is set by the session's ``AggregationPolicy``
+  (``repro.core.aggregation``): barrier policies run the conversation above;
+  barrierless ones (BoundedStaleness async SGD, LocalSteps averaging) run
+  fetch-latest -> compute (``MapWork``/``LocalWork``) -> ``finish_update``
+  admission on the version-stamped result -> ``commit_update`` — a too-stale
+  result is discarded and its ticket nacked for a fresh recompute.
 """
 from __future__ import annotations
 
@@ -43,9 +50,10 @@ from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional
 
 from repro.checkpoint import serialize
+from repro.core.aggregation import AggregationPolicy, SyncBSP, make_policy
 from repro.core.dataserver import DataServer
-from repro.core.tasks import (GradResult, INITIAL_QUEUE, WIRE_TYPES,
-                              results_queue)
+from repro.core.tasks import (DeltaResult, GradResult, INITIAL_QUEUE,
+                              WIRE_TYPES, results_queue)
 
 # ---------------------------------------------------------------------------
 # wire registry + byte codec
@@ -241,6 +249,9 @@ class Bye:
 class LeaseGrant:
     tag: int
     body: Any
+    latest: int = -1          # staleness metadata: the model version current
+                              # at grant time (lets a client judge/skip work
+                              # without a LatestReq round-trip)
 
 
 @wire
@@ -323,7 +334,9 @@ class ServerEndpoint:
     def handle(self, m):
         if isinstance(m, LeaseReq):
             got = self.qs.lease(m.queue, m.consumer, m.now, m.timeout)
-            return LeaseEmpty() if got is None else LeaseGrant(*got)
+            if got is None:
+                return LeaseEmpty()
+            return LeaseGrant(got[0], got[1], self.ds.latest_version)
         if isinstance(m, Ack):
             return Ok(self.qs.ack(m.queue, m.tag))
         if isinstance(m, Nack):
@@ -397,9 +410,34 @@ class Blocked:
 @dataclass(frozen=True)
 class MapWork:
     """Model fetched: the engine must produce this map task's gradient (real
-    or simulated) and call ``finish_map``."""
+    or simulated). Under a barrier policy call ``finish_map``; under a
+    barrierless one ``base_version`` is the latest version the model was
+    fetched at — stamp it into a ``GradResult`` and call ``finish_update``."""
     task: Any
     model: Any
+    base_version: int = -1
+
+
+@dataclass(frozen=True)
+class LocalWork:
+    """Latest model fetched (barrierless LocalSteps): the engine must run the
+    task's ``k`` local optimizer steps from this model and hand the delta to
+    ``finish_update`` as a ``DeltaResult``."""
+    task: Any
+    model: Any
+    base_version: int = -1
+
+
+@dataclass(frozen=True)
+class ApplyWork:
+    """A barrierless result passed admission: the engine must apply
+    ``result``'s payload to ``model`` (the blob current at version
+    ``version``) and call ``commit_update`` with the new blob, which
+    publishes model ``version + 1``."""
+    task: Any
+    model: Any
+    version: int
+    result: Any
 
 
 @dataclass(frozen=True)
@@ -433,14 +471,19 @@ class VolunteerSession:
     the waiting mechanism.
     """
 
-    def __init__(self, vid: str, port, *, model_nbytes: int = 0):
+    def __init__(self, vid: str, port, *, model_nbytes: int = 0,
+                 policy: Optional[AggregationPolicy] = None):
         self.vid = vid
         self.port = port
         self.model_nbytes = model_nbytes  # accounting hint for FetchModel
+        self.policy = make_policy(policy) # aggregation/consistency semantics
         self.tag: Optional[int] = None
         self.task: Any = None
+        self.lease_latest: int = -1       # LeaseGrant staleness metadata
         self._rtags: list = []            # leased results-queue tags (reduce)
         self._handed = False              # compute handed out, not yet finished
+        self._base: int = -1              # barrierless: version compute is on
+        self._apply_version: int = -1     # barrierless: version apply is on
 
     # -- plumbing -----------------------------------------------------------
     def _call(self, msg):
@@ -453,6 +496,7 @@ class VolunteerSession:
         self.tag = self.task = None
         self._rtags = []
         self._handed = False
+        self._base = self._apply_version = -1
 
     # -- protocol: lease ----------------------------------------------------
     def lease(self, now: float):
@@ -462,6 +506,7 @@ class VolunteerSession:
         if isinstance(r, LeaseEmpty):
             return NoTask()
         self.tag, self.task = r.tag, r.body
+        self.lease_latest = r.latest
         return TaskLeased(self.task)
 
     # -- protocol: advance a held task up to its compute --------------------
@@ -473,7 +518,15 @@ class VolunteerSession:
         assert t is not None, f"{self.vid}: advance with no task"
         if self._handed:                  # spurious wake mid-compute
             return Busy(t)
-        if self.latest() > t.version:
+        if not self.policy.barrier:
+            return self._advance_update(t)
+        # staleness-metadata fast path: latest is monotone, so a task the
+        # policy already refused at GRANT time can never become admissible —
+        # the LatestReq round-trip is skipped for it
+        latest = self.lease_latest
+        if self.policy.admit(t.version, latest):
+            latest = self.latest()
+        if not self.policy.admit(t.version, latest):
             # obsolete duplicate (requeued after someone else's result was
             # reduced) — ack without compute: at-least-once + idempotent
             self._call(Ack(INITIAL_QUEUE, self.tag))
@@ -509,12 +562,72 @@ class VolunteerSession:
         self._handed = True
         return ReduceWork(t, results)
 
+    # -- protocol: barrierless (BoundedStaleness / LocalSteps) ---------------
+    def _advance_update(self, t):
+        """Barrierless policies never wait on a model version: fetch the
+        LATEST model (always present) and hand the compute to the engine.
+        Staleness is judged when the result comes back (``finish_update``)."""
+        latest = self.latest()
+        r = self._call(FetchModel(latest, self.model_nbytes))
+        assert r.present, f"{self.vid}: latest model v{latest} not fetchable"
+        self._handed = True
+        self._base = latest
+        if t.kind == "local":
+            return LocalWork(t, r.blob, latest)
+        return MapWork(t, r.blob, latest)
+
+    def grad_result(self, payload, nbytes: int, loss: float) -> GradResult:
+        """Version-stamped async gradient for ``finish_update``."""
+        t = self.task
+        return GradResult(t.version, t.mb_index, payload, nbytes, loss,
+                          self.vid, computed_at=self._base)
+
+    def delta_result(self, payload, nbytes: int, loss: float) -> DeltaResult:
+        """Version-stamped local-steps delta for ``finish_update``."""
+        t = self.task
+        return DeltaResult(t.slot, self._base, payload, nbytes, loss,
+                           self.vid, n_steps=t.k,
+                           weight=getattr(self.policy, "weight", 1.0))
+
+    def finish_update(self, result):
+        """Admission edge for a barrierless result (a ``GradResult`` or
+        ``DeltaResult``, version-stamped with ``computed_at``). Too stale ->
+        the payload is discarded and the ticket nacked to the queue front for
+        a fresh-version recompute. Admitted -> the current model blob is
+        fetched and handed back as ``ApplyWork``; the engine applies the
+        payload and calls ``commit_update``."""
+        t = self.task
+        latest = self.latest()
+        if not self.policy.admit(result.computed_at, latest):
+            self._call(Nack(INITIAL_QUEUE, self.tag, front=True))
+            done = TaskDone(t, stale=True)
+            self._clear()
+            return done
+        r = self._call(FetchModel(latest, self.model_nbytes))
+        self._apply_version = latest
+        return ApplyWork(t, r.blob, latest, result)
+
+    def commit_update(self, blob, nbytes: int = 0,
+                      gc_keep: Optional[int] = None):
+        """Publish the applied model as version ``apply_version + 1`` and ack
+        the ticket. Must be called in the same engine event as
+        ``finish_update`` (the admission fetch and this publish are one
+        atomic commit under the engines' single-threaded clocks)."""
+        t = self.task
+        self._call(PublishModel(self._apply_version + 1, blob, nbytes))
+        if gc_keep is not None:
+            self._call(GcModels(gc_keep))
+        self._call(Ack(INITIAL_QUEUE, self.tag))
+        done = TaskDone(t)
+        self._clear()
+        return done
+
     # -- protocol: completions ----------------------------------------------
     def finish_map(self, payload, nbytes: int, loss: float):
-        """Publish the gradient and ack the map task (re-checking staleness:
+        """Publish the gradient and ack the map task (re-checking admission:
         in virtual-time engines the version may have advanced mid-compute)."""
         t = self.task
-        if self.latest() > t.version:
+        if not self.policy.admit(t.version, self.latest()):
             self._call(Ack(INITIAL_QUEUE, self.tag))
             done = TaskDone(t, stale=True)
             self._clear()
@@ -522,7 +635,7 @@ class VolunteerSession:
         self._call(PublishResult(
             results_queue(t.version),
             GradResult(t.version, t.mb_index, payload, nbytes, loss,
-                       self.vid)))
+                       self.vid, computed_at=t.version)))
         self._call(Ack(INITIAL_QUEUE, self.tag))
         done = TaskDone(t)
         self._clear()
@@ -538,7 +651,8 @@ class VolunteerSession:
         t = self.task
         return PublishResult(
             results_queue(t.version),
-            GradResult(t.version, t.mb_index, payload, nbytes, loss, self.vid))
+            GradResult(t.version, t.mb_index, payload, nbytes, loss, self.vid,
+                       computed_at=t.version))
 
     def model_message(self, blob, nbytes: int = 0) -> PublishModel:
         """The PublishModel ``finish_reduce`` would send (pricing, as above)."""

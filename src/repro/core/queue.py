@@ -399,6 +399,16 @@ def _stable_hash(key: str) -> int:
         hashlib.blake2b(key.encode(), digest_size=8).digest(), "big")
 
 
+def colocate_results(qname: str) -> str:
+    """Placement rule for ``ShardedQueueServer(placement=...)``: route every
+    ``map-results:v*`` queue to the shard owning the task queue, so a reduce
+    barrier (drain + ack the results queue, ack the task) touches exactly ONE
+    shard instead of two. Placement only picks the owner — queue semantics
+    (and the chaos bit-match contract) are placement-invariant."""
+    from repro.core.tasks import INITIAL_QUEUE, RESULTS_PREFIX
+    return INITIAL_QUEUE if qname.startswith(RESULTS_PREFIX) else qname
+
+
 class ShardedQueueServer:
     """K federated QueueServer instances behind the QueueServer API.
 
@@ -419,11 +429,16 @@ class ShardedQueueServer:
     """
 
     def __init__(self, n_shards: int, default_timeout: float = float("inf"),
-                 *, vnodes: int = 64):
+                 *, vnodes: int = 64,
+                 placement: Optional[Callable[[str], str]] = None):
         if n_shards < 1:
             raise ValueError("n_shards must be >= 1")
         self.default_timeout = default_timeout
         self._vnodes = vnodes
+        # placement maps a queue name to the KEY the ring hashes (e.g.
+        # ``colocate_results`` rides result queues with their task queue);
+        # identity by default. Routing stays a pure function of the name.
+        self._place: Callable[[str], str] = placement or (lambda name: name)
         self.shards: List[QueueServer] = []
         self._sids: List[int] = []            # stable id per shard (ring key)
         self._next_sid = 0
@@ -475,8 +490,9 @@ class ShardedQueueServer:
         return migrated
 
     def shard_of(self, qname: str) -> int:
-        """Index of the shard owning this queue name (clockwise successor)."""
-        h = _stable_hash(qname)
+        """Index of the shard owning this queue name (clockwise successor of
+        its placement key)."""
+        h = _stable_hash(self._place(qname))
         i = bisect.bisect_right(self._ring_keys, h) % len(self._ring_keys)
         return self._ring_vals[i]
 

@@ -21,7 +21,11 @@ Simulator owns only virtual time and costs:
 
 All protocol semantics (lease/ack/requeue, version waits, reduce barrier,
 churn) live in the shared ``VolunteerSession`` — identical to the real
-Coordinator by construction, and asserted by tests.
+Coordinator by construction, and asserted by tests. The consistency model is
+the session's ``AggregationPolicy`` (``policy=``): sync-BSP map/reduce,
+bounded-staleness async SGD (admit/discard at commit time, ticket nacked on
+discard), or local-steps averaging — every policy schedule-deterministic, so
+the chaos metamorphic contract holds per policy.
 
 Two coordination modes share every cost and protocol rule:
 
@@ -49,11 +53,12 @@ import math
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple, Union
 
+from repro.core.aggregation import PolicyLike, make_policy
 from repro.core.dataserver import DataServer
 from repro.core.mapreduce import TrainingProblem
-from repro.core.protocol import (Blocked, Busy, MapWork, NoTask, ReduceWork,
-                                 ServerEndpoint, TaskDone, VolunteerSession,
-                                 wire_size)
+from repro.core.protocol import (Blocked, Busy, LocalWork, MapWork, NoTask,
+                                 ReduceWork, ServerEndpoint, TaskDone,
+                                 VolunteerSession, wire_size)
 from repro.core.queue import QueueServer, ShardedQueueServer
 from repro.core.transport import FaultSpec, FaultyTransport, make_transport
 
@@ -160,6 +165,8 @@ class SimResult:
     mode: str = "event"
     expire_scans: int = 0            # expiry sweeps actually performed
     wire_bytes: float = 0.0          # measured transport bytes (wire mode)
+    stale_discards: int = 0          # barrierless results refused as stale
+    policy: str = "sync"             # aggregation policy spec
 
 
 class Simulator:
@@ -172,17 +179,22 @@ class Simulator:
                  max_events: int = 5_000_000,
                  transport: str = "inproc",
                  faults: Optional[FaultSpec] = None, fault_seed: int = 0,
-                 watchdog: Optional[bool] = None):
+                 watchdog: Optional[bool] = None,
+                 policy: PolicyLike = None,
+                 placement: Optional[Callable[[str], str]] = None):
         from repro.core.initiator import enqueue_problem
         if mode not in ("event", "poll"):
             raise ValueError(f"unknown mode {mode!r}")
         self.problem = problem
+        self.policy = make_policy(policy)
         self.cost = cost or CostModel()
         self.mode = mode
         self.max_events = max_events
         self.qs: Union[QueueServer, ShardedQueueServer] = (
             QueueServer(default_timeout=visibility_timeout) if n_shards <= 1
-            else ShardedQueueServer(n_shards, default_timeout=visibility_timeout))
+            else ShardedQueueServer(n_shards,
+                                    default_timeout=visibility_timeout,
+                                    placement=placement))
         self.ds = DataServer()
         self.endpoint = ServerEndpoint(self.qs, self.ds)
         self.port = make_transport(transport, self.endpoint)
@@ -204,8 +216,9 @@ class Simulator:
                           else watchdog) and mode == "event"
         self.n_versions = (n_versions if n_versions is not None
                            else problem.n_versions)
+        self.n_updates = self.policy.n_updates(problem, self.n_versions)
         enqueue_problem(problem, self.qs, self.ds, n_versions=self.n_versions,
-                        store_real_model=False)
+                        policy=self.policy, store_real_model=False)
         self.specs = {s.vid: s for s in specs}
         self.sessions: Dict[str, VolunteerSession] = {}
         self.grad_bytes = grad_bytes if grad_bytes is not None else problem.grad_bytes
@@ -225,6 +238,7 @@ class Simulator:
         self.poll_events = 0
         self.expire_scans = 0
         self.expired = 0                 # messages requeued by expiry sweeps
+        self.stale_discards = 0          # barrierless admission refusals
 
     # ------------------------------------------------------------------ engine
     def _post(self, t: float, fn: Callable):
@@ -237,7 +251,8 @@ class Simulator:
     def _session(self, vid: str) -> VolunteerSession:
         sess = self.sessions.get(vid)
         if sess is None:
-            sess = self.sessions[vid] = VolunteerSession(vid, self.port)
+            sess = self.sessions[vid] = VolunteerSession(vid, self.port,
+                                                         policy=self.policy)
         return sess
 
     def _wire_bytes(self) -> float:
@@ -248,7 +263,7 @@ class Simulator:
     def run(self) -> SimResult:
         for s in self.specs.values():
             self._post(s.join_time, lambda vid=s.vid: self._wake(vid))
-        while self.ds.latest_version < self.n_versions:
+        while self.ds.latest_version < self.n_updates:
             if not self._heap:
                 # a lost notification (FaultyTransport) can strand every
                 # volunteer at once: advance the clock to the next visibility
@@ -280,7 +295,8 @@ class Simulator:
                          dict(self.tasks_by_worker), self.qs.total_requeued,
                          self.ds.latest_version, self.bytes_sent,
                          dict(self.busy), self.events, self.poll_events,
-                         self.mode, self.expire_scans, self._wire_bytes())
+                         self.mode, self.expire_scans, self._wire_bytes(),
+                         self.stale_discards, self.policy.spec)
 
     def _alive(self, vid: str) -> bool:
         s = self.specs[vid]
@@ -309,7 +325,7 @@ class Simulator:
 
     def _wake(self, vid: str):
         """Volunteer becomes idle at _now: try to lease the next task."""
-        if self.ds.latest_version >= self.n_versions:
+        if self.ds.latest_version >= self.n_updates:
             return
         sess = self._session(vid)
         if not self._alive(vid):
@@ -360,7 +376,12 @@ class Simulator:
                                lambda: self._continue(vid))
             return
         if isinstance(out, MapWork):
-            self._run_map(vid, sess, out, adv_bytes)
+            if self.policy.barrier:
+                self._run_map(vid, sess, out, adv_bytes)
+            else:
+                self._run_update(vid, sess, out, adv_bytes)
+        elif isinstance(out, LocalWork):
+            self._run_update(vid, sess, out, adv_bytes)
         else:
             self._run_reduce(vid, sess, out, adv_bytes)
 
@@ -398,11 +419,14 @@ class Simulator:
                 sess.abort()                # task requeues via its lease
                 return
             done = sess.finish_map(None, self.grad_bytes, 0.0)
+            # busy counts the attempt either way — a stale map burned the
+            # same simulated compute before the admission ack (and matches
+            # the barrierless _run_update convention)
+            self.busy[vid] = self.busy.get(vid, 0.0) + (end - now)
             if not done.stale:
                 self.timeline.append(TimelineEvent(vid, "Compute", now, end,
                                                    t.version))
                 self.tasks_by_worker[vid] = self.tasks_by_worker.get(vid, 0) + 1
-                self.busy[vid] = self.busy.get(vid, 0.0) + (end - now)
                 self.bytes_sent += self.grad_bytes + self.model_bytes
             self._wake(vid)
 
@@ -412,6 +436,61 @@ class Simulator:
         tp = self.problem.tp
         sample = tp.sample_len * max(self.problem.cfg.vocab, 96) * 4
         return tp.batch_size * sample
+
+    # ------------------------------------------------------------- barrierless
+    def _run_update(self, vid: str, sess: VolunteerSession, work, adv_bytes):
+        """BoundedStaleness gradient ticket or LocalSteps k-step ticket: pull
+        the latest model, compute, push the contribution. The network cost is
+        the parameter-server shape of async SGD — gradient (or model-sized
+        delta) up, model down; the session's volunteer-applied commit stands
+        in for the applier node, so its extra model round-trip is not priced.
+        A too-stale attempt still pays the push (the rejection is
+        server-side) but commits nothing; its ticket requeues for a fresh
+        recompute."""
+        now = self._now
+        t = work.task
+        spec = self.specs[vid]
+        local = isinstance(work, LocalWork)
+        flops = self.map_flops * (t.k if local else 1)
+        active = sum(1 for s in self.specs.values()
+                     if s.join_time <= now < s.leave_time)
+        share = (self.model_bytes + self.grad_bytes
+                 + self._batch_bytes() / max(active, 1))
+        thr = self.cost.throughput(spec.speed, share)
+        fetch_b = (adv_bytes if self._measuring else 0.0) + self.model_bytes
+        push_b = self.model_bytes if local else self.grad_bytes
+        end = (now + self.cost.xfer(fetch_b) + flops / thr
+               + self.cost.xfer(push_b))
+        kind = "Local" if local else "Compute"
+
+        def finish():
+            if not self._alive(vid):
+                sess.abort()                # ticket requeues via its lease
+                return
+            result = (sess.delta_result(None, self.model_bytes, 0.0) if local
+                      else sess.grad_result(None, self.grad_bytes, 0.0))
+            out = sess.finish_update(result)
+            self.busy[vid] = self.busy.get(vid, 0.0) + (end - now)
+            if isinstance(out, TaskDone):   # refused as stale, discarded
+                self.stale_discards += 1
+                # the wasted attempt still moved model-down + payload-up
+                self.bytes_sent += self.model_bytes + push_b
+                self.timeline.append(TimelineEvent(
+                    vid, kind + "-stale", now, end, work.base_version))
+                # re-wake through the heap: the nack above already woke an
+                # idle volunteer (posted first), so a FASTER waiter gets the
+                # requeued ticket before this one can re-lease it
+                self._post(self._now, lambda: self._wake(vid))
+                return
+            sess.commit_update("blob", self.model_bytes)
+            self.timeline.append(TimelineEvent(vid, kind, now, end,
+                                               out.version))
+            self.tasks_by_worker[vid] = self.tasks_by_worker.get(vid, 0) + 1
+            self.bytes_sent += self.model_bytes + push_b
+            self.done_time = max(self.done_time, end)
+            self._wake(vid)
+
+        self._post(end, finish)
 
     # ------------------------------------------------------------------ reduce
     def _run_reduce(self, vid: str, sess: VolunteerSession, work: ReduceWork,

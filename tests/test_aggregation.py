@@ -1,0 +1,354 @@
+"""Pluggable aggregation semantics (ISSUE 4): one AggregationPolicy layer
+serving sync-BSP, bounded-staleness async SGD, and local-steps model
+averaging across every engine.
+
+Contracts:
+- SyncBSP is the paper baseline bit-for-bit (its schedule IS the legacy
+  enqueue order; the whole existing invariance suite stays green).
+- Each barrierless policy has an exact sequential reference, and the real
+  Coordinator bit-matches it for ANY worker count and BOTH transports.
+- Async runs are schedule-deterministic: same seed + fault schedule =>
+  bit-identical SimResult across {single-server, sharded} federations —
+  the chaos metamorphic contract generalized per policy.
+- Staleness admission actually fires: a straggler-heavy pool under a tight
+  bound discards stale gradients, requeues their tickets, and still commits
+  every scheduled update.
+- LeaseGrant carries staleness metadata; shard-aware placement co-locates
+  map-results:* queues with the task queue without changing semantics.
+"""
+from __future__ import annotations
+
+import math
+
+import pytest
+
+from repro.core.aggregation import (AggregationPolicy, BoundedStaleness,
+                                    LocalSteps, SyncBSP, _bitmatch,
+                                    make_policy)
+from repro.core.chaos import (metamorphic_check, mixed_schedule, run_chaos,
+                              _smoke_cost, _smoke_problem, _smoke_specs)
+from repro.core.dataserver import DataServer
+from repro.core.initiator import enqueue_problem
+from repro.core.protocol import LeaseGrant, LeaseReq, ServerEndpoint
+from repro.core.queue import QueueServer, ShardedQueueServer, colocate_results
+from repro.core.simulator import (CostModel, Simulator, SyntheticProblem,
+                                  VolunteerSpec)
+from repro.core.tasks import (INITIAL_QUEUE, LocalTask, MapTask, ReduceTask,
+                              results_queue)
+
+LEAVABLE = [s.vid for s in _smoke_specs() if s.vid.startswith("x")]
+
+
+# ---------------------------------------------------------------------------
+# policy objects and schedules (no jax needed)
+# ---------------------------------------------------------------------------
+
+def test_make_policy_specs():
+    assert isinstance(make_policy(None), SyncBSP)
+    assert isinstance(make_policy("sync"), SyncBSP)
+    assert make_policy("staleness:3") == BoundedStaleness(staleness=3)
+    assert make_policy("async") == BoundedStaleness()
+    assert make_policy("local:8") == LocalSteps(k=8)
+    assert make_policy("local:2:0.5") == LocalSteps(k=2, weight=0.5)
+    pol = LocalSteps(k=3)
+    assert make_policy(pol) is pol            # instances pass through
+    with pytest.raises(ValueError):
+        make_policy("quorum:2")
+    with pytest.raises(ValueError):
+        make_policy("sync:1")
+
+
+def test_policy_specs_and_descriptions():
+    for pol in (SyncBSP(), BoundedStaleness(staleness=5), LocalSteps(k=2)):
+        d = pol.describe()
+        assert d["policy"] == pol.name and "guarantee" in d
+        # spec strings round-trip through the parser
+        assert make_policy(pol.spec) == pol
+
+
+def test_schedules_cover_equal_gradient_work():
+    """All policies schedule the same global mini-batch stream: a run of V
+    BSP rounds costs V*n_mb gradient computations under every policy (local
+    may pad up to k-1 at the tail)."""
+    problem = SyntheticProblem(n_versions=5, n_mb=6)
+    total = 5 * 6
+    sync_tasks = list(SyncBSP().schedule(problem, 5))
+    assert sum(1 for t in sync_tasks if t.kind == "map") == total
+    assert sum(1 for t in sync_tasks if t.kind == "reduce") == 5
+    async_tasks = list(BoundedStaleness().schedule(problem, 5))
+    assert len(async_tasks) == total
+    assert all(t.kind == "map" for t in async_tasks)
+    local_tasks = list(LocalSteps(k=4).schedule(problem, 5))
+    grad_work = sum(t.k for t in local_tasks)
+    assert total <= grad_work < total + 4
+    assert all(t.kind == "local" for t in local_tasks)
+    # commit targets match schedule sizes
+    assert SyncBSP().n_updates(problem, 5) == 5
+    assert BoundedStaleness().n_updates(problem, 5) == total
+    assert LocalSteps(k=4).n_updates(problem, 5) == math.ceil(total / 4)
+
+
+def test_sync_schedule_is_the_legacy_enqueue_order():
+    """Regression guard on the bit-compat claim: the default enqueue_problem
+    produces exactly the old maps-then-reduce-per-version FIFO."""
+    problem = SyntheticProblem(n_versions=3, n_mb=2, mini_batch_size=8)
+    qs, ds = QueueServer(), DataServer()
+    n = enqueue_problem(problem, qs, ds, store_real_model=False)
+    assert n == 3 * (2 + 1)
+    bodies = qs.queues[INITIAL_QUEUE].peek_all()
+    want = []
+    for v in range(3):
+        e, b = problem.version_to_epoch_batch(v)
+        want += [MapTask(v, e, b, mb, 8) for mb in range(2)]
+        want.append(ReduceTask(v, e, b, 2))
+    assert bodies == want
+
+
+def test_lease_grant_carries_latest_version_metadata():
+    problem = SyntheticProblem(n_versions=2, n_mb=2)
+    qs, ds = QueueServer(), DataServer()
+    enqueue_problem(problem, qs, ds, store_real_model=False)
+    ep = ServerEndpoint(qs, ds)
+    grant = ep.handle(LeaseReq(INITIAL_QUEUE, "w0", 0.0))
+    assert isinstance(grant, LeaseGrant)
+    assert grant.latest == ds.latest_version == 0
+    ds.publish_model(1, "v1")
+    grant2 = ep.handle(LeaseReq(INITIAL_QUEUE, "w1", 0.0))
+    assert grant2.latest == 1
+
+
+def test_grant_metadata_fast_paths_stale_duplicate_ack():
+    """A task already refused by the policy at GRANT time is acked stale
+    without a LatestReq round-trip (latest is monotone, so the refusal is
+    permanent) — the payoff of the LeaseGrant.latest metadata."""
+    from repro.core.protocol import TaskDone, VolunteerSession
+    from repro.core.transport import InProcessTransport
+    problem = SyntheticProblem(n_versions=2, n_mb=1)
+    qs, ds = QueueServer(), DataServer()
+    enqueue_problem(problem, qs, ds, store_real_model=False)
+    ds.publish_model(1, "v1")                 # v0's tasks are now obsolete
+    port = InProcessTransport(ServerEndpoint(qs, ds))
+    sess = VolunteerSession("w0", port)
+    sess.lease(0.0)
+    assert sess.lease_latest == 1
+    calls_before = port.calls
+    out = sess.advance(0.0)
+    assert isinstance(out, TaskDone) and out.stale
+    assert port.calls == calls_before + 1     # the Ack alone — no LatestReq
+
+
+# ---------------------------------------------------------------------------
+# simulator: determinism, admission, and the generalized metamorphic contract
+# ---------------------------------------------------------------------------
+
+def _sim_cost():
+    return CostModel(flops_per_sec=2.0e9, latency=0.020, bandwidth=12.5e6,
+                     poll_interval=0.200, cache_bytes=1e15)
+
+
+POLICIES = ["sync", "staleness:2", "local:4"]
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("mode", ["event", "poll"])
+def test_simulator_commits_full_schedule_per_policy(policy, mode):
+    problem = SyntheticProblem(n_versions=4, n_mb=6, model_bytes=1.0e6,
+                               grad_bytes=2.0e5, map_flops=8.0e8,
+                               reduce_flops=2.0e7)
+    specs = [VolunteerSpec(f"v{i:02d}", speed=0.7 + 0.3 * i) for i in range(4)]
+    res = Simulator(problem, specs, cost=_sim_cost(), mode=mode,
+                    visibility_timeout=1e9, policy=policy).run()
+    expected = make_policy(policy).n_updates(problem, 4)
+    assert res.final_version == expected
+    assert res.policy == make_policy(policy).spec
+    # every commit is one task completion under barrierless policies
+    if not make_policy(policy).barrier:
+        assert sum(res.tasks_by_worker.values()) == expected
+        assert res.makespan > 0 and math.isfinite(res.makespan)
+
+
+@pytest.mark.parametrize("policy", ["staleness:1", "staleness:3", "local:4"])
+def test_async_simulation_replays_bit_identically(policy):
+    problem = SyntheticProblem(n_versions=4, n_mb=6, model_bytes=1.0e6,
+                               grad_bytes=2.0e5, map_flops=8.0e8)
+    specs = [VolunteerSpec(f"v{i:02d}", speed=0.5 + 0.4 * i) for i in range(5)]
+    runs = [Simulator(problem, specs, cost=_sim_cost(),
+                      visibility_timeout=1e9, policy=policy).run()
+            for _ in range(2)]
+    assert runs[0] == runs[1]
+    assert runs[0].timeline == runs[1].timeline
+
+
+def test_tight_staleness_bound_discards_and_recovers():
+    """A crawling straggler under staleness:0 gets its gradients refused (the
+    model moved while it computed), its tickets requeue, and the run still
+    commits every update — with the discards observable in the result."""
+    problem = SyntheticProblem(n_versions=4, n_mb=6, model_bytes=1.0e6,
+                               grad_bytes=2.0e5, map_flops=8.0e8)
+    specs = [VolunteerSpec(f"v{i:02d}", speed=1.0 + 0.1 * i) for i in range(4)]
+    specs.append(VolunteerSpec("slow", speed=0.08))
+    res = Simulator(problem, specs, cost=_sim_cost(),
+                    visibility_timeout=1e9, policy="staleness:0").run()
+    assert res.final_version == 24
+    assert res.stale_discards > 0
+    assert res.requeues >= res.stale_discards   # every discard nacked a ticket
+    # the discarded attempts are visible in the timeline
+    assert any(ev.kind == "Compute-stale" for ev in res.timeline)
+
+
+def test_unbounded_local_policy_never_discards():
+    problem = SyntheticProblem(n_versions=4, n_mb=6, map_flops=8.0e8)
+    specs = [VolunteerSpec(f"v{i:02d}", speed=0.5 + 0.5 * i) for i in range(4)]
+    res = Simulator(problem, specs, cost=_sim_cost(),
+                    visibility_timeout=1e9, policy="local:3").run()
+    assert res.stale_discards == 0
+    assert res.final_version == 8               # ceil(24 / 3)
+
+
+@pytest.mark.parametrize("policy", ["staleness:2", "local:4"])
+@pytest.mark.parametrize("seed", range(3))
+def test_metamorphic_contract_holds_per_policy(seed, policy):
+    """Same ChaosSchedule + seed => bit-identical SimResult across
+    {single-server, sharded} — now with no reduce barrier at all."""
+    schedule = mixed_schedule(seed, leavable=LEAVABLE)
+    single, sharded = metamorphic_check(schedule, mode="event", n_shards=3,
+                                        policy=policy)
+    assert single == sharded
+    expected = make_policy(policy).n_updates(_smoke_problem(), 5)
+    assert single.final_version == expected
+
+
+def test_metamorphic_contract_holds_per_policy_over_wire():
+    from repro.core.transport import FaultSpec
+    faults = FaultSpec(drop_wake=0.2, duplicate=0.2, delay=0.15, delay_dt=0.4,
+                       max_faults=2)
+    schedule = mixed_schedule(1, leavable=LEAVABLE)
+    single, sharded = metamorphic_check(schedule, mode="event", n_shards=3,
+                                        policy="staleness:2",
+                                        transport="wire", faults=faults,
+                                        fault_seed=7, visibility_timeout=2.0)
+    assert single == sharded
+    assert single.wire_bytes > 0
+    assert single.final_version >= 30           # expiry duplicates may overshoot
+
+
+# ---------------------------------------------------------------------------
+# shard-aware placement of map-results:v* queues (open ROADMAP rung)
+# ---------------------------------------------------------------------------
+
+def test_colocated_placement_routes_results_with_task_queue():
+    fed = ShardedQueueServer(5, placement=colocate_results)
+    home = fed.shard_of(INITIAL_QUEUE)
+    for v in range(40):
+        assert fed.shard_of(results_queue(v)) == home
+    # unrelated queues still spread over the ring
+    others = {fed.shard_of(f"queue-{i}") for i in range(64)}
+    assert len(others) > 1
+
+
+def test_colocated_placement_survives_membership_changes():
+    """Placement keys ride through add/remove_shard migrations: results
+    queues always land wherever the task queue lands."""
+    fed = ShardedQueueServer(3, placement=colocate_results)
+    fed.publish(INITIAL_QUEUE, "t0")
+    for v in range(6):
+        fed.publish(results_queue(v), f"r{v}")
+    for _ in range(2):
+        fed.add_shard()
+    fed.remove_shard(0)
+    home = fed.shard_of(INITIAL_QUEUE)
+    shard = fed.shards[home]
+    for v in range(6):
+        assert fed.shard_of(results_queue(v)) == home
+        assert results_queue(v) in shard.queues
+    assert INITIAL_QUEUE in shard.queues
+
+
+@pytest.mark.parametrize("mode", ["event", "poll"])
+def test_chaos_bitmatch_holds_with_colocated_placement(mode):
+    """The chaos contract with the placement rule active on the sharded side:
+    placement changes WHERE queues live, never what the run computes."""
+    schedule = mixed_schedule(2, leavable=LEAVABLE)
+    single, sharded = metamorphic_check(schedule, mode=mode, n_shards=3,
+                                        placement=colocate_results)
+    assert single == sharded
+    assert single.final_version == 5
+
+
+def test_reduce_barrier_touches_one_shard_under_colocation():
+    """The point of the placement rule: with colocation, every queue a reduce
+    barrier touches (task queue + its version's results queue) lives on ONE
+    shard for the whole run."""
+    problem = _smoke_problem()
+    res = run_chaos(problem, _smoke_specs(),
+                    mixed_schedule(0, leavable=LEAVABLE),
+                    mode="event", n_shards=3, cost=_smoke_cost(),
+                    placement=colocate_results)
+    assert res.final_version == 5
+
+
+# ---------------------------------------------------------------------------
+# real engine: Coordinator bit-matches each policy's sequential reference
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def problem():
+    jax = pytest.importorskip("jax")
+    from repro.configs.paper_lstm import TrainParams
+    from repro.core.mapreduce import TrainingProblem
+    from repro.data.text import synthetic_corpus
+    tp = TrainParams(batch_size=16, examples_per_epoch=64, num_epochs=1,
+                     sample_len=20, mini_batch_size=4,
+                     mini_batches_to_accumulate=4)
+    return TrainingProblem.paper_problem(corpus=synthetic_corpus(6000), tp=tp)
+
+
+
+
+@pytest.mark.parametrize("transport", ["inproc", "wire"])
+@pytest.mark.parametrize("k", [1, 3])
+def test_coordinator_async_bitmatches_sequential_async(problem, k, transport):
+    """The Coordinator's round-robin scheduler serializes barrierless
+    tickets, so EVERY worker count must reproduce the 1-worker async SGD
+    stream exactly — the async analogue of the paper's Table-4 claim."""
+    from repro.core.coordinator import Coordinator
+    from repro.core.mapreduce import sequential_async
+    seq_params, _, seq_losses = sequential_async(problem)
+    res = Coordinator(problem, n_workers=k, policy="staleness:2",
+                      transport=transport).run()
+    assert res.final_version == 16              # 4 versions x 4 mini-batches
+    assert _bitmatch(res.params, seq_params)
+    assert res.losses == pytest.approx(seq_losses)
+    assert res.policy == "staleness:2"
+
+
+@pytest.mark.parametrize("k", [1, 2])
+def test_coordinator_local_steps_bitmatches_sequential_local(problem, k):
+    from repro.core.coordinator import Coordinator
+    from repro.core.mapreduce import sequential_local
+    seq_params, _, _ = sequential_local(problem, k=4)
+    res = Coordinator(problem, n_workers=k, policy="local:4").run()
+    assert res.final_version == 4               # ceil(16 / 4)
+    assert _bitmatch(res.params, seq_params)
+
+
+def test_coordinator_async_survives_churn(problem):
+    from repro.core.coordinator import Coordinator
+    from repro.core.mapreduce import sequential_async
+    seq_params, _, _ = sequential_async(problem)
+    churn = [(3, "leave", "w0"), (7, "join", "w9")]
+    res = Coordinator(problem, n_workers=3, policy="staleness:2",
+                      churn=churn).run()
+    assert res.final_version == 16
+    assert _bitmatch(res.params, seq_params)
+
+
+def test_coordinator_sync_policy_explicit_is_default(problem):
+    """policy='sync' is the default policy object — same schedule, same
+    commits, same result as passing nothing."""
+    from repro.core.coordinator import Coordinator
+    from repro.core.mapreduce import sequential_accumulated
+    seq_params = sequential_accumulated(problem)[0]
+    res = Coordinator(problem, n_workers=2, policy="sync").run()
+    assert _bitmatch(res.params, seq_params)
+    assert res.policy == "sync"
