@@ -32,6 +32,18 @@ import traceback
 # suites whose return value is a list of perf records to persist
 BENCH_RECORD_SUITES = ("volunteer_scaling", "rebalance", "staleness")
 
+# the BENCH_<name>.json record schema: field -> accepted types. ``params`` is
+# free-form by design (each suite names its own axes) but must be a dict;
+# ``bytes``/``events`` may be null when a suite has no byte/event observable
+# (e.g. rebalance measures wall time of a migration, not traffic).
+RECORD_SCHEMA = {
+    "name": (str,),
+    "params": (dict,),
+    "makespan": (int, float),
+    "events": (int, type(None)),
+    "bytes": (int, float, type(None)),
+}
+
 
 def write_bench_records(name: str, records) -> None:
     path = pathlib.Path(f"BENCH_{name}.json")
@@ -39,12 +51,71 @@ def write_bench_records(name: str, records) -> None:
     print(f"# {name}: wrote {len(records)} perf records to {path}")
 
 
+def check_bench_records(paths=None) -> int:
+    """``--check``: validate every committed BENCH_*.json against the record
+    schema, so a suite that drifts (renamed field, stringly-typed number,
+    truncated write) fails CI instead of silently breaking the cross-PR perf
+    trajectory. Returns the number of problems found."""
+    paths = list(paths) if paths else sorted(pathlib.Path(".").glob("BENCH_*.json"))
+    problems = 0
+
+    def complain(msg: str):
+        nonlocal problems
+        problems += 1
+        print(f"BENCH-CHECK FAIL: {msg}")
+
+    if not paths:
+        complain("no BENCH_*.json files found")
+    for path in paths:
+        problems_before = problems
+        try:
+            records = json.loads(path.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            complain(f"{path}: unreadable ({e})")
+            continue
+        if not isinstance(records, list) or not records:
+            complain(f"{path}: expected a non-empty JSON list")
+            continue
+        expected_name = path.stem[len("BENCH_"):]
+        for i, rec in enumerate(records):
+            if not isinstance(rec, dict):
+                complain(f"{path}[{i}]: record is not an object")
+                continue
+            for field, types in RECORD_SCHEMA.items():
+                if field not in rec:
+                    complain(f"{path}[{i}]: missing field {field!r}")
+                elif not isinstance(rec[field], types) or \
+                        isinstance(rec[field], bool):
+                    complain(f"{path}[{i}].{field}: {type(rec[field]).__name__}"
+                             f" is not one of {[t.__name__ for t in types]}")
+            extra = set(rec) - set(RECORD_SCHEMA)
+            if extra:
+                complain(f"{path}[{i}]: unknown fields {sorted(extra)}")
+            name = rec.get("name")
+            if isinstance(name, str) and name != expected_name and \
+                    not name.startswith(expected_name + "_"):
+                complain(f"{path}[{i}]: name {name!r} does not belong to "
+                         f"{expected_name!r}")
+        print(f"# {path}: {len(records)} records ok"
+              if problems == problems_before
+              else f"# {path}: {problems - problems_before} problem(s)")
+    return problems
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--full", action="store_true",
                     help="paper-scale parameters (slow on 1 CPU)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--check", action="store_true",
+                    help="validate committed BENCH_*.json records against "
+                         "the schema and exit (no benchmarks run)")
     args = ap.parse_args(argv)
+    if args.check:
+        problems = check_bench_records()
+        print("# OK: all BENCH_*.json records match the schema"
+              if problems == 0 else f"# {problems} schema problem(s)")
+        return 1 if problems else 0
     reduced = not args.full
 
     from benchmarks import (classroom, cluster_scaling, compression,

@@ -1,4 +1,5 @@
 """The paper's §V.B classroom experiment, simulated end to end.
+(Demonstrates: the discrete-event Simulator + cost model. Runs in ~10 s.)
 
 32 heterogeneous volunteers (different speeds) open the URL; some arrive
 late (async-start), some close the browser mid-run. The discrete-event

@@ -2,6 +2,9 @@
 steps with the production SPMD train_step (the paper's map/reduce schedule
 compiled: microbatch grads accumulate in a scan, one reduce applies RMSprop
 and bumps the model version).
+(Demonstrates: the jax_pallas production stack — sharded train_step, data
+pipeline, checkpoint store. Runs ~minutes at --steps 20; tens of minutes for
+the full 300 steps on one CPU.)
 
 This runs the REAL stack — sharded train_step, data pipeline, checkpoint
 store — on whatever devices exist (1 CPU here; the same code lowers to the

@@ -1,4 +1,6 @@
 """Batched serving example — the decode-shape path executed for real.
+(Demonstrates: prefill + cached decode through the sharded serve_step on a
+reduced architecture. Runs in ~1-2 minutes on one CPU.)
 
 Loads a (reduced) assigned architecture, prefills a batch of prompts and
 decodes with the KV/SSM cache through the sharded serve_step — the same

@@ -1,0 +1,59 @@
+"""Render the committed BENCH_*.json perf records as the README's results
+tables. Deterministic output (file order, record order), so the README can
+embed it verbatim and CI can diff for drift:
+
+  PYTHONPATH=src python scripts/bench_table.py            # print markdown
+  PYTHONPATH=src python scripts/check_docs.py             # verifies no drift
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _fmt(v) -> str:
+    if v is None:
+        return "—"
+    if isinstance(v, bool):
+        return str(v).lower()
+    if isinstance(v, float):
+        if v == 0:
+            return "0"
+        if abs(v) >= 1e6:
+            return f"{v / 1e6:.1f}M"
+        if abs(v) >= 1e3:
+            return f"{v / 1e3:.1f}k"
+        return f"{v:.3g}"
+    if isinstance(v, int) and abs(v) >= 1e6:
+        return f"{v / 1e6:.1f}M"
+    return str(v)
+
+
+def _params(p: dict) -> str:
+    return ", ".join(f"{k}={_fmt(v)}" for k, v in p.items())
+
+
+def render() -> str:
+    lines = []
+    for path in sorted(ROOT.glob("BENCH_*.json")):
+        records = json.loads(path.read_text())
+        suite = path.stem[len("BENCH_"):]
+        lines.append(f"**`{suite}`** ({len(records)} records, "
+                     f"`{path.name}`)")
+        lines.append("")
+        lines.append("| params | makespan (s) | events | bytes |")
+        lines.append("|---|---|---|---|")
+        for rec in records:
+            lines.append(f"| {_params(rec['params'])} "
+                         f"| {_fmt(rec['makespan'])} "
+                         f"| {_fmt(rec['events'])} "
+                         f"| {_fmt(rec['bytes'])} |")
+        lines.append("")
+    return "\n".join(lines).rstrip() + "\n"
+
+
+if __name__ == "__main__":
+    sys.stdout.write(render())

@@ -1,0 +1,133 @@
+"""Docs CI leg: the README is executable documentation, so CI executes it.
+
+Three checks (any failure exits non-zero):
+
+1. **Quickstart blocks run green.** Every fenced ```bash block in README.md
+   is executed with ``bash -euo pipefail`` from the repo root (PYTHONPATH
+   pre-set), EXCEPT blocks immediately preceded by an HTML comment containing
+   ``docs-ci: skip`` (the long-running proofs CI already covers elsewhere).
+2. **The results tables match the committed BENCH_*.json.** The section
+   between the BENCH markers must equal ``scripts/bench_table.py`` output —
+   regenerate with ``python scripts/check_docs.py --write-bench`` after
+   refreshing benchmark records.
+3. **docs/protocol.md documents every wire message.** Each registered
+   request/reply/notification type and task body must be named in the doc,
+   so a new message cannot ship undocumented.
+
+Usage:
+  PYTHONPATH=src python scripts/check_docs.py              # check (CI)
+  PYTHONPATH=src python scripts/check_docs.py --write-bench
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import pathlib
+import re
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+README = ROOT / "README.md"
+PROTOCOL_DOC = ROOT / "docs" / "protocol.md"
+
+BENCH_BEGIN = "<!-- BENCH:BEGIN"
+BENCH_END = "<!-- BENCH:END -->"
+
+_FENCE = re.compile(
+    r"(?P<prefix>(?:<!--[^\n]*-->\n)?)```bash\n(?P<body>.*?)```",
+    re.DOTALL)
+
+
+def bash_blocks(text: str):
+    """Yield (body, skipped) per fenced bash block, in order."""
+    for m in _FENCE.finditer(text):
+        yield m.group("body"), "docs-ci: skip" in m.group("prefix")
+
+
+def run_quickstart_blocks(text: str) -> int:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"src{os.pathsep}{env['PYTHONPATH']}" \
+        if env.get("PYTHONPATH") else "src"
+    failures = 0
+    for i, (body, skipped) in enumerate(bash_blocks(text)):
+        head = body.strip().splitlines()[0] if body.strip() else "<empty>"
+        if skipped:
+            print(f"# block {i} skipped (docs-ci: skip): {head}")
+            continue
+        print(f"# block {i} running: {head}")
+        proc = subprocess.run(["bash", "-euo", "pipefail", "-c", body],
+                              cwd=ROOT, env=env, timeout=600)
+        if proc.returncode != 0:
+            failures += 1
+            print(f"DOCS-CI FAIL: README bash block {i} exited "
+                  f"{proc.returncode} (starts: {head})")
+    return failures
+
+
+def bench_section(text: str):
+    start = text.find(BENCH_BEGIN)
+    end = text.find(BENCH_END)
+    if start < 0 or end < 0 or end < start:
+        return None
+    # section body = everything after the BEGIN marker's line
+    body_start = text.index("\n", start) + 1
+    return text[:body_start], text[body_start:end], text[end:]
+
+
+def check_bench_tables(text: str, *, write: bool = False) -> int:
+    sys.path.insert(0, str(ROOT / "scripts"))
+    import bench_table
+    want = bench_table.render()
+    parts = bench_section(text)
+    if parts is None:
+        print("DOCS-CI FAIL: README is missing the BENCH markers")
+        return 1
+    head, current, tail = parts
+    if current.strip() == want.strip():
+        print("# results tables match the committed BENCH_*.json")
+        return 0
+    if write:
+        README.write_text(head + want + tail)
+        print("# results tables rewritten from BENCH_*.json")
+        return 0
+    print("DOCS-CI FAIL: README results tables drifted from BENCH_*.json — "
+          "run: PYTHONPATH=src python scripts/check_docs.py --write-bench")
+    return 1
+
+
+def check_protocol_doc() -> int:
+    from repro.core import protocol as P
+    from repro.core import tasks as T
+    doc = PROTOCOL_DOC.read_text()
+    names = [c.__name__ for c in (*P.REQUEST_TYPES, *P.REPLY_TYPES,
+                                  *P.NOTIFICATION_TYPES, *T.WIRE_TYPES)]
+    missing = [n for n in names if f"`{n}`" not in doc]
+    if missing:
+        print(f"DOCS-CI FAIL: docs/protocol.md does not document: {missing}")
+        return 1
+    print(f"# docs/protocol.md covers all {len(names)} wire types")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--write-bench", action="store_true",
+                    help="rewrite the README results section from "
+                         "BENCH_*.json instead of failing on drift")
+    ap.add_argument("--no-exec", action="store_true",
+                    help="skip executing the quickstart blocks")
+    args = ap.parse_args(argv)
+    text = README.read_text()
+    problems = 0
+    problems += check_bench_tables(text, write=args.write_bench)
+    problems += check_protocol_doc()
+    if not args.no_exec:
+        problems += run_quickstart_blocks(README.read_text())
+    print("# OK: docs are live" if problems == 0
+          else f"# docs check: {problems} problem(s)")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -20,10 +20,13 @@ python benchmarks/volunteer_scaling.py --quick
 # (metamorphic contracts of ISSUEs 2 and 3)
 python -m repro.core.chaos --seeds 5
 
-# gateway loopback smoke (<30 s): start `python -m repro.core.gateway` as a
-# separate server process and drive one out-of-process volunteer over a real
-# TCP socket with WireTransport framing; its final model version and task
-# count must match the identical volunteer loop run in process (ISSUE 3)
+# gateway durability smoke (<60 s), 4 legs (ISSUEs 3 + 5): (1) an
+# out-of-process volunteer over a real TCP socket matches the in-process run;
+# (2) a volunteer process kill -9'd mid-task has its lease requeued by the
+# WALL-CLOCK sweeper and survivors finish; (3) the server itself is kill -9'd
+# mid-run, restarts from its latest snapshot, and the run resumes to the
+# uninterrupted final version; (4) a barrierless policy commits through the
+# server-side applier — the thin client sends zero PublishModel frames
 python -m repro.core.gateway --smoke
 
 # elastic rebalance smoke: every shard join/leave migrates <= 1.5/K of queue
@@ -42,5 +45,14 @@ python -m repro.core.chaos --seeds 2 --policy staleness:2
 python -m repro.core.chaos --seeds 2 --policy local:4
 
 # staleness benchmark smoke: BoundedStaleness must strictly beat SyncBSP's
-# makespan under a straggler-heavy volunteer pool (final-loss deltas printed)
+# makespan under a straggler-heavy volunteer pool (final-loss deltas
+# printed), and the server-side applier must reduce bytes per async update
 python benchmarks/staleness.py --quick
+
+# docs leg (ISSUE 5): the README is executable documentation — run every
+# quickstart bash block, fail if the results tables drifted from the
+# committed BENCH_*.json, and fail if docs/protocol.md misses a wire type
+python scripts/check_docs.py
+
+# committed perf records must match the BENCH_<name>.json schema
+python -m benchmarks.run --check

@@ -44,7 +44,7 @@ from repro.core.mapreduce import TrainingProblem
 from repro.core.protocol import (Blocked, KickQueue, LocalWork, MapWork,
                                  NoTask, ReduceWork, ServerEndpoint, TaskDone,
                                  VolunteerSession)
-from repro.core.queue import QueueServer, ShardedQueueServer
+from repro.core.queue import QueueServer, ShardedQueueServer, VirtualClock
 from repro.core.tasks import INITIAL_QUEUE
 from repro.core.transport import make_transport
 from repro.optim.compression import Codec, ef_init, ef_compress
@@ -88,7 +88,12 @@ class Coordinator:
                                     default_timeout=visibility_timeout,
                                     placement=placement))
         self.ds = DataServer()
-        self.endpoint = ServerEndpoint(self.qs, self.ds)
+        # lease-time authority: the endpoint stamps leases with the engine's
+        # logical clock (mirrors the scheduler's step counter — identical to
+        # the client-supplied now, so runs stay bit-identical)
+        self._step = 0
+        self.endpoint = ServerEndpoint(self.qs, self.ds,
+                                       clock=VirtualClock(lambda: self._step))
         self.port = make_transport(transport, self.endpoint)
         self.port.set_deliver(self._on_notify)
         self.n_versions = n_versions if n_versions is not None else problem.n_versions
@@ -125,6 +130,7 @@ class Coordinator:
         step = 0
         churn_i = 0
         while self.ds.latest_version < self.n_updates:
+            self._step = step              # keep the lease clock in sync
             if step >= max_steps:
                 raise RuntimeError("coordinator did not converge (deadlock?)")
             # churn events

@@ -81,7 +81,51 @@ class DataServer:
         return self._latest
 
     def gc_models(self, keep_last: int = 2):
-        """Drop stale versions (bounded memory, like Redis TTL)."""
+        """Drop stale versions (bounded memory, like Redis TTL). Pending
+        ``watch_version`` registrations are untouched: a watch names a FUTURE
+        commit, and GC only ever removes already-superseded blobs."""
         for v in sorted(self._models):
             if v <= self._latest - keep_last:
                 del self._models[v]
+
+    # -- durability ------------------------------------------------------------
+    def snapshot(self) -> Dict[str, Any]:
+        """Serializable full state: the KV store, every LIVE model version
+        (GC'd versions are gone and stay gone — restoring must not resurrect
+        them), the latest-version cursor, and the accounting counters.
+        Pending watchers are live callbacks and never serialize; see
+        ``restore`` for how in-process watchers survive."""
+        return {"kind": "DataServer",
+                "kv": dict(self._kv),
+                "models": [[v, self._models[v]] for v in sorted(self._models)],
+                "latest": self._latest,
+                "reads": self.reads, "writes": self.writes,
+                "bytes_read": self.bytes_read,
+                "bytes_written": self.bytes_written,
+                "watch_fires": self.watch_fires}
+
+    def restore(self, state: Dict[str, Any]) -> None:
+        """Replace this server's state with a snapshot, in place.
+
+        Watchers registered on THIS object survive the restore (they are
+        connection/session-bound callbacks, not state): any watch whose
+        version the restored state has already committed fires immediately —
+        the same guarantee ``watch_version`` makes for an already-published
+        version — and watches on still-future versions stay pending. After a
+        process crash there are no watchers to keep; reconnecting clients
+        re-issue ``WatchVersion``."""
+        if state.get("kind") != "DataServer":
+            raise ValueError(f"not a DataServer snapshot: {state.get('kind')!r}")
+        self._kv = dict(state["kv"])
+        self._models = {v: blob for v, blob in state["models"]}
+        self._latest = state["latest"]
+        self.reads = state["reads"]
+        self.writes = state["writes"]
+        self.bytes_read = state["bytes_read"]
+        self.bytes_written = state["bytes_written"]
+        self.watch_fires = state["watch_fires"]
+        for v in sorted(list(self._watchers)):
+            if v <= self._latest:
+                for cb in self._watchers.pop(v):
+                    self.watch_fires += 1
+                    cb()

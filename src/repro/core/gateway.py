@@ -1,4 +1,4 @@
-"""Gateway — the volunteer protocol over a real loopback socket.
+"""Gateway — the volunteer protocol over a real loopback socket, durably.
 
 ``python -m repro.core.gateway`` hosts a QueueServer + DataServer behind
 ``protocol.ServerEndpoint`` on a TCP socket (length-prefixed frames of
@@ -7,6 +7,30 @@ join a training run — the end-to-end proof that the sans-IO redesign works:
 the same ``VolunteerSession`` that drives the Coordinator's JAX compute and
 the Simulator's virtual time here drives a blocking socket client, with zero
 protocol code of its own.
+
+Beyond the liveness proof, the gateway is a durable volunteer SERVICE:
+
+- **Wall-clock leases** — the endpoint carries a ``WallClock`` (the
+  ``LeaseClock`` implementation for real time), so the SERVER stamps every
+  lease deadline, and a sweeper thread drives ``QueueServer.expire_all()``
+  whenever a real deadline passes: a socket volunteer that is kill -9'd
+  mid-task has its ticket requeued after ``--visibility-timeout`` seconds and
+  the run finishes without it (MLitB's "failure is the common case" stance).
+- **Snapshot/restore** — ``--snapshot-every K`` serializes the full
+  QueueServer + DataServer live state (pending FIFOs, in-flight deadlines,
+  banked signals, counters, model blobs) through the ``checkpoint.serialize``
+  codecs to ``--snapshot-path`` after every K state-changing requests,
+  atomically; ``--restore-from`` boots a fresh process from the latest
+  snapshot. kill -9 the server, restart, and the run resumes: unacked work
+  replays (at-least-once) and dead clients' leases expire via the sweeper.
+  Deadlines are ``time.monotonic()`` values — boot-relative on Linux/macOS,
+  so they stay meaningful across a server process restart.
+- **Server-side applier** — for barrierless policies (``staleness:<s>``,
+  ``local:<k>``) the endpoint hosts a ``ServerApplier``: volunteers push one
+  ``SubmitUpdate`` (gradient/delta up) and the SERVER runs admission ->
+  apply -> publish -> ack, so a thin client never fetches the admission-time
+  model or pushes the updated blob (the DistML.js parameter-server shape;
+  bytes-per-update measured in ``benchmarks/staleness.py``).
 
 Pieces:
 
@@ -20,16 +44,13 @@ Pieces:
   interleave; ``wait_notification`` blocks on the socket for the next push.
 - ``run_volunteer`` — the engine-free driver: lease -> advance -> synthetic
   compute -> finish, blocking on notifications while ``Blocked``. Works over
-  ANY transport (the ``--smoke`` mode runs it over ``InProcessTransport`` as
-  the reference, then over a socket against a spawned server process, and
-  asserts both reach the same final version with the same task count).
-
-This is a liveness/serializability proof, not a production server: visibility
-timeouts need a clock owner (the engines' virtual clocks, or a sweeper thread
-in a real deployment), so the gateway runs with infinite leases.
+  ANY transport; ``run_volunteer_resilient`` adds reconnect-on-crash so a
+  volunteer survives a gateway restart.
 
 Usage:
   python -m repro.core.gateway --serve --port 0 --port-file /tmp/gw.port
+  python -m repro.core.gateway --serve --visibility-timeout 2 \\
+      --snapshot-every 1 --snapshot-path /tmp/gw.snap
   python -m repro.core.gateway --volunteer --port 12345 --expect-final 4
   python -m repro.core.gateway --smoke
 """
@@ -37,6 +58,7 @@ from __future__ import annotations
 
 import argparse
 import os
+import signal
 import socket
 import struct
 import subprocess
@@ -47,17 +69,22 @@ import time
 from collections import deque
 from typing import Deque, Dict, Optional, Tuple
 
+from repro.checkpoint import serialize
+from repro.core.aggregation import PolicyLike, make_policy
 from repro.core.dataserver import DataServer
 from repro.core.initiator import enqueue_problem
-from repro.core.protocol import (Blocked, Hello, MapWork, NoTask,
-                                 NOTIFICATION_TYPES, ReduceWork,
+from repro.core.protocol import (Blocked, Hello, LocalWork, MapWork, NoTask,
+                                 NOTIFICATION_TYPES, ReduceWork, ServerApplier,
                                  ServerEndpoint, TaskDone, VolunteerSession,
-                                 decode_message, encode_message)
-from repro.core.queue import QueueServer
+                                 Wake, decode_message, encode_message)
+from repro.core.queue import QueueServer, ShardedQueueServer, WallClock
 from repro.core.simulator import SyntheticProblem
 from repro.core.transport import InProcessTransport, Transport
 
 _LEN = struct.Struct(">I")
+
+# requests that cannot change durable state — skipped by the snapshot trigger
+_READONLY = ("LatestReq", "DepthReq", "DrainedReq", "FetchModel", "Hello")
 
 
 def _send_frame(sock: socket.socket, msg) -> int:
@@ -69,7 +96,14 @@ def _send_frame(sock: socket.socket, msg) -> int:
 def _recv_exact(sock: socket.socket, n: int) -> Optional[bytes]:
     buf = b""
     while len(buf) < n:
-        chunk = sock.recv(n - len(buf))
+        try:
+            chunk = sock.recv(n - len(buf))
+        except socket.timeout:
+            if not buf:
+                raise               # idle timeout: caller decides (heartbeat)
+            continue                # mid-frame: the rest is in flight
+        except OSError:
+            return None
         if not chunk:
             return None
         buf += chunk
@@ -84,39 +118,159 @@ def _recv_frame(sock: socket.socket):
     return None if body is None else decode_message(body)
 
 
+def _synthetic_apply(blob, result, version: int):
+    """The gateway's synthetic applier: model blobs are version strings, so
+    applying any admitted contribution to version v just names v+1 (the real
+    engines hand ``ApplyWork`` to JAX; the gateway proves the protocol)."""
+    return f"v{version + 1}"
+
+
 # ---------------------------------------------------------------------------
 # server
 # ---------------------------------------------------------------------------
 
 class GatewayServer:
-    def __init__(self, problem, *, host: str = "127.0.0.1", port: int = 0,
-                 n_versions: Optional[int] = None):
-        self.qs = QueueServer()                  # infinite visibility timeout
+    """Loopback volunteer service: wall-clock leases + sweeper, optional
+    periodic snapshots, optional server-side applier (barrierless policies).
+    """
+
+    def __init__(self, problem=None, *, host: str = "127.0.0.1", port: int = 0,
+                 n_versions: Optional[int] = None, policy: PolicyLike = None,
+                 n_shards: int = 1,
+                 visibility_timeout: float = float("inf"),
+                 sweep_interval: float = 0.05,
+                 snapshot_path: Optional[str] = None, snapshot_every: int = 0,
+                 restore_from: Optional[str] = None):
+        self.policy = make_policy(policy)
+        self.clock = WallClock()
+        if problem is None:
+            # even a restore needs the problem spec: the commit target is
+            # policy arithmetic over (n_versions, n_mb), which the snapshot
+            # records only as a cross-check, not as a reconstructible schedule
+            raise ValueError("GatewayServer needs the problem spec (pass the "
+                             "same --n-versions/--n-mb as the original serve "
+                             "when restoring)")
+        self.qs = (QueueServer(default_timeout=visibility_timeout)
+                   if n_shards <= 1
+                   else ShardedQueueServer(n_shards,
+                                           default_timeout=visibility_timeout))
         self.ds = DataServer()
-        self.n_versions = (n_versions if n_versions is not None
-                           else problem.n_versions)
-        enqueue_problem(problem, self.qs, self.ds,
-                        n_versions=self.n_versions, store_real_model=False)
-        self.endpoint = ServerEndpoint(self.qs, self.ds, self._notify)
+        nv = n_versions if n_versions is not None else problem.n_versions
+        self.n_versions = nv
+        # the run's commit target: the policy decides how many model versions
+        # `nv` BSP-equivalent rounds must publish (sync: nv; async: nv * n_mb)
+        self.n_updates = self.policy.n_updates(problem, nv)
+        if restore_from is not None:
+            self.restore(restore_from)
+        else:
+            enqueue_problem(problem, self.qs, self.ds, n_versions=nv,
+                            policy=self.policy, store_real_model=False)
+        applier = None
+        if not self.policy.barrier:
+            applier = ServerApplier(self.policy, _synthetic_apply)
+        self.applier = applier
+        self.endpoint = ServerEndpoint(self.qs, self.ds, self._notify,
+                                       clock=self.clock, applier=applier)
+        self.sweep_interval = sweep_interval
+        self.snapshot_path = snapshot_path
+        self.snapshot_every = snapshot_every
+        self.snapshots_written = 0
+        self._ops_since_snap = 0
         self._lock = threading.Lock()            # serializes ALL dispatch + writes
         self._conns: Dict[str, socket.socket] = {}
         self.done = threading.Event()
+        self._closed = threading.Event()
+        if self.ds.latest_version >= self.n_updates:
+            self.done.set()                      # restored a finished run
         self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._sock.bind((host, port))
         self._sock.listen(16)
         self.port = self._sock.getsockname()[1]
 
+    # -- durability ------------------------------------------------------------
+    def snapshot(self) -> int:
+        """Write the full queue+data state atomically. The blob rides the
+        PROTOCOL wire codec (``encode_message``), not raw ``serialize.dumps``,
+        because queue bodies are wire dataclasses (``MapTask`` et al.) that
+        serialize by registered name. Returns bytes written. Caller must hold
+        (or not need) the dispatch lock."""
+        assert self.snapshot_path is not None
+        state = {"gateway": {"qs": self.qs.snapshot(),
+                             "ds": self.ds.snapshot(),
+                             "n_updates": self.n_updates,
+                             "policy": self.policy.spec}}
+        n = serialize.atomic_write(
+            self.snapshot_path,
+            encode_message(state, codec=serialize.DEFAULT_CODEC))
+        self.snapshots_written += 1
+        return n
+
+    def restore(self, path: str) -> None:
+        state = decode_message(serialize.read_bytes(path))["gateway"]
+        # the snapshot records the run's semantics as a cross-check: booting
+        # it under different CLI flags must fail HERE, not as a confusing
+        # protocol cascade once volunteers reconnect
+        if state["policy"] != self.policy.spec:
+            raise ValueError(f"snapshot was served under policy="
+                             f"{state['policy']!r}, this server is "
+                             f"{self.policy.spec!r} — pass the original "
+                             f"--policy")
+        if state["n_updates"] != self.n_updates:
+            raise ValueError(f"snapshot's commit target is "
+                             f"{state['n_updates']}, this server computes "
+                             f"{self.n_updates} — pass the original "
+                             f"--n-versions/--n-mb")
+        if state["qs"].get("kind") == "ShardedQueueServer" and \
+                not isinstance(self.qs, ShardedQueueServer):
+            self.qs = ShardedQueueServer(1, default_timeout=float("inf"))
+        elif state["qs"].get("kind") == "QueueServer" and \
+                isinstance(self.qs, ShardedQueueServer):
+            self.qs = QueueServer()
+        self.qs.restore(state["qs"])
+        self.ds.restore(state["ds"])
+
+    def _maybe_snapshot(self, msg) -> None:
+        if self.snapshot_every <= 0 or self.snapshot_path is None:
+            return
+        if type(msg).__name__ in _READONLY:
+            return
+        self._ops_since_snap += 1
+        if self._ops_since_snap >= self.snapshot_every:
+            self._ops_since_snap = 0
+            self.snapshot()
+
+    # -- lease sweeper ---------------------------------------------------------
+    def _sweep_loop(self) -> None:
+        """Visibility-timeout enforcement on REAL deadlines: wake when the
+        earliest lease deadline passes and requeue everything expired (the
+        requeue notifications push Wake frames to waiting volunteers). This
+        is the clock owner the in-process engines emulate with virtual time."""
+        while not self._closed.is_set():
+            with self._lock:
+                now = self.clock.now()
+                expired = self.qs.expire_all(now)
+                if expired and self.snapshot_every > 0 \
+                        and self.snapshot_path is not None:
+                    self.snapshot()          # expiry is a durable state change
+                dl = self.qs.next_deadline()
+            wait = self.sweep_interval if dl is None else \
+                max(0.0, min(dl - self.clock.now(), self.sweep_interval))
+            self._closed.wait(wait if wait > 0 else 0.001)
+
+    # -- wire ------------------------------------------------------------------
     def _notify(self, consumer: str, msg) -> None:
         # called inside endpoint.handle, under self._lock. The send is
         # bounded: a client that stops draining its socket would otherwise
         # block here with the global lock held and stall the whole server —
         # treat a wedged buffer like a disconnect and drop the registration.
         conn = self._conns.get(consumer)
+        delivered = False
         if conn is not None:
             try:
                 conn.settimeout(10.0)
                 _send_frame(conn, msg)
+                delivered = True
             except OSError:
                 self._conns.pop(consumer, None)
             finally:
@@ -124,6 +278,11 @@ class GatewayServer:
                     conn.settimeout(None)
                 except OSError:
                     pass
+        if not delivered and isinstance(msg, Wake):
+            # a queue wake is one-shot: consumed by an unreachable consumer,
+            # the event would be lost to everyone. Hand it to the next waiter
+            # (or bank it), like the engines' dead-volunteer kick path.
+            self.qs.kick(msg.queue)
 
     def _serve_conn(self, conn: socket.socket) -> None:
         consumer = None
@@ -138,12 +297,19 @@ class GatewayServer:
                         self._conns[consumer] = conn
                     reply = self.endpoint.handle(msg)
                     _send_frame(conn, reply)
-                    if self.ds.latest_version >= self.n_versions:
+                    self._maybe_snapshot(msg)
+                    if self.ds.latest_version >= self.n_updates:
                         self.done.set()
         finally:
             with self._lock:
                 if consumer is not None and self._conns.get(consumer) is conn:
                     del self._conns[consumer]
+                    # a disconnected consumer can never serve a wake: drop
+                    # its queue waiters so they stop consuming one-shot
+                    # events other volunteers need. Its LEASES stay — that
+                    # recovery is deliberately the sweeper's (it may
+                    # reconnect and heartbeat; only real death expires them).
+                    self.qs.unsubscribe(consumer)
             conn.close()
 
     def serve_forever(self) -> None:
@@ -156,11 +322,13 @@ class GatewayServer:
                              daemon=True).start()
 
     def start(self) -> threading.Thread:
+        threading.Thread(target=self._sweep_loop, daemon=True).start()
         t = threading.Thread(target=self.serve_forever, daemon=True)
         t.start()
         return t
 
     def close(self) -> None:
+        self._closed.set()
         self._sock.close()
 
 
@@ -171,6 +339,8 @@ class GatewayServer:
 class SocketTransport(Transport):
     """Blocking request/reply over the gateway socket; pushed notification
     frames are stashed (or blocked for) rather than delivered by callback."""
+
+    timed_waits = True               # wait_notification accepts a timeout
 
     def __init__(self, host: str, port: int, consumer: str,
                  connect_timeout: float = 10.0):
@@ -192,6 +362,8 @@ class SocketTransport(Transport):
         self.inbox: Deque = deque()
         self.consumer = consumer
         self.bytes_moved = 0
+        self.sent: Dict[str, int] = {}   # request-type histogram (observable:
+        #                                  the applier path sends no PublishModel)
         self.call(Hello(consumer))
 
     def set_deliver(self, deliver) -> None:
@@ -204,6 +376,8 @@ class SocketTransport(Transport):
             "blocking client loop (gateway.run_volunteer), not an engine")
 
     def call(self, msg):
+        name = type(msg).__name__
+        self.sent[name] = self.sent.get(name, 0) + 1
         self.bytes_moved += _send_frame(self.sock, msg)
         while True:
             reply = _recv_frame(self.sock)
@@ -214,11 +388,24 @@ class SocketTransport(Transport):
                 continue
             return reply
 
-    def wait_notification(self):
-        """Block until the server pushes a Wake/VersionReady frame."""
+    def wait_notification(self, timeout: Optional[float] = None):
+        """Block until the server pushes a Wake/VersionReady frame. With a
+        ``timeout``, return None when nothing arrives in time — the caller's
+        cue to heartbeat its lease and re-check state."""
         if self.inbox:
             return self.inbox.popleft()
-        msg = _recv_frame(self.sock)
+        if timeout is not None:
+            self.sock.settimeout(timeout)
+        try:
+            msg = _recv_frame(self.sock)
+        except socket.timeout:
+            return None
+        finally:
+            if timeout is not None:
+                try:
+                    self.sock.settimeout(None)
+                except OSError:
+                    pass
         if msg is None:
             raise ConnectionError("gateway closed while waiting")
         if not isinstance(msg, NOTIFICATION_TYPES):
@@ -233,24 +420,42 @@ class SocketTransport(Transport):
 # the engine-free volunteer
 # ---------------------------------------------------------------------------
 
-def _wait(transport: Transport, inbox: Deque) -> None:
+def _wait(transport: Transport, inbox: Deque,
+          timeout: Optional[float] = None) -> bool:
+    """Wait for the next notification. Returns False on a timed-out wait
+    (the caller should heartbeat its lease and re-check state)."""
     if inbox:
         inbox.popleft()
-        return
+        return True
     waiter = getattr(transport, "wait_notification", None)
     if waiter is None:
         raise RuntimeError(
             "volunteer blocked on a transport that cannot wait — with no "
             "other actors this is a protocol deadlock")
+    if timeout is not None and getattr(transport, "timed_waits", False):
+        return waiter(timeout) is not None
     waiter()
+    return True
 
 
-def run_volunteer(transport: Transport, vid: str, n_versions: int,
-                  ) -> Tuple[int, int]:
+def run_volunteer(transport: Transport, vid: str, n_updates: int, *,
+                  policy: PolicyLike = None, task_delay: float = 0.0,
+                  heartbeat_every: float = 0.5,
+                  tally: Optional[list] = None) -> Tuple[int, int]:
     """Drive one volunteer to run completion over any transport. Compute is
-    synthetic (gradient payloads None, model blobs version strings). Returns
-    (final_version, tasks_done)."""
-    sess = VolunteerSession(vid, transport)
+    synthetic (gradient payloads None, model blobs version strings);
+    ``task_delay`` sleeps that long per compute — the window the chaos legs
+    use to kill a process mid-task. Barrierless policies commit through the
+    server-side applier (one ``SubmitUpdate``, no model push). On transports
+    with timed waits, every wait wakes at least each ``heartbeat_every``
+    seconds to renew the held lease (``ExtendLease``) and re-check state —
+    so a LIVE volunteer parked on the reduce barrier never loses its ticket
+    to the wall-clock sweeper, while a dead one's expires on schedule.
+    ``tally`` (a one-element list) is incremented per completed task IN
+    PLACE, so a caller surviving this function's ConnectionError still sees
+    the partial count. Returns (final_version, tasks_done)."""
+    pol = make_policy(policy)
+    sess = VolunteerSession(vid, transport, policy=pol)
     inbox: Deque = getattr(transport, "inbox", None)
     if inbox is None:
         inbox = deque()
@@ -258,35 +463,118 @@ def run_volunteer(transport: Transport, vid: str, n_versions: int,
     # end-of-run nudge: a volunteer idling on the task queue when ANOTHER
     # volunteer publishes the final version would otherwise wait forever —
     # the VersionReady push for the final version breaks that wait
-    sess.subscribe(Blocked(version=n_versions))
+    sess.subscribe(Blocked(version=n_updates))
     tasks_done = 0
+
+    def bump():
+        nonlocal tasks_done
+        tasks_done += 1
+        if tally is not None:
+            tally[0] += 1
+
+    def compute_delay():
+        # simulate slow compute in heartbeat-sized slices, renewing the held
+        # lease between them — a LIVE volunteer must keep its ticket through
+        # a compute longer than the visibility timeout (only kill -9 stops
+        # the renewals, which is exactly when the sweeper SHOULD requeue)
+        end = time.monotonic() + task_delay
+        while True:
+            rem = end - time.monotonic()
+            if rem <= 0:
+                return
+            time.sleep(min(rem, heartbeat_every))
+            sess.heartbeat()
+
     while True:
         if sess.task is None:
             # termination is only checked while idle — while a task is held,
             # advance()'s own LatestReq covers staleness, so the socket path
             # pays one version poll per task, not one per protocol move
-            if sess.latest() >= n_versions:
+            if sess.latest() >= n_updates:
                 break
             if isinstance(sess.lease(0.0), NoTask):
                 sess.subscribe_idle()
-                _wait(transport, inbox)
+                _wait(transport, inbox, heartbeat_every)
                 continue
         out = sess.advance(0.0)
         if isinstance(out, Blocked):
             sess.subscribe(out)
-            _wait(transport, inbox)
+            woke = _wait(transport, inbox, heartbeat_every)
+            # renew on EVERY wakeup, not just timeouts: a dense stream of
+            # (spurious) wakes must not starve the renewal of a held lease
+            sess.heartbeat()
+            if not woke:
+                if sess.latest() >= n_updates:
+                    break            # run finished while we were parked; the
+                    #                  held ticket requeues via bye() below
+                # deadlock breaker: a holder still blocked after a full wait
+                # window steps aside while OTHER tasks are leasable —
+                # requeue to the BACK (order-safe: a version-blocked map
+                # cannot run before its version commits, and a reduce's
+                # barrier state lives in the results queue, not the ticket)
+                # and take the front task instead. The queue becomes a slow
+                # rotation that always finds the one progressable task —
+                # e.g. the expiry-recovered map an open barrier is missing —
+                # where a fleet of parked holders would deadlock.
+                if sess.task is not None and sess.queue_depth() > 0:
+                    sess.release(front=False)
             continue
         if isinstance(out, TaskDone):
             continue
+        if task_delay > 0:
+            compute_delay()
         if isinstance(out, MapWork):
-            if not sess.finish_map(None, 0, 0.0).stale:
-                tasks_done += 1
+            if pol.barrier:
+                if not sess.finish_map(None, 0, 0.0).stale:
+                    bump()
+            else:
+                if not sess.submit_update(sess.grad_result(None, 0, 0.0)).stale:
+                    bump()
+        elif isinstance(out, LocalWork):
+            if not sess.submit_update(sess.delta_result(None, 0, 0.0)).stale:
+                bump()
         elif isinstance(out, ReduceWork):
             sess.finish_reduce(f"v{out.task.version + 1}")
-            tasks_done += 1
+            bump()
     final = sess.latest()
     sess.bye()
     return final, tasks_done
+
+
+def run_volunteer_resilient(host: str, port: int, vid: str, n_updates: int, *,
+                            policy: PolicyLike = None, task_delay: float = 0.0,
+                            max_reconnects: int = 20,
+                            ) -> Tuple[int, int, int]:
+    """``run_volunteer`` that survives gateway crashes: on a connection error
+    it reconnects (fresh transport + session, same consumer id) and resumes.
+    A lease the dead attempt held is recovered by the server's wall-clock
+    sweeper, so no work is lost — only possibly repeated (at-least-once).
+    Returns (final_version, tasks_done_total, reconnects)."""
+    tally = [0]
+    reconnects = -1
+    while True:
+        reconnects += 1
+        if reconnects > max_reconnects:
+            raise ConnectionError(
+                f"{vid}: gave up after {max_reconnects} reconnects")
+        try:
+            transport = SocketTransport(host, port, vid, connect_timeout=15.0)
+        except ConnectionError:
+            continue
+        try:
+            final, _ = run_volunteer(transport, vid, n_updates,
+                                     policy=policy, task_delay=task_delay,
+                                     tally=tally)
+            return final, tally[0], reconnects
+        except ConnectionError:
+            # server died mid-run; partial progress is already durable
+            # server-side (acked tasks) or recoverable (leases expire)
+            continue
+        finally:
+            try:
+                transport.close()
+            except OSError:
+                pass
 
 
 # ---------------------------------------------------------------------------
@@ -297,65 +585,90 @@ def _problem(args) -> SyntheticProblem:
     return SyntheticProblem(n_versions=args.n_versions, n_mb=args.n_mb)
 
 
+def _target(args) -> int:
+    return make_policy(args.policy).n_updates(_problem(args), args.n_versions)
+
+
 def _serve(args) -> int:
-    server = GatewayServer(_problem(args), port=args.port,
-                           n_versions=args.n_versions)
+    server = GatewayServer(
+        _problem(args), port=args.port, n_versions=args.n_versions,
+        policy=args.policy, n_shards=args.shards,
+        visibility_timeout=args.visibility_timeout,
+        snapshot_path=args.snapshot_path, snapshot_every=args.snapshot_every,
+        restore_from=args.restore_from)
     if args.port_file:
         tmp = args.port_file + ".tmp"
         with open(tmp, "w") as f:
             f.write(str(server.port))
         os.replace(tmp, args.port_file)         # atomic: readers never see ""
     print(f"gateway: serving {args.n_versions} versions x "
-          f"{args.n_mb}+1 tasks on 127.0.0.1:{server.port}", flush=True)
+          f"{args.n_mb}+1 tasks (policy={server.policy.spec}, "
+          f"target={server.n_updates}, "
+          f"vt={args.visibility_timeout}) on 127.0.0.1:{server.port}"
+          + (f" [restored from {args.restore_from}]" if args.restore_from
+             else ""), flush=True)
     server.start()
     server.done.wait(timeout=args.timeout)
-    # linger until connected volunteers finish their goodbyes (Bye + close)
-    deadline = time.monotonic() + 5.0
+    # linger until connected volunteers finish their goodbyes (Bye + close);
+    # generous, because a volunteer parked in a timed wait notices the end
+    # of the run on its next wakeup, not instantly
+    deadline = time.monotonic() + 20.0
     while server._conns and time.monotonic() < deadline:
         time.sleep(0.02)
-    ok = server.ds.latest_version >= args.n_versions
+    ok = server.ds.latest_version >= server.n_updates
     print(f"gateway: final_version={server.ds.latest_version} "
+          f"snapshots={server.snapshots_written} "
           f"({'done' if ok else 'TIMEOUT'})", flush=True)
     server.close()
     return 0 if ok else 1
 
 
 def _volunteer(args) -> int:
-    transport = SocketTransport("127.0.0.1", args.port, args.vid)
-    final, tasks = run_volunteer(transport, args.vid, args.n_versions)
-    transport.close()
+    n_updates = _target(args)
+    final, tasks, reconnects = run_volunteer_resilient(
+        "127.0.0.1", args.port, args.vid, n_updates, policy=args.policy,
+        task_delay=args.task_delay)
     print(f"volunteer {args.vid}: final_version={final} tasks={tasks} "
-          f"bytes_sent={transport.bytes_moved}", flush=True)
+          f"reconnects={reconnects}", flush=True)
     if args.expect_final is not None and final != args.expect_final:
         print(f"FAIL: expected final_version={args.expect_final}")
         return 1
     return 0
 
 
-def _smoke(args) -> int:
-    """End-to-end proof: the identical volunteer loop over (a) direct calls
-    and (b) a real socket to a separate gateway PROCESS must agree."""
-    # (a) in-process reference
+def _spawn_server(args, port_file: str, *, port: int = 0,
+                  extra: Tuple[str, ...] = ()) -> subprocess.Popen:
+    return subprocess.Popen(
+        [sys.executable, "-m", "repro.core.gateway", "--serve",
+         "--port", str(port), "--port-file", port_file,
+         "--n-versions", str(args.n_versions), "--n-mb", str(args.n_mb),
+         *extra],
+        env=os.environ.copy())
+
+
+def _wait_port(port_file: str, proc: subprocess.Popen,
+               timeout: float = 20.0) -> int:
+    deadline = time.monotonic() + timeout
+    while not os.path.exists(port_file):
+        if time.monotonic() > deadline or proc.poll() is not None:
+            raise RuntimeError("gateway server did not come up")
+        time.sleep(0.05)
+    with open(port_file) as f:
+        return int(f.read())
+
+
+def _smoke_transport_equivalence(args) -> None:
+    """Leg 1 — the identical volunteer loop over (a) direct calls and (b) a
+    real socket to a separate gateway PROCESS must agree."""
     server = GatewayServer(_problem(args), n_versions=args.n_versions)
     ref_final, ref_tasks = run_volunteer(
         InProcessTransport(server.endpoint), "ref", args.n_versions)
     server.close()
-    # (b) out-of-process over the wire
     with tempfile.TemporaryDirectory() as td:
         port_file = os.path.join(td, "gw.port")
-        proc = subprocess.Popen(
-            [sys.executable, "-m", "repro.core.gateway", "--serve",
-             "--port", "0", "--port-file", port_file,
-             "--n-versions", str(args.n_versions), "--n-mb", str(args.n_mb)],
-            env=os.environ.copy())
+        proc = _spawn_server(args, port_file)
         try:
-            deadline = time.monotonic() + 20
-            while not os.path.exists(port_file):
-                if time.monotonic() > deadline or proc.poll() is not None:
-                    raise RuntimeError("gateway server did not come up")
-                time.sleep(0.05)
-            with open(port_file) as f:
-                port = int(f.read())
+            port = _wait_port(port_file, proc)
             transport = SocketTransport("127.0.0.1", port, "gw0")
             final, tasks = run_volunteer(transport, "gw0", args.n_versions)
             transport.close()
@@ -367,8 +680,166 @@ def _smoke(args) -> int:
     assert final == ref_final == args.n_versions, (final, ref_final)
     assert tasks == ref_tasks == n_tasks, (tasks, ref_tasks, n_tasks)
     assert rc == 0, f"gateway server exited {rc}"
-    print(f"# OK gateway smoke: out-of-process volunteer over the socket "
-          f"matched in-process — final_version={final}, tasks={tasks}")
+    print(f"# OK gateway smoke [transport]: out-of-process volunteer over "
+          f"the socket matched in-process — final_version={final}, "
+          f"tasks={tasks}")
+
+
+def _smoke_lease_sweeper(args) -> None:
+    """Leg 2 — kill -9 a real volunteer PROCESS mid-task: its lease must
+    expire on the wall clock (sweeper thread), the ticket requeue, and the
+    surviving volunteers finish the whole run. Two survivors, because the
+    recovered map task needs an IDLE taker if the other survivor is already
+    holding the reduce barrier."""
+    vt = 1.0
+    n_tasks = args.n_versions * (args.n_mb + 1)
+    with tempfile.TemporaryDirectory() as td:
+        port_file = os.path.join(td, "gw.port")
+        proc = _spawn_server(args, port_file,
+                             extra=("--visibility-timeout", str(vt)))
+        victim = None
+        try:
+            port = _wait_port(port_file, proc)
+            # the victim sleeps 30 s inside every compute, so once it LEASES
+            # it is holding that lease when killed (and can never finish)
+            victim = subprocess.Popen(
+                [sys.executable, "-m", "repro.core.gateway", "--volunteer",
+                 "--port", str(port), "--vid", "victim",
+                 "--n-versions", str(args.n_versions),
+                 "--n-mb", str(args.n_mb), "--task-delay", "30"],
+                env=os.environ.copy())
+            # wait until the victim has genuinely leased: the task queue's
+            # depth drops below the full schedule (DepthReq is read-only)
+            from repro.core.protocol import DepthReq
+            from repro.core.tasks import INITIAL_QUEUE
+            monitor = SocketTransport("127.0.0.1", port, "monitor")
+            deadline = time.monotonic() + 30.0
+            while monitor.call(DepthReq(INITIAL_QUEUE)).value >= n_tasks:
+                assert time.monotonic() < deadline, "victim never leased"
+                time.sleep(0.05)
+            monitor.close()
+            victim.send_signal(signal.SIGKILL)
+            victim.wait(timeout=10)
+            t0 = time.monotonic()
+            results: Dict[str, Tuple[int, int]] = {}
+
+            def survive(vid: str) -> None:
+                tr = SocketTransport("127.0.0.1", port, vid)
+                results[vid] = run_volunteer(tr, vid, args.n_versions)
+                tr.close()
+
+            threads = [threading.Thread(target=survive, args=(f"s{i}",),
+                                        daemon=True) for i in range(2)]
+            for th in threads:
+                th.start()
+            for th in threads:
+                th.join(timeout=60)
+                assert not th.is_alive(), "survivor deadlocked"
+            wall = time.monotonic() - t0
+            rc = proc.wait(timeout=15)
+        finally:
+            for p in (victim, proc):
+                if p is not None and p.poll() is None:
+                    p.kill()
+    finals = [results[v][0] for v in sorted(results)]
+    tasks = sum(results[v][1] for v in sorted(results))
+    assert finals == [args.n_versions] * 2, f"run did not finish: {finals}"
+    assert tasks >= n_tasks, f"tasks lost: {tasks} < {n_tasks}"
+    assert rc == 0, f"gateway server exited {rc}"
+    print(f"# OK gateway smoke [lease-sweeper]: victim volunteer kill -9'd "
+          f"mid-task; wall-clock sweeper requeued its lease (vt={vt}s) and "
+          f"2 survivors finished the run ({tasks} tasks) in {wall:.1f}s")
+
+
+def _smoke_crash_recovery(args) -> None:
+    """Leg 3 — kill -9 the SERVER mid-run, restart from the latest snapshot:
+    the volunteer reconnects and the run completes with the same final
+    version as the uninterrupted single-process reference (tasks may repeat:
+    at-least-once)."""
+    # uninterrupted reference (in process, same problem)
+    server = GatewayServer(_problem(args), n_versions=args.n_versions)
+    ref_final, ref_tasks = run_volunteer(
+        InProcessTransport(server.endpoint), "ref", args.n_versions)
+    server.close()
+    with tempfile.TemporaryDirectory() as td:
+        port_file = os.path.join(td, "gw.port")
+        snap = os.path.join(td, "gw.snap")
+        durable = ("--visibility-timeout", "1.0",
+                   "--snapshot-every", "1", "--snapshot-path", snap)
+        proc = _spawn_server(args, port_file, extra=durable)
+        out: Dict[str, Tuple[int, int, int]] = {}
+        try:
+            port = _wait_port(port_file, proc)
+
+            def drive():
+                out["v"] = run_volunteer_resilient(
+                    "127.0.0.1", port, "gw0", args.n_versions,
+                    task_delay=0.06)
+
+            vt = threading.Thread(target=drive, daemon=True)
+            vt.start()
+            time.sleep(0.8)                      # mid-run (15 tasks x ~60ms+)
+            proc.send_signal(signal.SIGKILL)     # no goodbye, no final flush
+            proc.wait(timeout=10)
+            assert os.path.exists(snap), "server died before any snapshot"
+            # restart on the SAME port from the latest snapshot
+            proc = _spawn_server(args, port_file, port=port,
+                                 extra=durable + ("--restore-from", snap))
+            vt.join(timeout=60)
+            assert not vt.is_alive(), "volunteer never finished after restart"
+            rc = proc.wait(timeout=15)
+        finally:
+            if proc.poll() is None:
+                proc.kill()
+    final, tasks, reconnects = out["v"]
+    assert final == ref_final == args.n_versions, (final, ref_final)
+    assert tasks >= ref_tasks, f"lost work: {tasks} < {ref_tasks}"
+    assert reconnects >= 1, "volunteer never observed the crash"
+    assert rc == 0, f"restarted gateway exited {rc}"
+    print(f"# OK gateway smoke [crash-recovery]: server kill -9'd mid-run, "
+          f"restarted from snapshot, run resumed and matched the "
+          f"uninterrupted final version v{final} "
+          f"(tasks {tasks} >= {ref_tasks} ref; {reconnects} reconnect)")
+
+
+def _smoke_server_applier(args) -> None:
+    """Leg 4 — barrierless policy over the socket: the server-side applier
+    commits every admitted gradient, so the volunteer's wire histogram shows
+    ZERO model pushes and zero admission fetches — the bytes-per-update win
+    ``benchmarks/staleness.py`` quantifies."""
+    policy = "staleness:2"
+    n_updates = make_policy(policy).n_updates(_problem(args), args.n_versions)
+    with tempfile.TemporaryDirectory() as td:
+        port_file = os.path.join(td, "gw.port")
+        proc = _spawn_server(args, port_file, extra=("--policy", policy))
+        try:
+            port = _wait_port(port_file, proc)
+            transport = SocketTransport("127.0.0.1", port, "thin0")
+            final, tasks = run_volunteer(transport, "thin0", n_updates,
+                                         policy=policy)
+            sent = dict(transport.sent)
+            transport.close()
+            rc = proc.wait(timeout=10)
+        finally:
+            if proc.poll() is None:
+                proc.kill()
+    assert final == n_updates, (final, n_updates)
+    assert sent.get("SubmitUpdate", 0) == tasks > 0, sent
+    assert "PublishModel" not in sent, f"thin client pushed a model: {sent}"
+    assert rc == 0, f"gateway server exited {rc}"
+    print(f"# OK gateway smoke [server-applier]: {policy} over the socket — "
+          f"{tasks} updates committed via SubmitUpdate, volunteer sent "
+          f"0 PublishModel frames (server applied every gradient)")
+
+
+def _smoke(args) -> int:
+    _smoke_transport_equivalence(args)
+    _smoke_lease_sweeper(args)
+    _smoke_crash_recovery(args)
+    _smoke_server_applier(args)
+    print("# OK gateway smoke: all 4 legs green (transport equivalence, "
+          "wall-clock lease sweeper, kill -9 crash recovery, server-side "
+          "applier)")
     return 0
 
 
@@ -383,6 +854,21 @@ def main(argv=None) -> int:
     ap.add_argument("--vid", default="gw0")
     ap.add_argument("--n-versions", type=int, default=4)
     ap.add_argument("--n-mb", type=int, default=6)
+    ap.add_argument("--policy", default="sync",
+                    help="sync | staleness:<s> | local:<k> (barrierless "
+                         "policies enable the server-side applier)")
+    ap.add_argument("--shards", type=int, default=1)
+    ap.add_argument("--visibility-timeout", type=float, default=float("inf"),
+                    help="wall-clock lease seconds before the sweeper "
+                         "requeues an unacked task (default: infinite)")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="snapshot after every K state-changing requests "
+                         "(0 = never)")
+    ap.add_argument("--snapshot-path", default=None)
+    ap.add_argument("--restore-from", default=None,
+                    help="boot from a snapshot instead of a fresh enqueue")
+    ap.add_argument("--task-delay", type=float, default=0.0,
+                    help="volunteer: sleep per compute (chaos kill window)")
     ap.add_argument("--expect-final", type=int, default=None)
     ap.add_argument("--timeout", type=float, default=60.0)
     args = ap.parse_args(argv)

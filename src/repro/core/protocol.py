@@ -19,7 +19,12 @@ DistML.js's serializable command API do:
   ``QueueServer``/``DataServer`` pair and returns the reply message.
   Subscriptions are registered here; their fires are delivered as ``Wake`` /
   ``VersionReady`` notification messages through a ``notify(consumer, msg)``
-  sink (the transport's downstream half).
+  sink (the transport's downstream half). An optional ``LeaseClock`` makes
+  the server the lease-time authority (the gateway's wall clock, an engine's
+  virtual clock), and an optional ``ServerApplier`` serves the barrierless
+  ``SubmitUpdate`` fast path: admission -> apply -> publish -> ack in one
+  dispatch, so thin volunteers never fetch the admission-time model or push
+  the updated blob.
 
 - **VolunteerSession** — the sans-IO client state machine owning every
   protocol rule the engines used to duplicate: lease from the task queue ->
@@ -160,6 +165,23 @@ class Nack:
 
 @wire
 @dataclass(frozen=True)
+class ExtendLease:
+    """Lease renewal (heartbeat): re-stamp the held tag's visibility deadline
+    to now + timeout. A live consumer whose compute — or whose barrier wait —
+    outlasts the visibility timeout sends this periodically so only DEAD
+    consumers' leases expire. With a server clock installed ``now`` is
+    ignored, like ``LeaseReq``. ``consumer`` is the receipt check: if the
+    lease meanwhile expired and was re-granted to someone else, the renewal
+    is refused (Ok(False)) instead of hijacking the new holder's lease."""
+    queue: str
+    tag: int
+    now: float = 0.0
+    timeout: Optional[float] = None
+    consumer: str = ""
+
+
+@wire
+@dataclass(frozen=True)
 class PublishResult:
     """Publish a GradResult onto a results queue."""
     queue: str
@@ -235,6 +257,20 @@ class LatestReq:
 
 @wire
 @dataclass(frozen=True)
+class SubmitUpdate:
+    """Barrierless fast path: hand the server a version-stamped result
+    (``GradResult``/``DeltaResult``) and let IT run admission -> apply ->
+    commit -> ack, so the volunteer never fetches the admission-time model or
+    pushes the updated blob. Requires the endpoint to host a
+    ``ServerApplier``; ``queue``/``tag`` name the ticket to ack (admitted) or
+    nack to the front (too stale)."""
+    queue: str
+    tag: int
+    result: Any
+
+
+@wire
+@dataclass(frozen=True)
 class Bye:
     """Volunteer leaves: unsubscribe everywhere + requeue held leases."""
     consumer: str
@@ -282,6 +318,22 @@ class LatestVersion:
     version: int
 
 
+@wire
+@dataclass(frozen=True)
+class UpdateCommitted:
+    """``SubmitUpdate`` reply: the result passed admission; the server
+    applied it and published model ``version``, and the ticket is acked."""
+    version: int
+
+
+@wire
+@dataclass(frozen=True)
+class UpdateRejected:
+    """``SubmitUpdate`` reply: too stale at ``latest``; the payload was
+    discarded and the ticket nacked to the queue front for a recompute."""
+    latest: int
+
+
 # ---------------------------------------------------------------------------
 # messages: async notifications (server -> client)
 # ---------------------------------------------------------------------------
@@ -303,37 +355,99 @@ class VersionReady:
 
 NOTIFICATION_TYPES = (Wake, VersionReady)
 
-REQUEST_TYPES = (Hello, LeaseReq, Ack, Nack, PublishResult, FetchModel,
-                 PublishModel, GcModels, WatchVersion, SubscribeQueue,
-                 KickQueue, DropConsumer, DepthReq, DrainedReq, LatestReq,
-                 Bye)
+REQUEST_TYPES = (Hello, LeaseReq, Ack, Nack, ExtendLease, PublishResult,
+                 FetchModel, PublishModel, GcModels, WatchVersion,
+                 SubscribeQueue, KickQueue, DropConsumer, DepthReq,
+                 DrainedReq, LatestReq, SubmitUpdate, Bye)
 
-REPLY_TYPES = (LeaseGrant, LeaseEmpty, Ok, ModelBlob, LatestVersion)
+REPLY_TYPES = (LeaseGrant, LeaseEmpty, Ok, ModelBlob, LatestVersion,
+               UpdateCommitted, UpdateRejected)
 
 
 # ---------------------------------------------------------------------------
 # server half
 # ---------------------------------------------------------------------------
 
+@dataclass
+class ServerApplier:
+    """Server-side async applier (the DistML.js shape: thin clients push
+    contributions; the parameter server applies them). Hosted by a
+    ``ServerEndpoint``, it serves ``SubmitUpdate`` for barrierless policies:
+    admission by ``policy.admit``, then ``apply(model_blob, result, version)``
+    produces the next blob, which the endpoint publishes as ``version + 1``
+    and acks the ticket — one round-trip where the client-applied path costs
+    three (admission LatestReq + model fetch + model push)."""
+
+    policy: Any
+    apply: Callable[[Any, Any, int], Any]
+    model_nbytes: int = 0
+    gc_keep: Optional[int] = None
+    applied: int = 0
+    rejected: int = 0
+
+
 class ServerEndpoint:
     """Dispatch one request message onto (QueueServer, DataServer) and return
     the reply message. Subscription/watch fires leave as ``Wake`` /
     ``VersionReady`` notifications through ``notify(consumer, msg)`` — which a
     transport routes back to the owning engine (possibly over bytes, possibly
-    through injected faults)."""
+    through injected faults).
+
+    ``clock`` (a ``queue.LeaseClock``) makes the SERVER the lease-time
+    authority: when set, every ``LeaseReq`` is stamped with ``clock.now()``
+    instead of the client-supplied ``now`` — a remote client's idea of time
+    never reaches the deadline table. Engines install a ``VirtualClock`` over
+    their own event time; the gateway installs a ``WallClock`` plus a sweeper
+    thread that drives ``expire_all`` on real deadlines.
+
+    ``applier`` (a ``ServerApplier``) enables the ``SubmitUpdate`` fast path
+    for barrierless policies."""
 
     def __init__(self, qs, ds: DataServer,
-                 notify: Optional[Callable[[str, Any], None]] = None):
+                 notify: Optional[Callable[[str, Any], None]] = None, *,
+                 clock=None, applier: Optional[ServerApplier] = None):
         self.qs = qs
         self.ds = ds
+        self.clock = clock
+        self.applier = applier
         self._notify = notify if notify is not None else (lambda c, m: None)
+        # live (consumer, version) watches: lossy/timed clients re-subscribe
+        # defensively, and the queue side dedupes waiters per consumer — this
+        # is the matching dedupe for version watches, so a re-watch while the
+        # previous registration is live is a no-op instead of stacking
+        # duplicate watcher callbacks and duplicate VersionReady frames
+        self._watch_keys: set = set()
 
     def set_notify(self, notify: Callable[[str, Any], None]) -> None:
         self._notify = notify
 
+    def now(self, client_now: float = 0.0) -> float:
+        """Lease-authority time: the installed clock, else the client's."""
+        return client_now if self.clock is None else self.clock.now()
+
+    def _submit_update(self, m: SubmitUpdate):
+        ap = self.applier
+        if ap is None:
+            raise TypeError("SubmitUpdate needs a ServerApplier on the "
+                            "endpoint (server-side apply is not enabled)")
+        latest = self.ds.latest_version
+        if not ap.policy.admit(m.result.computed_at, latest):
+            ap.rejected += 1
+            self.qs.nack(m.queue, m.tag, front=True)
+            return UpdateRejected(latest)
+        blob = self.ds.get_model(latest)
+        new_blob = ap.apply(blob, m.result, latest)
+        self.ds.publish_model(latest + 1, new_blob, nbytes=ap.model_nbytes)
+        if ap.gc_keep is not None:
+            self.ds.gc_models(keep_last=ap.gc_keep)
+        self.qs.ack(m.queue, m.tag)
+        ap.applied += 1
+        return UpdateCommitted(latest + 1)
+
     def handle(self, m):
         if isinstance(m, LeaseReq):
-            got = self.qs.lease(m.queue, m.consumer, m.now, m.timeout)
+            got = self.qs.lease(m.queue, m.consumer, self.now(m.now),
+                                m.timeout)
             if got is None:
                 return LeaseEmpty()
             return LeaseGrant(got[0], got[1], self.ds.latest_version)
@@ -341,6 +455,9 @@ class ServerEndpoint:
             return Ok(self.qs.ack(m.queue, m.tag))
         if isinstance(m, Nack):
             return Ok(self.qs.nack(m.queue, m.tag, front=m.front))
+        if isinstance(m, ExtendLease):
+            return Ok(self.qs.extend(m.queue, m.tag, self.now(m.now),
+                                     m.timeout, m.consumer or None))
         if isinstance(m, PublishResult):
             return Ok(self.qs.publish(m.queue, m.result))
         if isinstance(m, FetchModel):
@@ -353,10 +470,17 @@ class ServerEndpoint:
             self.ds.gc_models(keep_last=m.keep_last)
             return Ok()
         if isinstance(m, WatchVersion):
-            self.ds.watch_version(
-                m.version,
-                lambda: self._notify(m.consumer, VersionReady(m.version)))
-            return Ok()
+            key = (m.consumer, m.version)
+            if key in self._watch_keys:
+                return Ok(False)
+            self._watch_keys.add(key)
+
+            def fire(key=key, consumer=m.consumer, version=m.version):
+                self._watch_keys.discard(key)
+                self._notify(consumer, VersionReady(version))
+
+            self.ds.watch_version(m.version, fire)
+            return Ok(True)
         if isinstance(m, SubscribeQueue):
             self.qs.subscribe(
                 m.queue, m.consumer,
@@ -374,6 +498,8 @@ class ServerEndpoint:
             return Ok(self.qs.drained([m.queue]))
         if isinstance(m, LatestReq):
             return LatestVersion(self.ds.latest_version)
+        if isinstance(m, SubmitUpdate):
+            return self._submit_update(m)
         if isinstance(m, Bye):
             self.qs.unsubscribe(m.consumer)
             return Ok(self.qs.drop_consumer(m.consumer))
@@ -452,6 +578,16 @@ class ReduceWork:
 class TaskDone:
     task: Any
     stale: bool = False               # acked an obsolete duplicate, no work
+
+
+@dataclass(frozen=True)
+class UpdateDone:
+    """Outcome of ``submit_update`` (server-applied barrierless commit):
+    ``version`` is the model version the server published (-1 when the result
+    was rejected as stale — the ticket is already nacked server-side)."""
+    task: Any
+    stale: bool
+    version: int = -1
 
 
 @dataclass(frozen=True)
@@ -622,6 +758,20 @@ class VolunteerSession:
         self._clear()
         return done
 
+    def submit_update(self, result) -> UpdateDone:
+        """Server-applied barrierless commit: one ``SubmitUpdate`` round-trip
+        replaces the client-applied ``finish_update`` -> ``commit_update``
+        pair — the server runs admission, applies the payload to the current
+        model, publishes, and acks/nacks the ticket itself, so the volunteer
+        pays a result push instead of a model push. Requires the endpoint to
+        host a ``ServerApplier``."""
+        t = self.task
+        r = self._call(SubmitUpdate(INITIAL_QUEUE, self.tag, result))
+        self._clear()
+        if isinstance(r, UpdateRejected):
+            return UpdateDone(t, stale=True)
+        return UpdateDone(t, stale=False, version=r.version)
+
     # -- protocol: completions ----------------------------------------------
     def finish_map(self, payload, nbytes: int, loss: float):
         """Publish the gradient and ack the map task (re-checking admission:
@@ -673,6 +823,32 @@ class VolunteerSession:
         done = TaskDone(t)
         self._clear()
         return done
+
+    def release(self, *, front: bool = False) -> bool:
+        """Voluntarily give the held ticket back (nack) and go idle. The
+        liveness escape hatch for a version-blocked map: stepping aside to
+        the BACK of the queue is order-safe (the task cannot run before its
+        model version commits anyway) and frees this volunteer to take the
+        front task — which may be the very map the open reduce barrier is
+        missing. Safe on an already-expired lease (the nack is a no-op)."""
+        ok = self._call(Nack(INITIAL_QUEUE, self.tag, front=front)).value
+        self._clear()
+        return ok
+
+    def queue_depth(self) -> int:
+        """Pending tasks on the task queue (is there other leasable work?)."""
+        return self._call(DepthReq(INITIAL_QUEUE)).value
+
+    # -- protocol: lease renewal ---------------------------------------------
+    def heartbeat(self, now: float = 0.0) -> bool:
+        """Renew the held ticket's visibility deadline (see ``ExtendLease``).
+        Call periodically from long computes or long barrier waits so the
+        sweeper only ever expires DEAD volunteers. Returns False when the
+        renewal lost the race (the lease already expired and requeued)."""
+        if self.tag is None:
+            return False
+        return self._call(ExtendLease(INITIAL_QUEUE, self.tag, now,
+                                      consumer=self.vid)).value
 
     # -- protocol: waits ----------------------------------------------------
     def subscribe(self, blocked: Blocked) -> None:

@@ -37,11 +37,47 @@ from __future__ import annotations
 import bisect
 import hashlib
 import heapq
-import itertools
 import math
+import time
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
+
+
+class LeaseClock:
+    """Time source for visibility deadlines.
+
+    The queue semantics are clock-agnostic: ``lease(now)`` stamps a deadline
+    and ``expire_all(now)`` enforces it, for whatever ``now`` means. The
+    engines own virtual clocks (the Simulator's event time, the Coordinator's
+    logical step count); a real deployment owns wall time. ``LeaseClock``
+    names that choice so a server endpoint — and the gateway's sweeper thread
+    — can ask "what time is it for lease purposes?" without knowing which
+    regime it runs under.
+    """
+
+    def now(self) -> float:
+        raise NotImplementedError
+
+
+class WallClock(LeaseClock):
+    """Real deployments: visibility deadlines are wall-clock seconds
+    (monotonic, so a system clock step cannot mass-expire leases)."""
+
+    def now(self) -> float:
+        return time.monotonic()
+
+
+class VirtualClock(LeaseClock):
+    """Engines: deadlines live on the engine's own virtual/logical clock.
+    Wraps a zero-arg callable (e.g. ``lambda: sim._now``) so the clock always
+    reads the engine's current instant, never a stale copy."""
+
+    def __init__(self, read: Callable[[], float]):
+        self._read = read
+
+    def now(self) -> float:
+        return self._read()
 
 
 @dataclass
@@ -58,7 +94,7 @@ class Queue:
         self.default_timeout = default_timeout
         self._pending: deque = deque()            # (tag, body)
         self._in_flight: Dict[int, _InFlight] = {}
-        self._tags = itertools.count()
+        self._next_tag = 0                        # plain int: snapshotable
         # owning QueueServer's deadline index hook (set by declare/attach):
         # called with (qname, deadline) whenever a finite deadline is created,
         # so the server can skip expiry scans until something can have expired.
@@ -88,7 +124,8 @@ class Queue:
 
     # -- producer ------------------------------------------------------------
     def publish(self, body: Any) -> int:
-        tag = next(self._tags)
+        tag = self._next_tag
+        self._next_tag += 1
         self._pending.append((tag, body))
         self.published += 1
         self._notify(publish=True)
@@ -127,6 +164,30 @@ class Queue:
             self._pending.append((tag, inf.body))
         self.requeued += 1
         self._notify(publish=False)
+        return True
+
+    def extend(self, tag: int, now: float,
+               timeout: Optional[float] = None,
+               consumer: Optional[str] = None) -> bool:
+        """Lease renewal (SQS ChangeMessageVisibility): a live consumer whose
+        work — or whose legitimate protocol WAIT, e.g. holding the reduce
+        barrier — outlasts the visibility timeout re-stamps its deadline to
+        ``now + timeout`` instead of losing the lease. Returns False if the
+        tag is no longer held (already expired/requeued — the renewal lost),
+        or — receipt-handle semantics — if ``consumer`` is given and the tag
+        was meanwhile re-leased to SOMEONE ELSE (a zombie's heartbeat must
+        not renew, and must be told it lost, another consumer's lease)."""
+        inf = self._in_flight.get(tag)
+        if inf is None:
+            return False
+        if consumer is not None and inf.consumer != consumer:
+            return False
+        t = self.default_timeout if timeout is None else timeout
+        inf.deadline = now + t
+        if math.isfinite(inf.deadline):
+            heapq.heappush(self._deadlines, (inf.deadline, tag))
+            if self._server_note is not None:
+                self._server_note(self.name, inf.deadline)
         return True
 
     # -- subscriptions ---------------------------------------------------------
@@ -271,6 +332,58 @@ class Queue:
         assert self._pub_waiter_names == {c for c, _ in self._pub_waiters}, \
             f"{self.name}: publish-waiter name set out of sync"
 
+    # -- durability ------------------------------------------------------------
+    def snapshot(self) -> Dict[str, Any]:
+        """Full serializable live state: pending FIFO (order + tags), the
+        in-flight table with deadlines and requeue counts, banked signals,
+        the tag counter, and all counters. Registered WAITERS are deliberately
+        excluded — they are live callbacks bound to connections/sessions that
+        do not survive a process, so a restored server starts with none and
+        clients re-subscribe (which the protocol already requires of lossy
+        transports)."""
+        return {
+            "name": self.name,
+            "default_timeout": self.default_timeout,
+            "pending": [[tag, body] for tag, body in self._pending],
+            "in_flight": [[tag, inf.body, inf.consumer, inf.deadline,
+                           inf.requeues]
+                          for tag, inf in sorted(self._in_flight.items())],
+            "next_tag": self._next_tag,
+            "signal": self._signal,
+            "pub_signal": self._pub_signal,
+            "published": self.published,
+            "acked": self.acked,
+            "requeued": self.requeued,
+            "wakeups": self.wakeups,
+        }
+
+    @classmethod
+    def from_snapshot(cls, state: Dict[str, Any]) -> "Queue":
+        q = cls(state["name"], state["default_timeout"])
+        q._pending = deque((tag, body) for tag, body in state["pending"])
+        for tag, body, consumer, deadline, requeues in state["in_flight"]:
+            q._in_flight[tag] = _InFlight(body, consumer, deadline, requeues)
+            if math.isfinite(deadline):
+                q._deadlines.append((deadline, tag))
+        heapq.heapify(q._deadlines)
+        q._next_tag = state["next_tag"]
+        q._signal = bool(state["signal"])
+        q._pub_signal = bool(state["pub_signal"])
+        q.published = state["published"]
+        q.acked = state["acked"]
+        q.requeued = state["requeued"]
+        q.wakeups = state["wakeups"]
+        return q
+
+    def adopt_waiters(self, src: "Queue") -> None:
+        """Carry another queue object's live waiter registrations into this
+        one (in-place restore: the snapshot cannot hold callbacks, but the
+        process may still hold the subscribers)."""
+        self._waiters = src._waiters
+        self._pub_waiters = src._pub_waiters
+        self._waiter_names = src._waiter_names
+        self._pub_waiter_names = src._pub_waiter_names
+
 
 class QueueServer:
     """Named queues. Multiple QueueServers are modelled by multiple instances
@@ -320,6 +433,43 @@ class QueueServer:
         q._server_note = self._note_deadline
         self.queues[q.name] = q
 
+    # -- durability ------------------------------------------------------------
+    def snapshot(self) -> Dict[str, Any]:
+        """Serializable state of every queue, in name order (deterministic
+        bytes for identical state). See ``Queue.snapshot`` for what rides
+        along and why waiters do not."""
+        return {"kind": "QueueServer",
+                "default_timeout": self.default_timeout,
+                "queues": [self.queues[n].snapshot()
+                           for n in sorted(self.queues)]}
+
+    def restore(self, state: Dict[str, Any], *,
+                waiters_from: Optional[Dict[str, Queue]] = None) -> None:
+        """Replace this server's entire state with a snapshot, in place (the
+        object identity survives, so endpoints/transports keep working).
+
+        ``waiters_from`` maps queue names to live Queue objects whose waiter
+        registrations should be adopted by the restored queues — defaults to
+        this server's own current queues, which makes a same-process
+        snapshot -> restore round-trip invisible to subscribed consumers.
+        After a process crash there are no live waiters to adopt and restored
+        queues start with none; reconnecting clients re-subscribe, and any
+        lease the dead clients held expires via the visibility sweeper."""
+        if state.get("kind") != "QueueServer":
+            raise ValueError(f"not a QueueServer snapshot: {state.get('kind')!r}")
+        old = self.queues if waiters_from is None else waiters_from
+        self.default_timeout = state["default_timeout"]
+        self.queues = {}
+        self._dl_heap = []
+        for qstate in state["queues"]:
+            q = Queue.from_snapshot(qstate)
+            if q.name in old:
+                q.adopt_waiters(old[q.name])
+            q._server_note = self._note_deadline
+            for dl, _ in q._deadlines:
+                heapq.heappush(self._dl_heap, (dl, q.name))
+            self.queues[q.name] = q
+
     def publish(self, qname: str, body: Any) -> int:
         return self.declare(qname).publish(body)
 
@@ -332,6 +482,11 @@ class QueueServer:
 
     def nack(self, qname: str, tag: int, *, front: bool = True) -> bool:
         return self.declare(qname).nack(tag, front=front)
+
+    def extend(self, qname: str, tag: int, now: float,
+               timeout: Optional[float] = None,
+               consumer: Optional[str] = None) -> bool:
+        return self.declare(qname).extend(tag, now, timeout, consumer)
 
     def subscribe(self, qname: str, consumer: str,
                   callback: Callable[[], None], *, kind: str = "any") -> None:
@@ -489,6 +644,46 @@ class ShardedQueueServer:
             migrated.append(name)
         return migrated
 
+    # -- durability ------------------------------------------------------------
+    def snapshot(self) -> Dict[str, Any]:
+        """Per-shard snapshots plus the ring membership (stable shard ids and
+        the id counter), so a restore reproduces the exact queue->shard
+        placement — including ids burned by shards that have since left."""
+        return {"kind": "ShardedQueueServer",
+                "default_timeout": self.default_timeout,
+                "vnodes": self._vnodes,
+                "next_sid": self._next_sid,
+                "sids": list(self._sids),
+                "shards": [s.snapshot() for s in self.shards]}
+
+    def restore(self, state: Dict[str, Any]) -> None:
+        """Rebuild the ring and every shard's state in place. The placement
+        rule is code, not state — the restoring server keeps its own (it must
+        be constructed with the same rule, like the same codebase). Live
+        waiters are adopted by queue NAME across the whole federation, so a
+        same-process round-trip stays invisible even though queue->shard
+        ownership is reconstructed rather than copied."""
+        if state.get("kind") != "ShardedQueueServer":
+            raise ValueError(
+                f"not a ShardedQueueServer snapshot: {state.get('kind')!r}")
+        if state["vnodes"] != self._vnodes:
+            raise ValueError(f"vnodes mismatch: snapshot {state['vnodes']}, "
+                             f"server {self._vnodes}")
+        live = dict(self.queues)              # merged name -> Queue view
+        self.default_timeout = state["default_timeout"]
+        self._next_sid = state["next_sid"]
+        self._sids = list(state["sids"])
+        self._ring = []
+        for sid in self._sids:
+            for r in range(self._vnodes):
+                bisect.insort(self._ring,
+                              (_stable_hash(f"qshard-{sid}#{r}"), sid))
+        self._reindex()
+        self.shards = [QueueServer(self.default_timeout)
+                       for _ in self._sids]
+        for shard, sstate in zip(self.shards, state["shards"]):
+            shard.restore(sstate, waiters_from=live)
+
     def shard_of(self, qname: str) -> int:
         """Index of the shard owning this queue name (clockwise successor of
         its placement key)."""
@@ -515,6 +710,11 @@ class ShardedQueueServer:
 
     def nack(self, qname: str, tag: int, *, front: bool = True) -> bool:
         return self.route(qname).nack(qname, tag, front=front)
+
+    def extend(self, qname: str, tag: int, now: float,
+               timeout: Optional[float] = None,
+               consumer: Optional[str] = None) -> bool:
+        return self.route(qname).extend(qname, tag, now, timeout, consumer)
 
     def subscribe(self, qname: str, consumer: str,
                   callback: Callable[[], None], *, kind: str = "any") -> None:

@@ -57,9 +57,9 @@ from repro.core.aggregation import PolicyLike, make_policy
 from repro.core.dataserver import DataServer
 from repro.core.mapreduce import TrainingProblem
 from repro.core.protocol import (Blocked, Busy, LocalWork, MapWork, NoTask,
-                                 ReduceWork, ServerEndpoint, TaskDone,
-                                 VolunteerSession, wire_size)
-from repro.core.queue import QueueServer, ShardedQueueServer
+                                 ReduceWork, ServerApplier, ServerEndpoint,
+                                 TaskDone, VolunteerSession, wire_size)
+from repro.core.queue import QueueServer, ShardedQueueServer, VirtualClock
 from repro.core.transport import FaultSpec, FaultyTransport, make_transport
 
 
@@ -181,7 +181,8 @@ class Simulator:
                  faults: Optional[FaultSpec] = None, fault_seed: int = 0,
                  watchdog: Optional[bool] = None,
                  policy: PolicyLike = None,
-                 placement: Optional[Callable[[str], str]] = None):
+                 placement: Optional[Callable[[str], str]] = None,
+                 server_apply: bool = False):
         from repro.core.initiator import enqueue_problem
         if mode not in ("event", "poll"):
             raise ValueError(f"unknown mode {mode!r}")
@@ -196,7 +197,13 @@ class Simulator:
                                     default_timeout=visibility_timeout,
                                     placement=placement))
         self.ds = DataServer()
-        self.endpoint = ServerEndpoint(self.qs, self.ds)
+        self._now = 0.0
+        # the server is the lease-time authority: the endpoint stamps every
+        # lease with THIS engine's virtual clock (identical values to the
+        # client-supplied now under a single-threaded event loop, so runs
+        # stay bit-identical — but the authority now has one owner)
+        self.endpoint = ServerEndpoint(self.qs, self.ds,
+                                       clock=VirtualClock(lambda: self._now))
         self.port = make_transport(transport, self.endpoint)
         if faults is not None:
             self.port = FaultyTransport(
@@ -226,9 +233,17 @@ class Simulator:
         self.map_flops = problem.flops_per_map()
         self.reduce_flops = problem.flops_per_reduce()
         # per-batch working set: model+opt state+minibatch activations per task
+        self.server_apply = bool(server_apply)
+        if self.server_apply:
+            if self.policy.barrier:
+                raise ValueError("server_apply needs a barrierless policy "
+                                 "(staleness:<s> or local:<k>)")
+            # the synthetic applier mirrors commit_update("blob", model_bytes)
+            self.endpoint.applier = ServerApplier(
+                self.policy, lambda blob, result, v: "blob",
+                model_nbytes=self.model_bytes)
         self._heap: List[Tuple[float, int, Callable]] = []
         self._seq = itertools.count()
-        self._now = 0.0
         self.timeline: List[TimelineEvent] = []
         self.tasks_by_worker: Dict[str, int] = {}
         self.busy: Dict[str, float] = {}
@@ -469,9 +484,23 @@ class Simulator:
                 return
             result = (sess.delta_result(None, self.model_bytes, 0.0) if local
                       else sess.grad_result(None, self.grad_bytes, 0.0))
-            out = sess.finish_update(result)
+            if self.server_apply:
+                # one SubmitUpdate round-trip: the server runs admission,
+                # applies, publishes, acks — commit semantics identical to
+                # the client-applied pair, wire traffic is not (that delta
+                # is what benchmarks/staleness.py measures)
+                done = sess.submit_update(result)
+                # timeline stamps the admission-time version (what the
+                # client-applied path records via ApplyWork.version), so a
+                # server-applied run's SimResult matches the client-applied
+                # one field-for-field — only measured wire bytes differ
+                stale, version = done.stale, done.version - 1
+            else:
+                out = sess.finish_update(result)
+                stale = isinstance(out, TaskDone)
+                version = -1 if stale else out.version
             self.busy[vid] = self.busy.get(vid, 0.0) + (end - now)
-            if isinstance(out, TaskDone):   # refused as stale, discarded
+            if stale:                       # refused, discarded
                 self.stale_discards += 1
                 # the wasted attempt still moved model-down + payload-up
                 self.bytes_sent += self.model_bytes + push_b
@@ -482,9 +511,9 @@ class Simulator:
                 # requeued ticket before this one can re-lease it
                 self._post(self._now, lambda: self._wake(vid))
                 return
-            sess.commit_update("blob", self.model_bytes)
-            self.timeline.append(TimelineEvent(vid, kind, now, end,
-                                               out.version))
+            if not self.server_apply:
+                sess.commit_update("blob", self.model_bytes)
+            self.timeline.append(TimelineEvent(vid, kind, now, end, version))
             self.tasks_by_worker[vid] = self.tasks_by_worker.get(vid, 0) + 1
             self.bytes_sent += self.model_bytes + push_b
             self.done_time = max(self.done_time, end)

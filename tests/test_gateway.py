@@ -53,6 +53,30 @@ def test_socket_run_matches_inprocess_run(server):
     assert out == ref == (N_VERSIONS, N_TASKS)
 
 
+def test_barrierless_policy_over_socket_uses_server_applier():
+    """Under staleness:<s> the gateway hosts a ServerApplier: the socket
+    volunteer commits every update with one SubmitUpdate and never sends a
+    PublishModel or an admission-time FetchModel pair."""
+    s = GatewayServer(_problem(), n_versions=N_VERSIONS, policy="staleness:1")
+    s.start()
+    try:
+        n_updates = s.n_updates
+        assert n_updates == N_VERSIONS * N_MB      # one version per gradient
+        transport = SocketTransport("127.0.0.1", s.port, "thin0")
+        final, tasks = run_volunteer(transport, "thin0", n_updates,
+                                     policy="staleness:1")
+        sent = dict(transport.sent)
+        transport.close()
+        assert final == n_updates
+        assert tasks == n_updates
+        assert sent.get("SubmitUpdate") == n_updates
+        assert "PublishModel" not in sent
+        assert s.endpoint.applier.applied == n_updates
+        assert s.done.is_set()
+    finally:
+        s.close()
+
+
 def test_two_volunteers_share_the_run(server):
     """Cross-client coordination over the socket: pushed Wake/VersionReady
     frames must wake the volunteer blocked on the other one's progress."""

@@ -17,7 +17,7 @@ from repro.core.gateway import run_volunteer
 from repro.core.initiator import enqueue_problem
 from repro.core.queue import QueueServer
 from repro.core.simulator import SyntheticProblem
-from repro.core.tasks import GradResult, MapTask, ReduceTask
+from repro.core.tasks import DeltaResult, GradResult, MapTask, ReduceTask
 from repro.core.transport import (FaultSpec, FaultyTransport,
                                   InProcessTransport, WireTransport)
 
@@ -29,6 +29,8 @@ MESSAGES = [
     P.LeaseReq("initial", "w0", 0.0, timeout=30.0),
     P.Ack("initial", 7),
     P.Nack("map-results:v3", 9, front=False),
+    P.ExtendLease("initial", 4, 12.0),
+    P.ExtendLease("initial", 5, 0.0, timeout=30.0),
     P.PublishResult("map-results:v2", GradResult(2, 5, None, 1024, 0.25, "w1")),
     P.FetchModel(4, nbytes=2048),
     P.PublishModel(5, "v5", nbytes=4096),
@@ -40,6 +42,13 @@ MESSAGES = [
     P.DepthReq("map-results:v0"),
     P.DrainedReq("initial"),
     P.LatestReq(),
+    P.SubmitUpdate("initial", 11,
+                   GradResult(3, 1, None, 512, 0.5, "w4", computed_at=3)),
+    P.SubmitUpdate("initial", 12,
+                   DeltaResult(2, 5, None, 256, 0.1, "w5", n_steps=4,
+                               weight=0.5)),
+    P.UpdateCommitted(7),
+    P.UpdateRejected(6),
     P.Bye("w0"),
     P.LeaseGrant(3, MapTask(1, 0, 1, 2, 8)),
     P.LeaseGrant(4, ReduceTask(1, 0, 1, 16)),

@@ -293,6 +293,57 @@ def _run_script(n_msgs, ops):
     assert q.acked == len(acked)
 
 
+def test_extend_lease_postpones_expiry():
+    """ExtendLease semantics: a heartbeat re-stamps the deadline, so a live
+    consumer's lease survives past the original visibility timeout while an
+    un-renewed one expires on schedule."""
+    qs = QueueServer(default_timeout=1.0)
+    qs.publish("q", "live")
+    qs.publish("q", "dead")
+    t_live, _ = qs.lease("q", "alive", now=0.0)
+    t_dead, _ = qs.lease("q", "gone", now=0.0)
+    assert qs.extend("q", t_live, now=0.9)         # heartbeat at 0.9
+    assert qs.expire_all(1.5) == 1                 # only the silent one
+    q = qs.queues["q"]
+    assert t_live in q._in_flight and t_dead not in q._in_flight
+    assert qs.next_deadline() == 1.9               # renewed deadline is live
+    q.check_invariants()
+    # renewing an expired (requeued) lease loses the race
+    assert not qs.extend("q", t_dead, now=1.6)
+    # ... and an extended deadline itself eventually expires
+    assert qs.expire_all(2.0) == 1
+    assert q.in_flight == 0
+
+
+def test_extend_lease_receipt_check():
+    """A zombie whose lease expired and was re-granted to another consumer
+    must NOT be able to renew (and must learn it lost) — SQS receipt-handle
+    semantics."""
+    qs = QueueServer(default_timeout=1.0)
+    qs.publish("q", "x")
+    tag_a, _ = qs.lease("q", "A", now=0.0)
+    qs.expire_all(2.0)                             # A stalls; lease requeues
+    tag_b, _ = qs.lease("q", "B", now=2.0)
+    assert tag_b == tag_a                          # same message, same tag
+    assert not qs.extend("q", tag_a, now=2.5, consumer="A")   # zombie told no
+    assert qs.extend("q", tag_b, now=2.5, consumer="B")       # holder renews
+    assert qs.queues["q"]._in_flight[tag_b].deadline == 3.5
+    # consumer-blind extend (no receipt) keeps the old permissive behavior
+    assert qs.extend("q", tag_b, now=3.0)
+
+
+def test_extend_lease_with_explicit_timeout_and_snapshot():
+    qs = QueueServer(default_timeout=5.0)
+    qs.publish("q", "x")
+    tag, _ = qs.lease("q", "w0", now=0.0)
+    qs.extend("q", tag, now=1.0, timeout=100.0)
+    fresh = QueueServer()
+    fresh.restore(qs.snapshot())                   # renewal rides the snapshot
+    assert fresh.next_deadline() == 101.0
+    assert fresh.expire_all(50.0) == 0
+    assert fresh.expire_all(102.0) == 1
+
+
 @pytest.mark.parametrize("seed", range(25))
 def test_no_loss_no_double_completion_seeded(seed):
     rng = random.Random(seed)

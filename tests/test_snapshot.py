@@ -1,0 +1,454 @@
+"""Durability: snapshot/restore of queue + data servers, and the gateway's
+crash-recovery pieces (wall-clock lease sweeper, server-side applier).
+
+The contract under test is *transparency*: serializing the full live state
+through real bytes and restoring it — mid-run, same process or fresh one —
+must be invisible to every observer the protocol has (pending FIFO order,
+in-flight deadlines, banked signals, counters, model versions, subscribers).
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import pytest
+
+from repro.core.chaos import (ChaosEvent, ChaosSchedule, federation_census,
+                              metamorphic_check, snapshot_schedule)
+from repro.core.dataserver import DataServer
+from repro.core.gateway import GatewayServer, SocketTransport, run_volunteer
+from repro.core.protocol import decode_message, encode_message
+from repro.core.queue import (Queue, QueueServer, ShardedQueueServer,
+                              VirtualClock, WallClock)
+from repro.core.simulator import Simulator, SyntheticProblem, VolunteerSpec
+from repro.core.tasks import GradResult, MapTask
+
+
+def roundtrip(state):
+    """Snapshot dicts must survive the real wire codec, not just Python."""
+    return decode_message(encode_message(state))
+
+
+# ---------------------------------------------------------------------------
+# Queue / QueueServer
+# ---------------------------------------------------------------------------
+
+def _loaded_server(vt: float = 5.0) -> QueueServer:
+    qs = QueueServer(default_timeout=vt)
+    for i in range(3):
+        qs.publish("tasks", MapTask(0, 0, 0, i, 8))
+    qs.publish("results", GradResult(0, 0, None, 16, 0.5, "w0"))
+    qs.lease("tasks", "w0", now=1.0)              # in-flight, deadline 6.0
+    qs.lease("tasks", "w1", now=2.0, timeout=1.0)  # deadline 3.0
+    qs.nack("tasks", 1)                            # requeued to the front
+    qs.publish("empty-signal", "x")
+    got = qs.lease("empty-signal", "w2", now=0.0)
+    qs.ack("empty-signal", got[0])
+    qs.kick("empty-signal")                        # banks a signal, no waiter
+    return qs
+
+
+def test_queueserver_snapshot_roundtrips_full_state():
+    qs = _loaded_server()
+    before = federation_census(qs)
+    tag_counters = {n: q._next_tag for n, q in qs.queues.items()}
+    fresh = QueueServer()
+    fresh.restore(roundtrip(qs.snapshot()))
+    assert federation_census(fresh) == before
+    for name, q in fresh.queues.items():
+        q.check_invariants()
+        assert q._next_tag == tag_counters[name]   # tags never collide
+    # banked signal survived: the next subscribe fires immediately
+    fired = []
+    fresh.subscribe("empty-signal", "w9", lambda: fired.append(1))
+    assert fired == [1]
+    # in-flight deadlines survived into the restored server's sweep index
+    # (w1's lease was nacked back, so only w0's deadline-6.0 lease remains)
+    assert fresh.next_deadline() == 6.0
+    assert fresh.expire_all(3.5) == 0
+    assert fresh.expire_all(6.5) == 1              # w0's lease expires
+
+
+def test_restore_is_transparent_to_an_interrupted_script():
+    """Running a script straight vs. snapshot+restore at every step must end
+    in identical state — durability cannot perturb semantics."""
+    def script(qs, checkpoint):
+        qs.publish("q", "a")
+        checkpoint(qs)
+        qs.publish("q", "b")
+        tag, _ = qs.lease("q", "w0", now=0.0, timeout=2.0)
+        checkpoint(qs)
+        qs.ack("q", tag)
+        tag2, _ = qs.lease("q", "w0", now=1.0, timeout=2.0)
+        checkpoint(qs)
+        qs.nack("q", tag2)
+        qs.expire_all(10.0)
+        checkpoint(qs)
+        return federation_census(qs)
+
+    plain = script(QueueServer(), lambda qs: None)
+    durable = script(QueueServer(),
+                     lambda qs: qs.restore(roundtrip(qs.snapshot())))
+    assert plain == durable
+
+
+def test_restore_keeps_live_waiters_in_process():
+    qs = QueueServer()
+    qs.declare("q")
+    fired = []
+    qs.subscribe("q", "w0", lambda: fired.append("w0"))
+    qs.restore(roundtrip(qs.snapshot()))
+    assert fired == []                             # not spuriously woken
+    qs.publish("q", "task")
+    assert fired == ["w0"]                         # subscription survived
+
+
+def test_restore_after_crash_drops_waiters_but_keeps_leases():
+    """Fresh-process restore: no live callbacks to adopt; the dead client's
+    lease is still in flight and recoverable by expiry."""
+    qs = _loaded_server()
+    fresh = QueueServer()
+    fresh.restore(roundtrip(qs.snapshot()), waiters_from={})
+    assert all(q.waiters == 0 for q in fresh.queues.values())
+    assert fresh.queues["tasks"].in_flight == 1    # w0 still holds tag 0
+    assert fresh.expire_all(100.0) == 1
+
+
+def test_sharded_snapshot_restores_ring_and_state():
+    fed = ShardedQueueServer(3, default_timeout=7.0)
+    for i in range(40):
+        fed.publish(f"q{i:03d}", i)
+    fed.add_shard()
+    fed.remove_shard(1)                            # burn a shard id
+    fed.lease("q001", "w0", now=0.0)
+    before = federation_census(fed)
+    loads_before = fed.shard_loads()
+    fresh = ShardedQueueServer(1)                  # shard count comes from state
+    fresh.restore(roundtrip(fed.snapshot()))
+    assert federation_census(fresh) == before
+    assert fresh.shard_loads() == loads_before     # identical placement
+    assert fresh._sids == fed._sids                # ids (incl. burned) survive
+    for q in fresh.queues.values():
+        q.check_invariants()
+    # routing agrees after restore: new publishes land on the same shard
+    name = "q-new"
+    assert fresh.shard_of(name) == fed.shard_of(name)
+
+
+def test_snapshot_kind_mismatch_rejected():
+    qs = QueueServer()
+    fed = ShardedQueueServer(2)
+    with pytest.raises(ValueError, match="not a QueueServer"):
+        qs.restore(fed.snapshot())
+    with pytest.raises(ValueError, match="not a ShardedQueueServer"):
+        fed.restore(qs.snapshot())
+    with pytest.raises(ValueError, match="not a DataServer"):
+        DataServer().restore(qs.snapshot())
+
+
+# ---------------------------------------------------------------------------
+# DataServer: snapshot x gc_models x watch_version
+# ---------------------------------------------------------------------------
+
+def test_dataserver_snapshot_roundtrip():
+    ds = DataServer()
+    ds.put("corpus", "abc", nbytes=3)
+    for v in range(4):
+        ds.publish_model(v, f"m{v}", nbytes=10)
+    fresh = DataServer()
+    fresh.restore(roundtrip(ds.snapshot()))
+    assert fresh.latest_version == 3
+    assert fresh.get("corpus") == "abc"
+    assert fresh.get_model(3) == "m3"
+    assert fresh.bytes_written == ds.bytes_written
+    # publication continues monotonically from the restored cursor
+    assert fresh.publish_model(4, "m4")
+    assert not fresh.publish_model(4, "dup")
+
+
+def test_gcd_version_does_not_resurrect_on_restore():
+    ds = DataServer()
+    for v in range(5):
+        ds.publish_model(v, f"m{v}")
+    ds.gc_models(keep_last=2)
+    assert ds.get_model(1) is None
+    fresh = DataServer()
+    fresh.restore(roundtrip(ds.snapshot()))
+    assert fresh.get_model(1) is None              # stays collected
+    assert fresh.get_model(2) is None
+    assert fresh.get_model(4) == "m4"
+    assert fresh.latest_version == 4
+
+
+def test_pending_watch_survives_gc():
+    ds = DataServer()
+    ds.publish_model(0, "m0")
+    fired = []
+    ds.watch_version(3, lambda: fired.append(3))
+    for v in (1, 2):
+        ds.publish_model(v, f"m{v}")
+        ds.gc_models(keep_last=1)                  # GC between commits
+    assert fired == []
+    ds.publish_model(3, "m3")
+    assert fired == [3]                            # GC never ate the watch
+
+
+def test_pending_watch_survives_inprocess_restore():
+    ds = DataServer()
+    ds.publish_model(0, "m0")
+    fired = []
+    ds.watch_version(2, lambda: fired.append("future"))
+    ds.restore(roundtrip(ds.snapshot()))
+    assert fired == []                             # still pending
+    ds.publish_model(1, "m1")
+    ds.publish_model(2, "m2")
+    assert fired == ["future"]
+
+
+def test_watch_satisfied_by_restore_fires_immediately():
+    """Restoring a FURTHER-ahead snapshot commits versions the watcher was
+    waiting for — the watch must fire at restore, like watch-after-publish."""
+    ahead = DataServer()
+    for v in range(4):
+        ahead.publish_model(v, f"m{v}")
+    snap = roundtrip(ahead.snapshot())
+    ds = DataServer()
+    ds.publish_model(0, "m0")
+    fired = []
+    ds.watch_version(2, lambda: fired.append(2))
+    ds.watch_version(9, lambda: fired.append(9))
+    ds.restore(snap)
+    assert fired == [2]                            # satisfied by restore
+    assert 9 in ds._watchers                       # future watch still pending
+
+
+def test_gc_watch_snapshot_combined():
+    """The satellite scenario end to end: gc, snapshot, restore, pending
+    watch — a GC'd version stays dead, the watch stays live."""
+    ds = DataServer()
+    for v in range(6):
+        ds.publish_model(v, f"m{v}")
+    ds.gc_models(keep_last=2)
+    fired = []
+    ds.watch_version(7, lambda: fired.append(7))
+    ds.restore(roundtrip(ds.snapshot()))
+    assert ds.get_model(3) is None                 # no resurrection
+    assert fired == []
+    ds.publish_model(6, "m6")
+    ds.publish_model(7, "m7")
+    assert fired == [7]                            # watch survived both
+
+
+# ---------------------------------------------------------------------------
+# chaos: snapshot/restore mid-run is semantics-invisible
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["event", "poll"])
+def test_metamorphic_with_snapshot_roundtrips(mode):
+    schedule = snapshot_schedule(1, leavable=["x00", "x01"])
+    single, sharded = metamorphic_check(schedule, mode=mode, n_shards=3)
+    assert single == sharded
+    assert single.final_version == 5
+
+
+def test_scripted_snapshot_between_every_fault():
+    """Interleave a snapshot round-trip with every other fault kind."""
+    events = [ChaosEvent(1.0, "snapshot_restore"),
+              ChaosEvent(2.0, "add_shard"),
+              ChaosEvent(2.5, "snapshot_restore"),
+              ChaosEvent(3.0, "leave", vid="x00"),
+              ChaosEvent(3.5, "snapshot_restore"),
+              ChaosEvent(4.0, "remove_shard", shard=0),
+              ChaosEvent(4.5, "snapshot_restore")]
+    schedule = ChaosSchedule(events)
+    single, sharded = metamorphic_check(schedule, mode="event", n_shards=2)
+    assert single == sharded
+
+
+# ---------------------------------------------------------------------------
+# server-side applier (Simulator): same run, fewer wire bytes
+# ---------------------------------------------------------------------------
+
+def _sim(policy: str, server_apply: bool) -> Simulator:
+    problem = SyntheticProblem(n_versions=4, n_mb=6, model_bytes=1.0e6,
+                               grad_bytes=1.0e5)
+    specs = [VolunteerSpec(f"v{i}", speed=1.0 + 0.1 * i) for i in range(3)]
+    return Simulator(problem, specs, transport="wire", policy=policy,
+                     server_apply=server_apply)
+
+
+@pytest.mark.parametrize("policy", ["staleness:2", "local:4"])
+def test_server_apply_is_semantics_invisible(policy):
+    """Server-applied commits must produce the IDENTICAL SimResult — same
+    timeline, same makespan, same task counts — except measured wire bytes,
+    which must DROP (no admission fetch, no model push)."""
+    client = _sim(policy, server_apply=False).run()
+    server = _sim(policy, server_apply=True).run()
+    assert server.wire_bytes < client.wire_bytes
+    import dataclasses
+    a = dataclasses.asdict(client)
+    b = dataclasses.asdict(server)
+    a.pop("wire_bytes"), b.pop("wire_bytes")
+    assert a == b
+
+
+def test_server_apply_rejects_barrier_policy():
+    with pytest.raises(ValueError, match="barrierless"):
+        _sim("sync", server_apply=True)
+
+
+def test_server_applier_counts():
+    sim = _sim("staleness:2", server_apply=True)
+    res = sim.run()
+    applier = sim.endpoint.applier
+    assert applier.applied == res.final_version == 24
+    assert applier.rejected == res.stale_discards
+
+
+# ---------------------------------------------------------------------------
+# gateway: wall-clock sweeper + snapshot file round-trip (in process)
+# ---------------------------------------------------------------------------
+
+def test_wall_clock_sweeper_requeues_dead_volunteers_lease():
+    """A socket client that leases and then vanishes (no Bye, no ack) must
+    have its ticket requeued by the sweeper on REAL time, and a survivor
+    finishes the run."""
+    problem = SyntheticProblem(n_versions=2, n_mb=2)
+    server = GatewayServer(problem, n_versions=2, visibility_timeout=0.4,
+                           sweep_interval=0.02)
+    server.start()
+    try:
+        dead = SocketTransport("127.0.0.1", server.port, "dead")
+        from repro.core.protocol import LeaseReq
+        grant = dead.call(LeaseReq("initial", "dead", 0.0))
+        assert hasattr(grant, "tag")
+        dead.sock.close()                          # kill -9 stand-in
+        # the sweeper — REAL time, no engine driving it — must requeue
+        deadline = time.monotonic() + 5.0
+        while server.qs.total_requeued < 1:
+            assert time.monotonic() < deadline, "sweeper never expired lease"
+            time.sleep(0.02)
+        survivor = SocketTransport("127.0.0.1", server.port, "live")
+        final, tasks = run_volunteer(survivor, "live", 2)
+        survivor.close()
+        assert final == 2
+        assert tasks == 2 * (2 + 1)                # incl. the recovered task
+    finally:
+        server.close()
+
+
+def test_small_fleet_survives_dead_lease_without_deadlock():
+    """Regression: 2 live volunteers + 1 dead lease used to deadlock — one
+    survivor parked on the reduce barrier, the other version-blocked on a
+    next-round map, and the expiry-recovered map with no idle taker. The
+    heartbeat (ExtendLease) + step-aside (Nack to back, take the front task)
+    client rules must keep the run live."""
+    from repro.core.protocol import LeaseReq
+    problem = SyntheticProblem(n_versions=3, n_mb=4)
+    server = GatewayServer(problem, n_versions=3, visibility_timeout=0.6,
+                           sweep_interval=0.02)
+    server.start()
+    try:
+        dead = SocketTransport("127.0.0.1", server.port, "dead")
+        dead.call(LeaseReq("initial", "dead", 0.0))    # lease, then vanish
+        dead.sock.close()
+        results = {}
+
+        def survive(vid):
+            tr = SocketTransport("127.0.0.1", server.port, vid)
+            results[vid] = run_volunteer(tr, vid, 3, heartbeat_every=0.2)
+            tr.close()
+
+        threads = [threading.Thread(target=survive, args=(f"s{i}",),
+                                    daemon=True) for i in range(2)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=30)
+            assert not t.is_alive(), "survivor deadlocked"
+        assert [results[v][0] for v in sorted(results)] == [3, 3]
+        assert sum(r[1] for r in results.values()) >= 3 * (4 + 1)
+    finally:
+        server.close()
+
+
+def test_gateway_snapshot_file_restore(tmp_path):
+    """Mid-run file snapshot -> fresh GatewayServer boots from it and a
+    volunteer completes the remaining work."""
+    snap = str(tmp_path / "gw.snap")
+    problem = SyntheticProblem(n_versions=3, n_mb=3)
+    server = GatewayServer(problem, n_versions=3, snapshot_path=snap,
+                           snapshot_every=1)
+    server.start()
+    # drive PART of the run, then stop mid-flight (results published, more
+    # of version 0 still pending — 2 of the 3 maps, no reduce yet)
+    t = SocketTransport("127.0.0.1", server.port, "gw0")
+    from repro.core.protocol import MapWork, VolunteerSession
+    sess = VolunteerSession("gw0", t)
+    for _ in range(2):
+        sess.lease(0.0)
+        out = sess.advance(0.0)
+        assert isinstance(out, MapWork)
+        sess.finish_map(None, 0, 0.0)
+    t.close()
+    assert server.snapshots_written > 0
+    server.close()
+    # boot a FRESH server from the snapshot; a volunteer finishes the run
+    revived = GatewayServer(problem, n_versions=3, restore_from=snap,
+                            visibility_timeout=0.4, sweep_interval=0.02)
+    revived.start()
+    try:
+        assert revived.ds.latest_version < 3       # genuinely mid-run
+        t2 = SocketTransport("127.0.0.1", revived.port, "gw1")
+        final, _ = run_volunteer(t2, "gw1", 3)
+        t2.close()
+        assert final == 3
+        assert revived.done.is_set()
+    finally:
+        revived.close()
+
+
+def test_gateway_snapshot_skips_readonly_requests(tmp_path):
+    snap = str(tmp_path / "gw.snap")
+    problem = SyntheticProblem(n_versions=2, n_mb=2)
+    server = GatewayServer(problem, n_versions=2, snapshot_path=snap,
+                           snapshot_every=1)
+    from repro.core.protocol import DepthReq, LatestReq
+    with server._lock:
+        server.endpoint.handle(LatestReq())
+        server.endpoint.handle(DepthReq("initial"))
+        server._maybe_snapshot(LatestReq())
+        server._maybe_snapshot(DepthReq("initial"))
+    assert server.snapshots_written == 0           # reads are not durable ops
+    server.close()
+
+
+def test_watch_version_dedup_per_consumer():
+    """A timed-wait client re-subscribes its version watch every wakeup; the
+    endpoint must dedupe per (consumer, version) so the watcher list — and
+    the VersionReady frames — do not grow with wait duration."""
+    from repro.core.protocol import (Ok, ServerEndpoint, VersionReady,
+                                     WatchVersion)
+    qs, ds = QueueServer(), DataServer()
+    ds.publish_model(0, "m0")
+    delivered = []
+    ep = ServerEndpoint(qs, ds, lambda c, m: delivered.append((c, m)))
+    assert ep.handle(WatchVersion(1, "w0")) == Ok(True)
+    for _ in range(5):                             # defensive re-subscribes
+        assert ep.handle(WatchVersion(1, "w0")) == Ok(False)
+    ep.handle(WatchVersion(1, "w1"))               # another consumer is fine
+    ds.publish_model(1, "m1")
+    assert delivered == [("w0", VersionReady(1)), ("w1", VersionReady(1))]
+    # the registration is one-shot: after firing, a re-watch works again
+    assert ep.handle(WatchVersion(2, "w0")) == Ok(True)
+
+
+def test_lease_clock_abstraction():
+    wall = WallClock()
+    a = wall.now()
+    assert wall.now() >= a
+    ticks = [5.0]
+    virt = VirtualClock(lambda: ticks[0])
+    assert virt.now() == 5.0
+    ticks[0] = 9.0
+    assert virt.now() == 9.0                       # reads live, never stale
