@@ -97,16 +97,17 @@ def check_bench_tables(text: str, *, write: bool = False) -> int:
 
 
 def check_protocol_doc() -> int:
-    from repro.core import protocol as P
-    from repro.core import tasks as T
-    doc = PROTOCOL_DOC.read_text()
-    names = [c.__name__ for c in (*P.REQUEST_TYPES, *P.REPLY_TYPES,
-                                  *P.NOTIFICATION_TYPES, *T.WIRE_TYPES)]
-    missing = [n for n in names if f"`{n}`" not in doc]
-    if missing:
-        print(f"DOCS-CI FAIL: docs/protocol.md does not document: {missing}")
+    # delegated to the analysis subsystem's SCHEMA-DOC check — one
+    # implementation serves both this leg and `python -m repro.analysis`,
+    # so the two can't drift
+    from repro.analysis import schema
+    violations = schema.check_doc(PROTOCOL_DOC)
+    if violations:
+        for v in violations:
+            print(f"DOCS-CI FAIL: {v}")
         return 1
-    print(f"# docs/protocol.md covers all {len(names)} wire types")
+    print(f"# docs/protocol.md covers all {len(schema.registered_types())} "
+          f"wire types")
     return 0
 
 

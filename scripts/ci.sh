@@ -6,6 +6,24 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# static analysis first — cheapest leg, fails fastest (ISSUE 6). ruff and
+# mypy are optional extras (requirements-dev.txt): permissive baselines in
+# pyproject.toml, skipped when not installed, like hypothesis.
+if command -v ruff >/dev/null 2>&1; then
+  ruff check src tests benchmarks scripts
+else
+  echo "# ruff not installed — skipping (pip install -r requirements-dev.txt)"
+fi
+if command -v mypy >/dev/null 2>&1; then
+  mypy src/repro
+else
+  echo "# mypy not installed — skipping (pip install -r requirements-dev.txt)"
+fi
+# the repo-native pass is NOT optional: layering linter, lock-order race
+# detector, wire-schema exhaustiveness checker (strict = stale ignores fail)
+python -m repro.analysis --strict
+
 python -m pytest -x -q "$@"
 
 # smoke the volunteer-scaling benchmark (1k volunteers, ~5 s): proves the
@@ -28,6 +46,13 @@ python -m repro.core.chaos --seeds 5
 # uninterrupted final version; (4) a barrierless policy commits through the
 # server-side applier — the thin client sends zero PublishModel frames
 python -m repro.core.gateway --smoke
+
+# the same 4 legs under runtime lock/invariant instrumentation (ISSUE 6):
+# MonitoredLocks record actual acquisition orders across every gateway
+# process (the env var rides into the spawned servers/volunteers) and the
+# run fails on any LOCK-ORDER inversion, LOCK-BLOCK (blocking call under
+# the dispatch lock), or PARKED-HOLDER (PR 5's step-aside deadlock shape)
+ANALYSIS_INSTRUMENT=1 python -m repro.core.gateway --smoke
 
 # elastic rebalance smoke: every shard join/leave migrates <= 1.5/K of queue
 # names, conserves all live state, and keeps per-queue invariants

@@ -1,0 +1,21 @@
+"""repro.analysis — the repo-native static-analysis layer.
+
+Three passes, each runnable standalone or together via
+``python -m repro.analysis`` (CI runs ``--strict``, which also fails on
+stale ignore comments):
+
+- ``rules``  — layering & invariant linter over ``src/repro/core/``
+  (REPRO-TIME / REPRO-LAYER / REPRO-SESSION / REPRO-EXCEPT).
+- ``locks``  — lock-order race detector: static acquisition-graph cycle
+  check, plus a runtime half (``repro.analysis.runtime``) active during
+  ``ANALYSIS_INSTRUMENT=1 gateway --smoke`` (LOCK-ORDER / LOCK-SELF /
+  LOCK-BLOCK / PARKED-HOLDER).
+- ``schema`` — wire-schema exhaustiveness checker (SCHEMA-*).
+
+Rule catalog and how-to: docs/analysis.md. Findings can be excused in
+place with ``# analysis: ignore[RULE-ID]``.
+"""
+from repro.analysis.base import Violation
+from repro.analysis.runtime import Analysis, MonitoredLock
+
+__all__ = ["Violation", "Analysis", "MonitoredLock"]

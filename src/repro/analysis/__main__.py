@@ -1,0 +1,71 @@
+"""Driver: ``python -m repro.analysis [--strict] [--only PASS ...]``.
+
+Runs the rules / locks / schema passes (all three by default), prints every
+violation as ``path:line: [RULE-ID] message``, and exits non-zero if any
+fired — the CI contract. ``--strict`` additionally fails on stale
+``# analysis: ignore[...]`` comments so escapes can't outlive the code they
+excused. ``--paths`` / ``--doc`` point a pass at other files (used by the
+fixture tests to prove each rule fires).
+"""
+from __future__ import annotations
+
+import argparse
+import importlib.util
+import pathlib
+import sys
+from typing import List
+
+from repro.analysis import locks, rules, schema
+from repro.analysis.base import Violation
+
+
+def _core_paths() -> List[pathlib.Path]:
+    spec = importlib.util.find_spec("repro.core")
+    core = pathlib.Path(spec.origin).parent
+    return sorted(core.glob("*.py"))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repo-native static analysis: layering linter, "
+                    "lock-order race detector, wire-schema checker")
+    ap.add_argument("--strict", action="store_true",
+                    help="also fail on stale ignore comments")
+    ap.add_argument("--only", action="append",
+                    choices=["rules", "locks", "schema"],
+                    help="run only this pass (repeatable; default: all)")
+    ap.add_argument("--paths", nargs="+", default=None,
+                    help="files for the rules/locks passes "
+                         "(default: src/repro/core/*.py)")
+    ap.add_argument("--doc", default=None,
+                    help="protocol doc for the schema pass "
+                         "(default: docs/protocol.md)")
+    args = ap.parse_args(argv)
+    only = set(args.only or ["rules", "locks", "schema"])
+
+    violations: List[Violation] = []
+    if "rules" in only:
+        paths = args.paths or _core_paths()
+        vs, stale = rules.check_paths(paths)
+        violations.extend(vs)
+        if args.strict:
+            violations.extend(stale)
+    if "locks" in only:
+        violations.extend(locks.check(args.paths or locks.default_paths()))
+    if "schema" in only:
+        violations.extend(schema.run(doc_path=args.doc))
+
+    for v in violations:
+        print(v)
+    names = "+".join(sorted(only))
+    if violations:
+        print(f"# repro.analysis [{names}]: {len(violations)} violation(s)",
+              flush=True)
+        return 1
+    print(f"# repro.analysis [{names}]: clean", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -73,10 +73,11 @@ from repro.checkpoint import serialize
 from repro.core.aggregation import PolicyLike, make_policy
 from repro.core.dataserver import DataServer
 from repro.core.initiator import enqueue_problem
-from repro.core.protocol import (Blocked, Hello, LocalWork, MapWork, NoTask,
-                                 NOTIFICATION_TYPES, ReduceWork, ServerApplier,
-                                 ServerEndpoint, TaskDone, VolunteerSession,
-                                 Wake, decode_message, encode_message)
+from repro.core.protocol import (Blocked, Hello, KickQueue, LocalWork, MapWork,
+                                 NoTask, NOTIFICATION_TYPES, ReduceWork,
+                                 ServerApplier, ServerEndpoint, TaskDone,
+                                 VolunteerSession, Wake, decode_message,
+                                 encode_message)
 from repro.core.queue import QueueServer, ShardedQueueServer, WallClock
 from repro.core.simulator import SyntheticProblem
 from repro.core.transport import InProcessTransport, Transport
@@ -86,6 +87,33 @@ _LEN = struct.Struct(">I")
 # requests that cannot change durable state — skipped by the snapshot trigger
 _READONLY = ("LatestReq", "DepthReq", "DrainedReq", "FetchModel", "Hello")
 
+# the module's single wall-time authority: connect deadlines, smoke-leg
+# timers, and compute pacing all read the same LeaseClock the server stamps
+# leases with (REPRO-TIME)
+_CLOCK = WallClock()
+
+
+def _monitor():
+    """The runtime lock/invariant monitor, iff ``ANALYSIS_INSTRUMENT=1``
+    (see ``repro.analysis.runtime``); None — zero overhead — otherwise.
+    The env var rides ``os.environ.copy()`` into every spawned server and
+    volunteer subprocess, so one instrumented ``--smoke`` covers the whole
+    topology."""
+    if not os.environ.get("ANALYSIS_INSTRUMENT"):
+        return None
+    from repro.analysis.runtime import Analysis
+    return Analysis.instrument()
+
+
+def _make_lock(name: str, *, guard: bool = False):
+    """Lock seam: a plain ``threading.Lock`` normally, a ``MonitoredLock``
+    under instrumentation. ``guard=True`` marks a dispatch lock no blocking
+    call may run under (LOCK-BLOCK)."""
+    mon = _monitor()
+    if mon is not None:
+        return mon.make_lock(name, guard=guard)
+    return threading.Lock()
+
 
 def _send_frame(sock: socket.socket, msg) -> int:
     data = encode_message(msg)
@@ -94,6 +122,9 @@ def _send_frame(sock: socket.socket, msg) -> int:
 
 
 def _recv_exact(sock: socket.socket, n: int) -> Optional[bytes]:
+    mon = _monitor()
+    if mon is not None:
+        mon.note_blocking("socket-recv")
     buf = b""
     while len(buf) < n:
         try:
@@ -176,7 +207,13 @@ class GatewayServer:
         self.snapshot_every = snapshot_every
         self.snapshots_written = 0
         self._ops_since_snap = 0
-        self._lock = threading.Lock()            # serializes ALL dispatch + writes
+        # dispatch lock (guard: no blocking call may run under it) + a
+        # separate writer lock so snapshot fsyncs serialize among themselves
+        # without ever stalling dispatch
+        self._lock = _make_lock("gateway._lock", guard=True)
+        self._snap_lock = _make_lock("gateway._snap_lock")
+        self._snap_seq = 0                       # encode order (under _lock)
+        self._snap_written = 0                   # last seq on disk (_snap_lock)
         self._conns: Dict[str, socket.socket] = {}
         self.done = threading.Event()
         self._closed = threading.Event()
@@ -189,22 +226,45 @@ class GatewayServer:
         self.port = self._sock.getsockname()[1]
 
     # -- durability ------------------------------------------------------------
-    def snapshot(self) -> int:
-        """Write the full queue+data state atomically. The blob rides the
-        PROTOCOL wire codec (``encode_message``), not raw ``serialize.dumps``,
-        because queue bodies are wire dataclasses (``MapTask`` et al.) that
-        serialize by registered name. Returns bytes written. Caller must hold
-        (or not need) the dispatch lock."""
+    def _encode_snapshot(self) -> Tuple[int, bytes]:
+        """Serialize the full queue+data state (CPU only — caller holds the
+        dispatch lock). The blob rides the PROTOCOL wire codec
+        (``encode_message``), not raw ``serialize.dumps``, because queue
+        bodies are wire dataclasses (``MapTask`` et al.) that serialize by
+        registered name. Returns (seq, bytes): ``seq`` orders this state
+        against other encodes so a slow writer can never clobber a newer
+        snapshot with an older one."""
         assert self.snapshot_path is not None
         state = {"gateway": {"qs": self.qs.snapshot(),
                              "ds": self.ds.snapshot(),
                              "n_updates": self.n_updates,
                              "policy": self.policy.spec}}
-        n = serialize.atomic_write(
-            self.snapshot_path,
-            encode_message(state, codec=serialize.DEFAULT_CODEC))
-        self.snapshots_written += 1
-        return n
+        self._snap_seq += 1
+        return self._snap_seq, encode_message(state,
+                                              codec=serialize.DEFAULT_CODEC)
+
+    def _write_snapshot(self, seq: int, data: bytes) -> int:
+        """Atomic-write an encoded snapshot (tmp + fsync + rename) — called
+        with the dispatch lock RELEASED: the fsync is the blocking call that
+        must never stall dispatch (LOCK-BLOCK invariant). Returns bytes
+        written, 0 if a newer snapshot already reached disk."""
+        with self._snap_lock:
+            if seq <= self._snap_written:
+                return 0
+            mon = _monitor()
+            if mon is not None:
+                mon.note_blocking("snapshot-fsync")
+            n = serialize.atomic_write(self.snapshot_path, data)
+            self._snap_written = seq
+            self.snapshots_written += 1
+            return n
+
+    def snapshot(self) -> int:
+        """Write the full queue+data state atomically; returns bytes
+        written. Takes the dispatch lock itself — call it unlocked."""
+        with self._lock:
+            seq, data = self._encode_snapshot()
+        return self._write_snapshot(seq, data)
 
     def restore(self, path: str) -> None:
         state = decode_message(serialize.read_bytes(path))["gateway"]
@@ -230,15 +290,19 @@ class GatewayServer:
         self.qs.restore(state["qs"])
         self.ds.restore(state["ds"])
 
-    def _maybe_snapshot(self, msg) -> None:
+    def _maybe_snapshot(self, msg) -> Optional[Tuple[int, bytes]]:
+        """Called under the dispatch lock. When a snapshot is due, ENCODES
+        the state (pure CPU) and returns the pending ``(seq, bytes)`` for
+        the caller to write after releasing the lock; None otherwise."""
         if self.snapshot_every <= 0 or self.snapshot_path is None:
-            return
+            return None
         if type(msg).__name__ in _READONLY:
-            return
+            return None
         self._ops_since_snap += 1
-        if self._ops_since_snap >= self.snapshot_every:
-            self._ops_since_snap = 0
-            self.snapshot()
+        if self._ops_since_snap < self.snapshot_every:
+            return None
+        self._ops_since_snap = 0
+        return self._encode_snapshot()
 
     # -- lease sweeper ---------------------------------------------------------
     def _sweep_loop(self) -> None:
@@ -247,13 +311,18 @@ class GatewayServer:
         requeue notifications push Wake frames to waiting volunteers). This
         is the clock owner the in-process engines emulate with virtual time."""
         while not self._closed.is_set():
+            pending = None
             with self._lock:
                 now = self.clock.now()
                 expired = self.qs.expire_all(now)
                 if expired and self.snapshot_every > 0 \
                         and self.snapshot_path is not None:
-                    self.snapshot()          # expiry is a durable state change
+                    # expiry is a durable state change; encode under the
+                    # lock, fsync after releasing it
+                    pending = self._encode_snapshot()
                 dl = self.qs.next_deadline()
+            if pending is not None:
+                self._write_snapshot(*pending)
             wait = self.sweep_interval if dl is None else \
                 max(0.0, min(dl - self.clock.now(), self.sweep_interval))
             self._closed.wait(wait if wait > 0 else 0.001)
@@ -281,8 +350,10 @@ class GatewayServer:
         if not delivered and isinstance(msg, Wake):
             # a queue wake is one-shot: consumed by an unreachable consumer,
             # the event would be lost to everyone. Hand it to the next waiter
-            # (or bank it), like the engines' dead-volunteer kick path.
-            self.qs.kick(msg.queue)
+            # (or bank it), like the engines' dead-volunteer kick path —
+            # through the endpoint, the same move a live volunteer's
+            # KickQueue request makes (REPRO-LAYER).
+            self.endpoint.handle(KickQueue(msg.queue))
 
     def _serve_conn(self, conn: socket.socket) -> None:
         consumer = None
@@ -297,9 +368,11 @@ class GatewayServer:
                         self._conns[consumer] = conn
                     reply = self.endpoint.handle(msg)
                     _send_frame(conn, reply)
-                    self._maybe_snapshot(msg)
+                    pending = self._maybe_snapshot(msg)
                     if self.ds.latest_version >= self.n_updates:
                         self.done.set()
+                if pending is not None:
+                    self._write_snapshot(*pending)
         finally:
             with self._lock:
                 if consumer is not None and self._conns.get(consumer) is conn:
@@ -309,7 +382,7 @@ class GatewayServer:
                     # events other volunteers need. Its LEASES stay — that
                     # recovery is deliberately the sweeper's (it may
                     # reconnect and heartbeat; only real death expires them).
-                    self.qs.unsubscribe(consumer)
+                    self.endpoint.disconnect(consumer)
             conn.close()
 
     def serve_forever(self) -> None:
@@ -344,7 +417,7 @@ class SocketTransport(Transport):
 
     def __init__(self, host: str, port: int, consumer: str,
                  connect_timeout: float = 10.0):
-        deadline = time.monotonic() + connect_timeout
+        deadline = _CLOCK.now() + connect_timeout
         last_err = None
         while True:                      # the server may still be binding
             try:
@@ -355,7 +428,7 @@ class SocketTransport(Transport):
                 break
             except OSError as e:
                 last_err = e
-                if time.monotonic() >= deadline:
+                if _CLOCK.now() >= deadline:
                     raise ConnectionError(
                         f"gateway at {host}:{port} unreachable: {last_err}")
                 time.sleep(0.05)
@@ -421,9 +494,13 @@ class SocketTransport(Transport):
 # ---------------------------------------------------------------------------
 
 def _wait(transport: Transport, inbox: Deque,
-          timeout: Optional[float] = None) -> bool:
+          timeout: Optional[float] = None, *, holding: bool = False) -> bool:
     """Wait for the next notification. Returns False on a timed-out wait
-    (the caller should heartbeat its lease and re-check state)."""
+    (the caller should heartbeat its lease and re-check state). ``holding``
+    says whether the caller still holds a leased ticket — an UNTIMED wait
+    while holding is the PARKED-HOLDER invariant the runtime monitor checks
+    (PR 5's step-aside deadlock: if that ticket is the last progressable
+    task, nothing can ever wake the parked holder)."""
     if inbox:
         inbox.popleft()
         return True
@@ -432,7 +509,11 @@ def _wait(transport: Transport, inbox: Deque,
         raise RuntimeError(
             "volunteer blocked on a transport that cannot wait — with no "
             "other actors this is a protocol deadlock")
-    if timeout is not None and getattr(transport, "timed_waits", False):
+    timed = timeout is not None and getattr(transport, "timed_waits", False)
+    mon = _monitor()
+    if mon is not None:
+        mon.note_park("volunteer-wait", holding=holding, timed=timed)
+    if timed:
         return waiter(timeout) is not None
     waiter()
     return True
@@ -477,9 +558,9 @@ def run_volunteer(transport: Transport, vid: str, n_updates: int, *,
         # lease between them — a LIVE volunteer must keep its ticket through
         # a compute longer than the visibility timeout (only kill -9 stops
         # the renewals, which is exactly when the sweeper SHOULD requeue)
-        end = time.monotonic() + task_delay
+        end = _CLOCK.now() + task_delay
         while True:
-            rem = end - time.monotonic()
+            rem = end - _CLOCK.now()
             if rem <= 0:
                 return
             time.sleep(min(rem, heartbeat_every))
@@ -499,7 +580,8 @@ def run_volunteer(transport: Transport, vid: str, n_updates: int, *,
         out = sess.advance(0.0)
         if isinstance(out, Blocked):
             sess.subscribe(out)
-            woke = _wait(transport, inbox, heartbeat_every)
+            woke = _wait(transport, inbox, heartbeat_every,
+                         holding=sess.task is not None)
             # renew on EVERY wakeup, not just timeouts: a dense stream of
             # (spurious) wakes must not starve the renewal of a held lease
             sess.heartbeat()
@@ -612,8 +694,8 @@ def _serve(args) -> int:
     # linger until connected volunteers finish their goodbyes (Bye + close);
     # generous, because a volunteer parked in a timed wait notices the end
     # of the run on its next wakeup, not instantly
-    deadline = time.monotonic() + 20.0
-    while server._conns and time.monotonic() < deadline:
+    deadline = _CLOCK.now() + 20.0
+    while server._conns and _CLOCK.now() < deadline:
         time.sleep(0.02)
     ok = server.ds.latest_version >= server.n_updates
     print(f"gateway: final_version={server.ds.latest_version} "
@@ -648,9 +730,9 @@ def _spawn_server(args, port_file: str, *, port: int = 0,
 
 def _wait_port(port_file: str, proc: subprocess.Popen,
                timeout: float = 20.0) -> int:
-    deadline = time.monotonic() + timeout
+    deadline = _CLOCK.now() + timeout
     while not os.path.exists(port_file):
-        if time.monotonic() > deadline or proc.poll() is not None:
+        if _CLOCK.now() > deadline or proc.poll() is not None:
             raise RuntimeError("gateway server did not come up")
         time.sleep(0.05)
     with open(port_file) as f:
@@ -713,14 +795,14 @@ def _smoke_lease_sweeper(args) -> None:
             from repro.core.protocol import DepthReq
             from repro.core.tasks import INITIAL_QUEUE
             monitor = SocketTransport("127.0.0.1", port, "monitor")
-            deadline = time.monotonic() + 30.0
+            deadline = _CLOCK.now() + 30.0
             while monitor.call(DepthReq(INITIAL_QUEUE)).value >= n_tasks:
-                assert time.monotonic() < deadline, "victim never leased"
+                assert _CLOCK.now() < deadline, "victim never leased"
                 time.sleep(0.05)
             monitor.close()
             victim.send_signal(signal.SIGKILL)
             victim.wait(timeout=10)
-            t0 = time.monotonic()
+            t0 = _CLOCK.now()
             results: Dict[str, Tuple[int, int]] = {}
 
             def survive(vid: str) -> None:
@@ -735,7 +817,7 @@ def _smoke_lease_sweeper(args) -> None:
             for th in threads:
                 th.join(timeout=60)
                 assert not th.is_alive(), "survivor deadlocked"
-            wall = time.monotonic() - t0
+            wall = _CLOCK.now() - t0
             rc = proc.wait(timeout=15)
         finally:
             for p in (victim, proc):
@@ -873,10 +955,17 @@ def main(argv=None) -> int:
     ap.add_argument("--timeout", type=float, default=60.0)
     args = ap.parse_args(argv)
     if args.serve:
-        return _serve(args)
-    if args.volunteer:
-        return _volunteer(args)
-    return _smoke(args)
+        rc = _serve(args)
+    elif args.volunteer:
+        rc = _volunteer(args)
+    else:
+        rc = _smoke(args)
+    mon = _monitor()
+    if mon is not None:
+        # instrumented runs fail on any recorded lock/invariant violation,
+        # even if the protocol run itself succeeded
+        rc = max(rc, mon.report())
+    return rc
 
 
 if __name__ == "__main__":

@@ -421,6 +421,15 @@ class ServerEndpoint:
     def set_notify(self, notify: Callable[[str, Any], None]) -> None:
         self._notify = notify
 
+    def disconnect(self, consumer: str) -> int:
+        """Server-side cleanup for a consumer whose CONNECTION died (not a
+        ``Bye``: that is the volunteer leaving voluntarily, and it also
+        requeues held leases). Drops the consumer's queue waiters so they
+        stop consuming one-shot wakes nobody can deliver; leases stay —
+        lease recovery is deliberately the sweeper's (the volunteer may
+        reconnect and heartbeat; only real death expires them)."""
+        return self.qs.unsubscribe(consumer)
+
     def now(self, client_now: float = 0.0) -> float:
         """Lease-authority time: the installed clock, else the client's."""
         return client_now if self.clock is None else self.clock.now()

@@ -1,0 +1,15 @@
+"""Escape-hatch fixture: every violation here carries a rule-scoped
+``# analysis: ignore[...]`` comment, so the file is clean — including under
+--strict (no stale ignores)."""
+import time
+
+
+def profiling_probe() -> float:
+    # this module measures the host, not lease time
+    return time.perf_counter()               # analysis: ignore[REPRO-TIME]
+
+
+def stamp() -> float:
+    # a standalone ignore comment covers the following line
+    # analysis: ignore[REPRO-TIME]
+    return time.monotonic()

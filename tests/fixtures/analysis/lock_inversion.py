@@ -1,0 +1,22 @@
+"""LOCK-ORDER fixture: two locks taken in both orders on different code
+paths — the classic two-thread deadlock. The static pass must find the
+cycle in this file's AST; the runtime test swaps the two attributes for
+``MonitoredLock``s and must see the inversion when both paths run."""
+import threading
+
+
+class Inverted:
+    def __init__(self):
+        self._a = threading.Lock()
+        self._b = threading.Lock()
+        self.events = []
+
+    def forward(self):
+        with self._a:
+            with self._b:
+                self.events.append("forward")
+
+    def backward(self):
+        with self._b:
+            with self._a:
+                self.events.append("backward")

@@ -1,0 +1,17 @@
+"""REPRO-SESSION fixture: VolunteerSession state poked from outside its own
+methods — the session desynchronizes from the server's lease table."""
+
+
+def drop_ticket_behind_servers_back(sess):
+    sess.task = None                         # REPRO-SESSION fires here
+    sess.tag = -1                            # and here
+
+
+def fake_progress(sess, version: int):
+    sess.lease_latest = version              # and here
+    sess._handed = False                     # and here (private state too)
+
+
+def own_methods_are_fine(self):
+    # a receiver literally named ``self`` is the session mutating itself
+    self.task = None

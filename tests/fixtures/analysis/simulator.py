@@ -1,0 +1,20 @@
+"""REPRO-LAYER fixture: an "engine" (stem ``simulator``) driving the
+consumer protocol directly on its servers instead of going through
+VolunteerSession/ServerEndpoint."""
+
+
+class BadEngine:
+    def __init__(self, qs, ds):
+        self.qs = qs
+        self.ds = ds
+
+    def steal_a_task(self, vid: str):
+        return self.qs.lease("initial", vid, 0.0)    # REPRO-LAYER fires here
+
+    def finish_behind_the_sessions_back(self, tag: int):
+        self.qs.ack("initial", tag)                  # and here
+        self.ds.publish_model(1, "v1")               # and here
+
+    def depth_is_fine(self) -> int:
+        # pure reads are the owner's business: not flagged
+        return self.qs.depth("initial")

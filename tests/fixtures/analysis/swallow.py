@@ -1,0 +1,24 @@
+"""REPRO-EXCEPT fixture: swallowed errors — in protocol dispatch these turn
+bugs into silent hangs (a reply never sent, a lease never requeued)."""
+
+
+def bare(handler, msg):
+    try:
+        return handler(msg)
+    except:                                  # REPRO-EXCEPT fires here
+        return None
+
+
+def swallowed(handler, msg):
+    try:
+        return handler(msg)
+    except Exception:                        # and here: Exception + lone pass
+        pass
+
+
+def handled_is_fine(handler, msg, log):
+    try:
+        return handler(msg)
+    except ValueError as e:                  # named + handled: not flagged
+        log.append(e)
+        raise

@@ -1,0 +1,22 @@
+"""REPRO-TIME fixture: wall-clock reads outside queue.py's clock classes.
+Every flagged line would split the lease-time authority in a real engine."""
+import time
+from time import monotonic as mono
+
+
+def stamp_deadline(timeout: float) -> float:
+    return time.monotonic() + timeout        # REPRO-TIME fires here
+
+
+def wall_now() -> float:
+    return time.time()                       # and here
+
+
+def aliased() -> float:
+    return mono()                            # and via from-import alias
+
+
+class NotAClock:
+    # the class-suffix exemption applies only inside queue.py
+    def now(self) -> float:
+        return time.monotonic()

@@ -1,0 +1,313 @@
+"""repro.analysis — every rule proven to fire on its seeded fixture and to
+stay silent on the shipped tree, the lock-inversion fixture caught both
+statically and under runtime instrumentation, and the CLI contract
+(--strict exits 0 on src/, non-zero on each fixture)."""
+import importlib.util
+import os
+import pathlib
+import subprocess
+import sys
+import threading
+from collections import deque
+from dataclasses import dataclass
+from typing import Any
+
+import pytest
+
+from repro.analysis import base, locks, rules, runtime, schema
+from repro.analysis.runtime import Analysis
+from repro.core import gateway
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+FIXTURES = ROOT / "tests" / "fixtures" / "analysis"
+CORE = ROOT / "src" / "repro" / "core"
+
+
+def _load_fixture(name: str):
+    spec = importlib.util.spec_from_file_location(name, FIXTURES / f"{name}.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+# ---------------------------------------------------------------------------
+# rules: each fixture fires its rule; the shipped tree is clean
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fixture,rule,n_min", [
+    ("wallclock.py", "REPRO-TIME", 4),
+    ("simulator.py", "REPRO-LAYER", 3),
+    ("session_mutation.py", "REPRO-SESSION", 4),
+    ("swallow.py", "REPRO-EXCEPT", 2),
+])
+def test_rule_fires_on_fixture(fixture, rule, n_min):
+    violations, stale = rules.check_file(FIXTURES / fixture)
+    fired = [v for v in violations if v.rule == rule]
+    assert len(fired) >= n_min, violations
+    # and ONLY that rule: fixtures are single-rule by construction
+    assert {v.rule for v in violations} == {rule}
+    assert stale == []
+
+
+def test_rules_clean_on_core_tree():
+    violations, stale = rules.check_paths(sorted(CORE.glob("*.py")))
+    assert violations == [], "\n".join(map(str, violations))
+    assert stale == [], "\n".join(map(str, stale))
+
+
+def test_fixture_negative_space_not_flagged():
+    # each fixture also contains a deliberately-legal variant; the counts
+    # above being exact minimums, make the negatives explicit on one file
+    violations, _ = rules.check_file(FIXTURES / "simulator.py")
+    assert not any(v.line >= 20 for v in violations), violations
+
+
+def test_ignore_escape_hatch_and_strict_staleness(tmp_path):
+    clean, stale = rules.check_file(FIXTURES / "ignored.py")
+    assert clean == [] and stale == []
+    # an ignore that suppresses nothing is itself a strict-mode violation
+    p = tmp_path / "stale.py"
+    p.write_text("x = 1  # analysis: ignore[REPRO-TIME]\n")
+    clean, stale = rules.check_file(p)
+    assert clean == []
+    assert [v.rule for v in stale] == ["ANALYSIS-IGNORE"]
+
+
+def test_ignore_is_rule_scoped(tmp_path):
+    # naming the WRONG rule does not excuse the finding
+    p = tmp_path / "wrong.py"
+    p.write_text("import time\n"
+                 "t = time.monotonic()  # analysis: ignore[REPRO-LAYER]\n")
+    clean, stale = rules.check_file(p)
+    assert [v.rule for v in clean] == ["REPRO-TIME"]
+    assert [v.rule for v in stale] == ["ANALYSIS-IGNORE"]
+
+
+# ---------------------------------------------------------------------------
+# locks: static half
+# ---------------------------------------------------------------------------
+
+def test_static_cycle_found_in_inversion_fixture():
+    vs = locks.check([FIXTURES / "lock_inversion.py"])
+    assert len(vs) == 1 and vs[0].rule == "LOCK-ORDER"
+    assert "lock_inversion._a" in vs[0].message
+    assert "lock_inversion._b" in vs[0].message
+
+
+def test_static_graph_clean_on_core():
+    assert locks.check(locks.default_paths()) == []
+
+
+def test_static_graph_sees_gateway_locks():
+    lks, edges = locks.lock_graph(locks.default_paths())
+    # the seam (_make_lock) must still register as a lock factory
+    assert {"gateway._lock", "gateway._snap_lock"} <= lks
+    # and the two must never nest (the fsync split depends on it)
+    assert not any("gateway._lock" in e and "gateway._snap_lock" in e
+                   for e in edges), edges
+
+
+def test_transitive_edges_via_same_module_calls(tmp_path):
+    p = tmp_path / "nested.py"
+    p.write_text(
+        "import threading\n"
+        "class S:\n"
+        "    def __init__(self):\n"
+        "        self._a = threading.Lock()\n"
+        "        self._b = threading.Lock()\n"
+        "    def inner(self):\n"
+        "        with self._b:\n"
+        "            pass\n"
+        "    def outer(self):\n"
+        "        with self._a:\n"
+        "            self.inner()\n")
+    _, edges = locks.lock_graph([p])
+    assert ("nested._a", "nested._b") in edges
+
+
+# ---------------------------------------------------------------------------
+# locks: runtime half
+# ---------------------------------------------------------------------------
+
+def test_runtime_catches_inversion_in_fixture_class():
+    fx = _load_fixture("lock_inversion")
+    mon = Analysis()
+    inv = fx.Inverted()
+    inv._a = mon.make_lock("fx._a")
+    inv._b = mon.make_lock("fx._b")
+    inv.forward()
+    assert mon.violations == []              # one order alone is legal
+    inv.backward()
+    assert [v.rule for v in mon.violations] == ["LOCK-ORDER"]
+    assert mon.report(stream=open(os.devnull, "w")) == 1
+
+
+def test_runtime_catches_inversion_against_static_graph():
+    # the opposing path never RUNS — only the static graph knows it exists
+    static = locks.static_edges([FIXTURES / "lock_inversion.py"])
+    assert ("lock_inversion._a", "lock_inversion._b") in static
+    mon = Analysis(static_edges=static)
+    a = mon.make_lock("lock_inversion._a")
+    b = mon.make_lock("lock_inversion._b")
+    with b:
+        with a:                              # inverts the static a -> b
+            pass
+    assert [v.rule for v in mon.violations] == ["LOCK-ORDER"]
+    assert "static graph" in mon.violations[0].message
+
+
+def test_runtime_self_deadlock_fails_fast():
+    mon = Analysis()
+    lk = mon.make_lock("l")
+    lk.acquire()
+    with pytest.raises(RuntimeError):
+        lk.acquire()
+    assert [v.rule for v in mon.violations] == ["LOCK-SELF"]
+
+
+def test_blocking_under_guard_lock_flagged():
+    mon = Analysis()
+    guard = mon.make_lock("gateway._lock", guard=True)
+    plain = mon.make_lock("gateway._snap_lock")
+    with plain:
+        mon.note_blocking("snapshot-fsync")  # non-guard lock: fine
+    assert mon.violations == []
+    with guard:
+        mon.note_blocking("socket-recv")
+    assert [v.rule for v in mon.violations] == ["LOCK-BLOCK"]
+
+
+def test_parked_holder_invariant():
+    mon = Analysis()
+    mon.note_park("v", holding=False, timed=False)   # idle park: fine
+    mon.note_park("v", holding=True, timed=True)     # heartbeat wakes it: fine
+    assert mon.violations == []
+    mon.note_park("v", holding=True, timed=False)    # PR 5's deadlock shape
+    assert [v.rule for v in mon.violations] == ["PARKED-HOLDER"]
+
+
+def test_gateway_wait_reports_parked_holder(monkeypatch):
+    """An untimed-wait transport + a held ticket through the REAL _wait
+    path must trip the regression guard."""
+    mon = Analysis()
+    monkeypatch.setattr(gateway, "_monitor", lambda: mon)
+
+    class UntimedTransport:
+        timed_waits = False
+
+        def wait_notification(self, timeout=None):
+            return object()
+
+    assert gateway._wait(UntimedTransport(), deque(), 0.5, holding=True)
+    assert [v.rule for v in mon.violations] == ["PARKED-HOLDER"]
+    # the shipped volunteer always passes a timeout over timed transports
+    mon2 = Analysis()
+    monkeypatch.setattr(gateway, "_monitor", lambda: mon2)
+
+    class TimedTransport(UntimedTransport):
+        timed_waits = True
+
+    assert gateway._wait(TimedTransport(), deque(), 0.5, holding=True)
+    assert mon2.violations == []
+
+
+def test_monitored_locks_work_across_threads():
+    mon = Analysis()
+    lk = mon.make_lock("shared")
+    hits = []
+
+    def worker():
+        for _ in range(200):
+            with lk:
+                hits.append(1)
+
+    ts = [threading.Thread(target=worker) for _ in range(4)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert len(hits) == 800 and mon.violations == []
+
+
+def test_instrument_singleton_loads_static_graph():
+    Analysis.reset()
+    try:
+        mon = Analysis.instrument()
+        assert mon is Analysis.instrument()
+        assert isinstance(mon._static, set)
+    finally:
+        Analysis.reset()
+
+
+# ---------------------------------------------------------------------------
+# schema
+# ---------------------------------------------------------------------------
+
+def test_schema_clean_on_tree():
+    vs = schema.run()
+    assert vs == [], "\n".join(map(str, vs))
+
+
+def test_schema_doc_check_fires_on_incomplete_doc():
+    vs = schema.check_doc(FIXTURES / "protocol_missing.md")
+    assert vs and all(v.rule == "SCHEMA-DOC" for v in vs)
+    named = " ".join(v.message for v in vs)
+    assert "LeaseReq" in named and "MapTask" in named
+    assert "Hello " not in named             # the two documented ones pass
+
+
+def test_rogue_type_fails_roundtrip_and_partition():
+    @dataclass(frozen=True)
+    class Rogue:
+        payload: Any
+
+    vs = schema.run(extra_types=(Rogue,))
+    fired = {v.rule for v in vs if "Rogue" in v.message}
+    # unregistered -> can't cross the wire, fits no role, undocumented
+    assert fired == {"SCHEMA-ROUNDTRIP", "SCHEMA-PARTITION", "SCHEMA-DOC"}
+
+
+def test_schema_samples_construct_every_registered_type():
+    for name, cls in schema.registered_types().items():
+        inst = schema.sample(cls)
+        assert type(inst).__name__ == name
+
+
+# ---------------------------------------------------------------------------
+# the CLI contract
+# ---------------------------------------------------------------------------
+
+def _cli(*argv):
+    env = dict(os.environ, PYTHONPATH=str(ROOT / "src"))
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *argv],
+        cwd=ROOT, env=env, capture_output=True, text=True)
+
+
+def test_cli_strict_clean_on_shipped_tree():
+    res = _cli("--strict")
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "clean" in res.stdout
+
+
+@pytest.mark.parametrize("argv", [
+    ("--only", "rules", "--paths", "tests/fixtures/analysis/wallclock.py"),
+    ("--only", "rules", "--paths", "tests/fixtures/analysis/simulator.py"),
+    ("--only", "rules", "--paths",
+     "tests/fixtures/analysis/session_mutation.py"),
+    ("--only", "rules", "--paths", "tests/fixtures/analysis/swallow.py"),
+    ("--only", "locks", "--paths",
+     "tests/fixtures/analysis/lock_inversion.py"),
+    ("--only", "schema", "--doc",
+     "tests/fixtures/analysis/protocol_missing.md"),
+])
+def test_cli_nonzero_on_each_violation_fixture(argv):
+    res = _cli(*argv)
+    assert res.returncode == 1, res.stdout + res.stderr
+    assert "violation" in res.stdout
+
+
+def test_cli_ignored_fixture_clean_even_strict():
+    res = _cli("--strict", "--only", "rules", "--paths",
+               "tests/fixtures/analysis/ignored.py")
+    assert res.returncode == 0, res.stdout + res.stderr
