@@ -1,0 +1,173 @@
+"""Browser-scale scenario sweeps: 100k-1M volunteers with session traces.
+
+The paper stops at 32 browsers; the ROADMAP's north star is "millions of
+heterogeneous, unreliable volunteers". This benchmark simulates fleets of
+**devices behaving like people** — ``repro.core.traces`` session traces
+with diurnal churn, heavy-tailed (lognormal) session lengths, and a
+mobile/laptop/desktop speed mixture, calibrated to the paper's "users were
+online ~6.5 h/day" — and sweeps two scenario families:
+
+- **scale**: a fixed JSDoop-class workload served by fleets from 10k up to
+  1M devices (a 4-hour steady-state slice of each fleet's day). Makespan
+  should stay flat once task parallelism saturates while events/bytes track
+  the coordination cost of an ever-larger, mostly-idle, churning fleet —
+  per aggregation policy family (sync BSP / bounded staleness / local
+  steps). The O(log N) active-fleet counting this sweep forced into the
+  Simulator is what makes the million-device points tractable at all.
+- **diurnal**: a small fleet, a compressed 10-minute "day", and a workload
+  sized to span several days, run at diurnal amplitude 0 (flat arrivals)
+  vs 0.7 (pronounced peak/trough). Makespan must track availability: the
+  same work on the same devices takes measurably longer when the fleet
+  breathes with the day cycle.
+
+Every run asserts the protocol completed (final version == policy target)
+despite thousands of mid-task departures. Records land in
+``BENCH_browser_scale.json`` via ``benchmarks/run.py``.
+
+CSV: name,family,policy,devices,sessions,events,requeues,makespan_min,wall_s
+
+Usage: PYTHONPATH=src python benchmarks/browser_scale.py [--quick] [--flagship]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.core.simulator import CostModel, Simulator, SyntheticProblem
+from repro.core.traces import TraceParams, generate_sessions, trace_stats
+
+POLICIES = ("sync", "staleness:4", "local:4")
+
+HEADER = ("name,family,policy,devices,sessions,events,requeues,"
+          "makespan_min,wall_s")
+
+
+def make_problem() -> SyntheticProblem:
+    # a JSDoop-class LSTM with 128-way gradient accumulation: 2 MB model,
+    # 200 kB compressed gradient, 20 model versions
+    return SyntheticProblem(n_versions=20, n_mb=128, model_bytes=2.0e6,
+                            grad_bytes=2.0e5, map_flops=1.0e9,
+                            reduce_flops=5.0e7)
+
+
+def make_cost() -> CostModel:
+    # browser-grade devices on home links; the cache model is disabled so
+    # the trace's device-speed mixture is the only heterogeneity
+    return CostModel(flops_per_sec=2.0e9, latency=0.030, bandwidth=12.5e6,
+                     cache_bytes=1e15)
+
+
+def run_scale_point(policy: str, n_devices: int, *, horizon: float,
+                    seed: int = 7):
+    """One scale-family point: steady-state fleet slice, fixed workload."""
+    params = TraceParams(n_devices=n_devices, horizon=horizon, seed=seed)
+    specs = generate_sessions(params)
+    problem = make_problem()
+    sim = Simulator(problem, specs, cost=make_cost(), mode="event",
+                    policy=policy, visibility_timeout=900.0,
+                    max_events=80_000_000,
+                    server_apply=not policy.startswith("sync"))
+    t0 = time.perf_counter()
+    res = sim.run()
+    wall = time.perf_counter() - t0
+    assert res.final_version == sim.n_updates, \
+        (policy, n_devices, res.final_version, sim.n_updates)
+    return res, len(specs), wall
+
+
+def run_diurnal_point(amplitude: float, *, n_devices: int = 60,
+                      n_versions: int = 60, seed: int = 11):
+    """One diurnal-family point: compressed 10-minute day, work sized to
+    span ~3 compressed days, sessions a handful of tasks long —
+    availability breathes, the work must ride it out through lease expiry
+    + requeue. Tasks are slow (10-70 s against 50 s median sessions) so
+    the binding resource is who is ONLINE, which is the diurnal signal."""
+    day = 600.0
+    params = TraceParams(
+        n_devices=n_devices, horizon=6 * day, day=day,
+        diurnal_amplitude=amplitude, session_median=50.0, seed=seed)
+    specs = generate_sessions(params)
+    problem = SyntheticProblem(n_versions=n_versions, n_mb=32,
+                               model_bytes=2.0e6, grad_bytes=2.0e5,
+                               map_flops=2.0e10, reduce_flops=5.0e7)
+    sim = Simulator(problem, specs, cost=make_cost(), mode="event",
+                    policy="local:4", visibility_timeout=60.0,
+                    max_events=80_000_000, server_apply=True)
+    t0 = time.perf_counter()
+    res = sim.run()
+    wall = time.perf_counter() - t0
+    assert res.final_version == sim.n_updates, \
+        (amplitude, res.final_version, sim.n_updates)
+    return res, len(specs), wall
+
+
+def main(quick: bool = False, flagship: bool = False):
+    """Sweep both families. ``flagship`` adds the 320k/1M-device points
+    (minutes of wall time — used to refresh the committed records, not CI).
+    Returns BENCH records."""
+    print(HEADER)
+    records = []
+
+    def record(name: str, res, *, family: str, wall: float, **params):
+        params.update(family=family, policy=res.policy,
+                      requeues=res.requeues, wall_s=round(wall, 2))
+        records.append({"name": name, "params": params,
+                        "makespan": res.makespan, "events": res.events,
+                        "bytes": res.bytes_sent})
+
+    def emit(family, res, devices, sessions, wall):
+        print(f"browser_scale,{family},{res.policy},{devices},{sessions},"
+              f"{res.events},{res.requeues},"
+              f"{round(res.makespan / 60.0, 2)},{round(wall, 2)}")
+
+    # -- scale family -------------------------------------------------------
+    # a 4 h steady-state slice of each fleet's day; the quick CI leg caps
+    # the slice at 30 min and the fleet at 100k devices, one policy each
+    horizon = 1800.0 if quick else 14_400.0
+    fleets = [10_000, 100_000] if quick else [10_000, 32_000, 100_000]
+    plan = [(p, n) for p in POLICIES
+            for n in (fleets[-1:] if quick and p != "staleness:4" else fleets)]
+    if flagship:
+        plan += [("staleness:4", 320_000), ("staleness:4", 1_000_000)]
+    makespans = {}
+    for policy, n_devices in plan:
+        res, sessions, wall = run_scale_point(policy, n_devices,
+                                              horizon=horizon)
+        makespans[(policy, n_devices)] = res.makespan
+        record("browser_scale", res, family="scale", wall=wall,
+               devices=n_devices, sessions=sessions, horizon=horizon)
+        emit("scale", res, n_devices, sessions, wall)
+    # growing the idle fleet must not blow up the coordination work: the
+    # biggest fleet's makespan stays within 2x of the smallest's per policy
+    for policy in POLICIES:
+        ms = [makespans[k] for k in sorted(makespans) if k[0] == policy]
+        assert max(ms) <= 2.0 * min(ms), (policy, ms)
+
+    # -- diurnal family (cheap either way: runs identically in quick) -------
+    flat_res, flat_sessions, flat_wall = run_diurnal_point(0.0)
+    tide_res, tide_sessions, tide_wall = run_diurnal_point(0.8)
+    for amp, res, sessions, wall in ((0.0, flat_res, flat_sessions,
+                                      flat_wall),
+                                     (0.8, tide_res, tide_sessions,
+                                      tide_wall)):
+        record("browser_scale_diurnal", res, family="diurnal", wall=wall,
+               devices=60, amplitude=amp)
+        emit("diurnal", res, 60, sessions, wall)
+    ratio = tide_res.makespan / flat_res.makespan
+    print(f"# diurnal: flat-arrival makespan {flat_res.makespan / 60:.1f} min "
+          f"vs amplitude-0.8 {tide_res.makespan / 60:.1f} min "
+          f"({ratio:.2f}x) — the same work rides the fleet's day cycle")
+    assert ratio > 1.1, \
+        f"diurnal churn left no availability signature: {ratio:.2f}x"
+    print(f"# OK: every sweep point finished its run despite churn "
+          f"({len(records)} records)")
+    return records
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: capped fleet + short slice")
+    ap.add_argument("--flagship", action="store_true",
+                    help="add the 320k/1M-device points (slow)")
+    main(**vars(ap.parse_args()))

@@ -14,6 +14,7 @@ Artifacts covered:
   (scale)     volunteer_scaling   event-driven vs polling at 1k/10k volunteers
   (elastic)   rebalance           live shard join/leave migration cost
   (policies)  staleness           makespan + loss vs aggregation policy
+  (browser)   browser_scale       100k-1M volunteer session-trace sweeps
 
 Perf trajectory: suites that return record lists additionally write
 ``BENCH_<name>.json`` — a JSON list of records, each with the schema
@@ -30,7 +31,8 @@ import time
 import traceback
 
 # suites whose return value is a list of perf records to persist
-BENCH_RECORD_SUITES = ("volunteer_scaling", "rebalance", "staleness")
+BENCH_RECORD_SUITES = ("volunteer_scaling", "rebalance", "staleness",
+                       "browser_scale")
 
 # the BENCH_<name>.json record schema: field -> accepted types. ``params`` is
 # free-form by design (each suite names its own axes) but must be a dict;
@@ -118,10 +120,10 @@ def main(argv=None) -> int:
         return 1 if problems else 0
     reduced = not args.full
 
-    from benchmarks import (classroom, cluster_scaling, compression,
-                            dynamism, kernel_bench, rebalance, roofline,
-                            sequential_baseline, staleness, timeline,
-                            volunteer_scaling)
+    from benchmarks import (browser_scale, classroom, cluster_scaling,
+                            compression, dynamism, kernel_bench, rebalance,
+                            roofline, sequential_baseline, staleness,
+                            timeline, volunteer_scaling)
     suites = [
         ("volunteer_scaling", lambda: volunteer_scaling.main(quick=reduced)),
         ("cluster_scaling", lambda: cluster_scaling.main(reduced)),
@@ -134,6 +136,7 @@ def main(argv=None) -> int:
         ("roofline", lambda: roofline.main()),
         ("rebalance", lambda: rebalance.main(quick=reduced)),
         ("staleness", lambda: staleness.main(reduced)),
+        ("browser_scale", lambda: browser_scale.main(quick=reduced)),
     ]
     failed = []
     for name, fn in suites:

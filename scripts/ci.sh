@@ -38,16 +38,20 @@ python benchmarks/volunteer_scaling.py --quick
 # (metamorphic contracts of ISSUEs 2 and 3)
 python -m repro.core.chaos --seeds 5
 
-# gateway durability smoke (<60 s), 4 legs (ISSUEs 3 + 5): (1) an
+# gateway durability smoke (<90 s), 6 legs (ISSUEs 3 + 5 + 7): (1) an
 # out-of-process volunteer over a real TCP socket matches the in-process run;
 # (2) a volunteer process kill -9'd mid-task has its lease requeued by the
 # WALL-CLOCK sweeper and survivors finish; (3) the server itself is kill -9'd
 # mid-run, restarts from its latest snapshot, and the run resumes to the
 # uninterrupted final version; (4) a barrierless policy commits through the
-# server-side applier — the thin client sends zero PublishModel frames
+# server-side applier — the thin client sends zero PublishModel frames;
+# (5) a WebSocket-framed volunteer process and a native-TCP volunteer share
+# one gateway port and finish the same run bit-identically; (6) the
+# repro.core.browser thin client (WS framing, zero model pushes, asserted)
+# completes a barrierless run alongside a TCP volunteer
 python -m repro.core.gateway --smoke
 
-# the same 4 legs under runtime lock/invariant instrumentation (ISSUE 6):
+# the same 6 legs under runtime lock/invariant instrumentation (ISSUE 6):
 # MonitoredLocks record actual acquisition orders across every gateway
 # process (the env var rides into the spawned servers/volunteers) and the
 # run fails on any LOCK-ORDER inversion, LOCK-BLOCK (blocking call under
@@ -73,6 +77,13 @@ python -m repro.core.chaos --seeds 2 --policy local:4
 # makespan under a straggler-heavy volunteer pool (final-loss deltas
 # printed), and the server-side applier must reduce bytes per async update
 python benchmarks/staleness.py --quick
+
+# browser-scale smoke (ISSUE 7, capped: 100k devices, 30 min slice): session
+# traces with diurnal churn + heavy-tailed sessions must complete the run at
+# every fleet size with makespan flat per policy, and diurnal amplitude must
+# leave a measurable availability signature (the committed 1M-device records
+# in BENCH_browser_scale.json come from the uncapped --flagship run)
+python benchmarks/browser_scale.py --quick
 
 # docs leg (ISSUE 5): the README is executable documentation — run every
 # quickstart bash block, fail if the results tables drifted from the

@@ -41,7 +41,8 @@ CLOCK_CLASS_SUFFIX = "Clock"
 # ops (expire_all, next_deadline, snapshot/restore, shard membership) and
 # pure reads (depth, drained, latest_version, counters) are the owner's
 # business and stay direct.
-ENGINE_STEMS = {"coordinator", "simulator", "gateway", "chaos"}
+ENGINE_STEMS = {"coordinator", "simulator", "gateway", "chaos", "browser",
+                "traces"}
 SERVER_ATTRS = {"qs", "ds", "queue_server", "data_server"}
 CONSUMER_OPS = {"lease", "ack", "nack", "extend", "publish", "subscribe",
                 "unsubscribe", "kick", "drop_consumer", "declare",

@@ -1,12 +1,22 @@
 """Gateway — the volunteer protocol over a real loopback socket, durably.
 
 ``python -m repro.core.gateway`` hosts a QueueServer + DataServer behind
-``protocol.ServerEndpoint`` on a TCP socket (length-prefixed frames of
-canonically encoded messages), so a genuinely **out-of-process** volunteer can
-join a training run — the end-to-end proof that the sans-IO redesign works:
-the same ``VolunteerSession`` that drives the Coordinator's JAX compute and
-the Simulator's virtual time here drives a blocking socket client, with zero
-protocol code of its own.
+``protocol.ServerEndpoint`` on a TCP socket, so a genuinely
+**out-of-process** volunteer can join a training run — the end-to-end proof
+that the sans-IO redesign works: the same ``VolunteerSession`` that drives
+the Coordinator's JAX compute and the Simulator's virtual time here drives a
+blocking socket client, with zero protocol code of its own.
+
+One port serves TWO framing dialects, selected per connection by sniffing
+the first byte (``GatewayServer._open_channel``):
+
+- **native** — length-prefixed frames (u32 BE + canonically encoded
+  message), the repo's original loopback framing;
+- **WebSocket** — RFC 6455 (``core/wsframing``), each protocol message as
+  one masked binary WS message: the framing a real browser volunteer — the
+  paper's whole design point — can actually produce. ``WsClientTransport``
+  is the client half; ``repro.core.browser`` is the thin browser-shaped
+  volunteer on top of it.
 
 Beyond the liveness proof, the gateway is a durable volunteer SERVICE:
 
@@ -57,6 +67,8 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import contextlib
+import logging
 import os
 import signal
 import socket
@@ -70,6 +82,7 @@ from collections import deque
 from typing import Deque, Dict, Optional, Tuple
 
 from repro.checkpoint import serialize
+from repro.core import wsframing
 from repro.core.aggregation import PolicyLike, make_policy
 from repro.core.dataserver import DataServer
 from repro.core.initiator import enqueue_problem
@@ -83,6 +96,25 @@ from repro.core.simulator import SyntheticProblem
 from repro.core.transport import InProcessTransport, Transport
 
 _LEN = struct.Struct(">I")
+
+log = logging.getLogger("repro.gateway")
+
+# Frame cap shared with the WebSocket framer: a corrupt/hostile length
+# prefix must close the connection with a protocol error, never drive a
+# multi-GB allocation loop (same bound, both dialects).
+MAX_FRAME = wsframing.MAX_FRAME
+
+# A peer that goes silent MID-frame (header sent, body never arrives) is
+# dead or hostile: after this many seconds with zero bytes of progress the
+# connection is torn down — through ``endpoint.disconnect`` on the server,
+# so the half-open client's waiters/subscriptions don't leak into the
+# sweeper's lease bookkeeping. Silence BETWEEN frames is just idle.
+FRAME_STALL_TIMEOUT = 10.0
+
+# Bound on the dialect sniff + WS upgrade exchange for a fresh connection.
+HANDSHAKE_TIMEOUT = 10.0
+
+_RECV_CHUNK = 1 << 20                # never recv() more than 1 MiB at a time
 
 # requests that cannot change durable state — skipped by the snapshot trigger
 _READONLY = ("LatestReq", "DepthReq", "DrainedReq", "FetchModel", "Hello")
@@ -115,29 +147,73 @@ def _make_lock(name: str, *, guard: bool = False):
     return threading.Lock()
 
 
+@contextlib.contextmanager
+def _sock_timeout(sock: socket.socket, timeout: Optional[float]):
+    """Scoped ``settimeout`` that ALWAYS restores the previous value.
+
+    Every timed section of the framing layer goes through this: restoring
+    on the happy path only (the old ``settimeout``/``settimeout(None)``
+    dance) leaks a stale timeout into the next frame read when an
+    exception escapes mid-section, and a surprise ``socket.timeout`` on a
+    later read desyncs the whole stream."""
+    try:
+        prev = sock.gettimeout()
+    except OSError:
+        prev = None
+    sock.settimeout(timeout)
+    try:
+        yield sock
+    finally:
+        try:
+            sock.settimeout(prev)
+        except OSError:
+            pass
+
+
 def _send_frame(sock: socket.socket, msg) -> int:
     data = encode_message(msg)
     sock.sendall(_LEN.pack(len(data)) + data)
     return _LEN.size + len(data)
 
 
-def _recv_exact(sock: socket.socket, n: int) -> Optional[bytes]:
+def _recv_exact(sock: socket.socket, n: int, *,
+                mid_frame: bool = False) -> Optional[bytes]:
+    """Read exactly ``n`` bytes. None = connection over (closed/reset, or a
+    mid-frame stall). A ``socket.timeout`` with NOTHING consumed and
+    ``mid_frame=False`` propagates — that is a clean idle timeout the
+    caller asked for (heartbeat cue) and the stream is still aligned.
+
+    Once any byte of a frame has been consumed a timeout may NOT surface:
+    the caller would treat the consumed bytes as never read and desync on
+    the next frame. Instead keep reading while bytes make progress, and
+    give up (dead peer -> None) only after ``FRAME_STALL_TIMEOUT`` of
+    total silence."""
     mon = _monitor()
     if mon is not None:
         mon.note_blocking("socket-recv")
     buf = b""
+    stall_deadline = None
     while len(buf) < n:
         try:
-            chunk = sock.recv(n - len(buf))
+            chunk = sock.recv(min(n - len(buf), _RECV_CHUNK))
         except socket.timeout:
-            if not buf:
+            if not buf and not mid_frame:
                 raise               # idle timeout: caller decides (heartbeat)
+            if mid_frame:
+                # the caller scoped FRAME_STALL_TIMEOUT onto the socket:
+                # this timeout IS the stall window elapsing with no bytes
+                return None
+            if stall_deadline is None:
+                stall_deadline = _CLOCK.now() + FRAME_STALL_TIMEOUT
+            elif _CLOCK.now() >= stall_deadline:
+                return None         # mid-frame stall: peer is dead
             continue                # mid-frame: the rest is in flight
         except OSError:
             return None
         if not chunk:
             return None
         buf += chunk
+        stall_deadline = None       # progress resets the stall window
     return buf
 
 
@@ -145,7 +221,18 @@ def _recv_frame(sock: socket.socket):
     head = _recv_exact(sock, _LEN.size)
     if head is None:
         return None
-    body = _recv_exact(sock, _LEN.unpack(head)[0])
+    n = _LEN.unpack(head)[0]
+    if n > MAX_FRAME:
+        # corrupt or hostile length prefix — never allocate for it; the
+        # caller sees None and closes the connection (server side through
+        # endpoint.disconnect, client side as a ConnectionError)
+        log.error("protocol error: %d-byte frame exceeds MAX_FRAME=%d "
+                  "-- closing connection", n, MAX_FRAME)
+        return None
+    # the header is consumed: from here a timeout must not surface (the
+    # stream would desync), so the body read runs under the stall window
+    with _sock_timeout(sock, FRAME_STALL_TIMEOUT):
+        body = _recv_exact(sock, n, mid_frame=True)
     return None if body is None else decode_message(body)
 
 
@@ -154,6 +241,146 @@ def _synthetic_apply(blob, result, version: int):
     applying any admitted contribution to version v just names v+1 (the real
     engines hand ``ApplyWork`` to JAX; the gateway proves the protocol)."""
     return f"v{version + 1}"
+
+
+# ---------------------------------------------------------------------------
+# per-connection channels: one port, two framing dialects
+# ---------------------------------------------------------------------------
+
+class _TcpChannel:
+    """Native length-prefixed dialect (docs/protocol.md "Byte framing")."""
+
+    dialect = "tcp"
+
+    def __init__(self, conn: socket.socket):
+        self.conn = conn
+
+    def handshake(self) -> bool:
+        return True                  # the native dialect has no preamble
+
+    def send(self, msg) -> int:
+        return _send_frame(self.conn, msg)
+
+    def recv(self):
+        """Next protocol message; None = connection over."""
+        return _recv_frame(self.conn)
+
+    def close(self) -> None:
+        try:
+            self.conn.close()
+        except OSError:
+            pass
+
+
+class _WsChannel:
+    """RFC 6455 dialect: the same protocol messages, each carried as one
+    binary WebSocket message (``wsframing``). The server never masks; the
+    client (a browser) must."""
+
+    dialect = "ws"
+
+    def __init__(self, conn: socket.socket):
+        self.conn = conn
+        self.framer = wsframing.server_framer()
+        self._events: Deque = deque()
+
+    def handshake(self) -> bool:
+        """Run the HTTP upgrade under the handshake timeout; True on 101."""
+        hs = wsframing.ServerHandshake()
+        try:
+            with _sock_timeout(self.conn, HANDSHAKE_TIMEOUT):
+                while True:
+                    data = self.conn.recv(4096)
+                    if not data:
+                        return False
+                    response = hs.feed(data)
+                    if response is not None:
+                        break
+                self.conn.sendall(response)
+        except socket.timeout:
+            log.error("ws handshake stalled after %.0fs -- closing",
+                      HANDSHAKE_TIMEOUT)
+            return False
+        except wsframing.WsProtocolError as e:
+            log.error("ws handshake rejected: %s", e)
+            try:
+                self.conn.sendall(wsframing.bad_handshake_response(str(e)))
+            except OSError:
+                pass
+            return False
+        except OSError:
+            return False
+        if hs.leftover:              # first frame bytes glued to the upgrade
+            try:
+                self._events.extend(self.framer.feed(hs.leftover))
+            except wsframing.WsProtocolError as e:
+                log.error("ws protocol error in handshake leftover: %s", e)
+                return False
+        return True
+
+    def send(self, msg) -> int:
+        frame = self.framer.send_message(encode_message(msg))
+        self.conn.sendall(frame)
+        return len(frame)
+
+    def _read_chunk(self) -> Optional[bytes]:
+        try:
+            if self.framer.mid_frame:
+                # same rule as the native dialect: a timeout may not
+                # surface mid-frame — it IS the stall window elapsing
+                with _sock_timeout(self.conn, FRAME_STALL_TIMEOUT):
+                    try:
+                        data = self.conn.recv(_RECV_CHUNK)
+                    except socket.timeout:
+                        return None
+            else:
+                data = self.conn.recv(_RECV_CHUNK)
+        except OSError:
+            return None
+        return data or None
+
+    def recv(self):
+        """Next protocol message; answers pings and the close handshake
+        transparently. None = connection over."""
+        while True:
+            while self._events:
+                ev = self._events.popleft()
+                if isinstance(ev, wsframing.Message):
+                    return decode_message(ev.data)
+                if isinstance(ev, wsframing.Ping):
+                    try:
+                        self.conn.sendall(self.framer.pong(ev.data))
+                    except OSError:
+                        return None
+                elif isinstance(ev, wsframing.Closed):
+                    # complete the close handshake (best effort), then the
+                    # caller tears the connection down
+                    code = ev.code if ev.code is not None \
+                        else wsframing.CLOSE_NORMAL
+                    try:
+                        self.conn.sendall(self.framer.close(code))
+                    except OSError:
+                        pass
+                    return None
+                # Pong: keepalive reply, nothing to do
+            data = self._read_chunk()
+            if data is None:
+                return None
+            try:
+                self._events.extend(self.framer.feed(data))
+            except wsframing.WsProtocolError as e:
+                log.error("ws protocol error from peer: %s -- closing", e)
+                try:
+                    self.conn.sendall(self.framer.close(e.code))
+                except OSError:
+                    pass
+                return None
+
+    def close(self) -> None:
+        try:
+            self.conn.close()
+        except OSError:
+            pass
 
 
 # ---------------------------------------------------------------------------
@@ -214,7 +441,7 @@ class GatewayServer:
         self._snap_lock = _make_lock("gateway._snap_lock")
         self._snap_seq = 0                       # encode order (under _lock)
         self._snap_written = 0                   # last seq on disk (_snap_lock)
-        self._conns: Dict[str, socket.socket] = {}
+        self._conns: Dict[str, object] = {}      # consumer -> channel
         self.done = threading.Event()
         self._closed = threading.Event()
         if self.ds.latest_version >= self.n_updates:
@@ -333,20 +560,15 @@ class GatewayServer:
         # bounded: a client that stops draining its socket would otherwise
         # block here with the global lock held and stall the whole server —
         # treat a wedged buffer like a disconnect and drop the registration.
-        conn = self._conns.get(consumer)
+        channel = self._conns.get(consumer)
         delivered = False
-        if conn is not None:
+        if channel is not None:
             try:
-                conn.settimeout(10.0)
-                _send_frame(conn, msg)
+                with _sock_timeout(channel.conn, 10.0):
+                    channel.send(msg)
                 delivered = True
             except OSError:
                 self._conns.pop(consumer, None)
-            finally:
-                try:
-                    conn.settimeout(None)
-                except OSError:
-                    pass
         if not delivered and isinstance(msg, Wake):
             # a queue wake is one-shot: consumed by an unreachable consumer,
             # the event would be lost to everyone. Hand it to the next waiter
@@ -355,19 +577,47 @@ class GatewayServer:
             # KickQueue request makes (REPRO-LAYER).
             self.endpoint.handle(KickQueue(msg.queue))
 
+    def _open_channel(self, conn: socket.socket):
+        """Sniff the dialect from the first byte and run any handshake.
+
+        A WebSocket connection opens with an HTTP ``GET `` (0x47); a
+        native-dialect connection opens with a u32 BE length < MAX_FRAME,
+        whose first byte is <= 0x01 — one peeked byte disambiguates.
+        Returns a ready channel, or None (connection already closed)."""
+        try:
+            with _sock_timeout(conn, HANDSHAKE_TIMEOUT):
+                first = conn.recv(1, socket.MSG_PEEK)
+        except (socket.timeout, OSError):
+            first = b""
+        if not first:
+            try:
+                conn.close()
+            except OSError:
+                pass
+            return None
+        channel = _WsChannel(conn) if wsframing.is_ws_preamble(first) \
+            else _TcpChannel(conn)
+        if not channel.handshake():
+            channel.close()
+            return None
+        return channel
+
     def _serve_conn(self, conn: socket.socket) -> None:
+        channel = self._open_channel(conn)
+        if channel is None:
+            return
         consumer = None
         try:
             while True:
-                msg = _recv_frame(conn)
+                msg = channel.recv()
                 if msg is None:
                     break
                 with self._lock:
                     if isinstance(msg, Hello):
                         consumer = msg.consumer
-                        self._conns[consumer] = conn
+                        self._conns[consumer] = channel
                     reply = self.endpoint.handle(msg)
-                    _send_frame(conn, reply)
+                    channel.send(reply)
                     pending = self._maybe_snapshot(msg)
                     if self.ds.latest_version >= self.n_updates:
                         self.done.set()
@@ -375,15 +625,18 @@ class GatewayServer:
                     self._write_snapshot(*pending)
         finally:
             with self._lock:
-                if consumer is not None and self._conns.get(consumer) is conn:
+                if consumer is not None \
+                        and self._conns.get(consumer) is channel:
                     del self._conns[consumer]
-                    # a disconnected consumer can never serve a wake: drop
+                    # EVERY teardown path lands here — clean Bye, kill -9,
+                    # a corrupt length prefix, or a mid-frame stall — and a
+                    # disconnected consumer can never serve a wake: drop
                     # its queue waiters so they stop consuming one-shot
                     # events other volunteers need. Its LEASES stay — that
                     # recovery is deliberately the sweeper's (it may
                     # reconnect and heartbeat; only real death expires them).
                     self.endpoint.disconnect(consumer)
-            conn.close()
+            channel.close()
 
     def serve_forever(self) -> None:
         while True:
@@ -409,51 +662,80 @@ class GatewayServer:
 # client transport
 # ---------------------------------------------------------------------------
 
-class SocketTransport(Transport):
-    """Blocking request/reply over the gateway socket; pushed notification
-    frames are stashed (or blocked for) rather than delivered by callback."""
+def _connect_with_retry(host: str, port: int,
+                        connect_timeout: float) -> socket.socket:
+    deadline = _CLOCK.now() + connect_timeout
+    last_err = None
+    while True:                      # the server may still be binding
+        try:
+            sock = socket.create_connection((host, port), timeout=30)
+            # the connect timeout must not linger: a volunteer may sit in
+            # wait_notification far longer than any connect should take
+            sock.settimeout(None)
+            return sock
+        except OSError as e:
+            last_err = e
+            if _CLOCK.now() >= deadline:
+                raise ConnectionError(
+                    f"gateway at {host}:{port} unreachable: {last_err}")
+            time.sleep(0.05)
+
+
+class _FramedClientTransport(Transport):
+    """Blocking request/reply over a gateway socket; pushed notification
+    frames are stashed (or blocked for) rather than delivered by callback.
+    Subclasses supply the framing dialect via ``_setup``/``_send_msg``/
+    ``_recv_msg``; everything above the frame boundary — the reply loop,
+    the notification inbox, the request histogram — is dialect-blind.
+
+    ``_recv_msg`` contract: return the next protocol message; return None
+    when the connection is over (close, reset, torn frame, protocol
+    error); raise ``socket.timeout`` ONLY for a clean idle timeout with
+    the stream still aligned on a frame boundary."""
 
     timed_waits = True               # wait_notification accepts a timeout
+    dialect = "?"
 
     def __init__(self, host: str, port: int, consumer: str,
                  connect_timeout: float = 10.0):
-        deadline = _CLOCK.now() + connect_timeout
-        last_err = None
-        while True:                      # the server may still be binding
-            try:
-                self.sock = socket.create_connection((host, port), timeout=30)
-                # the connect timeout must not linger: a volunteer may sit in
-                # wait_notification far longer than any connect should take
-                self.sock.settimeout(None)
-                break
-            except OSError as e:
-                last_err = e
-                if _CLOCK.now() >= deadline:
-                    raise ConnectionError(
-                        f"gateway at {host}:{port} unreachable: {last_err}")
-                time.sleep(0.05)
+        self.sock = _connect_with_retry(host, port, connect_timeout)
         self.inbox: Deque = deque()
         self.consumer = consumer
         self.bytes_moved = 0
         self.sent: Dict[str, int] = {}   # request-type histogram (observable:
         #                                  the applier path sends no PublishModel)
-        self.call(Hello(consumer))
+        try:
+            self._setup()
+            self.call(Hello(consumer))
+        except (OSError, ConnectionError):
+            self.sock.close()
+            raise
+
+    def _setup(self) -> None:
+        """Dialect handshake, run once before the Hello."""
+
+    def _send_msg(self, msg) -> int:
+        raise NotImplementedError
+
+    def _recv_msg(self):
+        raise NotImplementedError
 
     def set_deliver(self, deliver) -> None:
-        """SocketTransport is a BLOCKING client port: notifications are
+        """A socket transport is a BLOCKING client port: notifications are
         consumed via ``wait_notification``/``inbox``, never pushed through a
         callback — so the virtual-clock engines (which need synchronous
         delivery) cannot run over it. Fail loudly instead of deadlocking."""
         raise RuntimeError(
-            "SocketTransport has no callback delivery; drive it with a "
-            "blocking client loop (gateway.run_volunteer), not an engine")
+            f"{type(self).__name__} has no callback delivery; drive it "
+            "with a blocking client loop (gateway.run_volunteer), not an "
+            "engine")
 
     def call(self, msg):
         name = type(msg).__name__
         self.sent[name] = self.sent.get(name, 0) + 1
-        self.bytes_moved += _send_frame(self.sock, msg)
+        self.bytes_moved += self._send_msg(msg)
         while True:
-            reply = _recv_frame(self.sock)
+            reply = self._recv_msg()
             if reply is None:
                 raise ConnectionError("gateway closed the connection")
             if isinstance(reply, NOTIFICATION_TYPES):
@@ -467,18 +749,14 @@ class SocketTransport(Transport):
         cue to heartbeat its lease and re-check state."""
         if self.inbox:
             return self.inbox.popleft()
-        if timeout is not None:
-            self.sock.settimeout(timeout)
         try:
-            msg = _recv_frame(self.sock)
+            if timeout is not None:
+                with _sock_timeout(self.sock, timeout):
+                    msg = self._recv_msg()
+            else:
+                msg = self._recv_msg()
         except socket.timeout:
             return None
-        finally:
-            if timeout is not None:
-                try:
-                    self.sock.settimeout(None)
-                except OSError:
-                    pass
         if msg is None:
             raise ConnectionError("gateway closed while waiting")
         if not isinstance(msg, NOTIFICATION_TYPES):
@@ -487,6 +765,101 @@ class SocketTransport(Transport):
 
     def close(self) -> None:
         self.sock.close()
+
+
+class SocketTransport(_FramedClientTransport):
+    """The native length-prefixed dialect (docs/protocol.md)."""
+
+    dialect = "tcp"
+
+    def _send_msg(self, msg) -> int:
+        return _send_frame(self.sock, msg)
+
+    def _recv_msg(self):
+        return _recv_frame(self.sock)
+
+
+class WsClientTransport(_FramedClientTransport):
+    """The RFC 6455 dialect — what a browser's WebSocket object speaks.
+
+    Each protocol message rides as one masked binary WS message; pings
+    from the server are answered transparently; a Close frame or any
+    framing violation ends the connection cleanly (None from
+    ``_recv_msg`` -> ConnectionError upstream, same as the TCP dialect).
+    """
+
+    dialect = "ws"
+
+    def _setup(self) -> None:
+        self.framer = wsframing.client_framer()
+        self._events: Deque = deque()
+        request, key = wsframing.client_handshake_request(
+            f"{self.sock.getpeername()[0]}:{self.sock.getpeername()[1]}")
+        handshake = wsframing.ClientHandshake(key)
+        try:
+            with _sock_timeout(self.sock, HANDSHAKE_TIMEOUT):
+                self.sock.sendall(request)
+                while not handshake.done:
+                    data = self.sock.recv(4096)
+                    if not data:
+                        raise ConnectionError(
+                            "gateway closed during ws handshake")
+                    handshake.feed(data)
+        except socket.timeout:
+            raise ConnectionError("ws handshake timed out") from None
+        except wsframing.WsProtocolError as e:
+            raise ConnectionError(f"ws handshake failed: {e}") from e
+        if handshake.leftover:
+            self._events.extend(self.framer.feed(handshake.leftover))
+
+    def _send_msg(self, msg) -> int:
+        frame = self.framer.send_message(encode_message(msg))
+        self.sock.sendall(frame)
+        return len(frame)
+
+    def _recv_msg(self):
+        while True:
+            while self._events:
+                ev = self._events.popleft()
+                if isinstance(ev, wsframing.Message):
+                    return decode_message(ev.data)
+                if isinstance(ev, wsframing.Ping):
+                    self.sock.sendall(self.framer.pong(ev.data))
+                elif isinstance(ev, wsframing.Closed):
+                    return None
+                # Pong: ignore
+            try:
+                if self.framer.mid_frame:
+                    # a timeout may not surface mid-frame (stream desync);
+                    # scope the stall window exactly like the TCP dialect
+                    with _sock_timeout(self.sock, FRAME_STALL_TIMEOUT):
+                        try:
+                            data = self.sock.recv(_RECV_CHUNK)
+                        except socket.timeout:
+                            return None     # stalled mid-frame: peer is dead
+                else:
+                    data = self.sock.recv(_RECV_CHUNK)  # may raise (idle)
+            except socket.timeout:
+                raise
+            except OSError:
+                return None
+            if not data:
+                return None
+            try:
+                self._events.extend(self.framer.feed(data))
+            except wsframing.WsProtocolError as e:
+                log.error("ws protocol error from gateway: %s -- closing", e)
+                return None
+
+    def close(self) -> None:
+        try:
+            self.sock.sendall(self.framer.close())
+        except OSError:
+            pass
+        self.sock.close()
+
+
+_DIALECTS = {"tcp": SocketTransport, "ws": WsClientTransport}
 
 
 # ---------------------------------------------------------------------------
@@ -625,13 +998,15 @@ def run_volunteer(transport: Transport, vid: str, n_updates: int, *,
 
 def run_volunteer_resilient(host: str, port: int, vid: str, n_updates: int, *,
                             policy: PolicyLike = None, task_delay: float = 0.0,
-                            max_reconnects: int = 20,
+                            max_reconnects: int = 20, dialect: str = "tcp",
                             ) -> Tuple[int, int, int]:
     """``run_volunteer`` that survives gateway crashes: on a connection error
     it reconnects (fresh transport + session, same consumer id) and resumes.
     A lease the dead attempt held is recovered by the server's wall-clock
     sweeper, so no work is lost — only possibly repeated (at-least-once).
+    ``dialect`` picks the framing ("tcp" native, "ws" RFC 6455).
     Returns (final_version, tasks_done_total, reconnects)."""
+    transport_cls = _DIALECTS[dialect]
     tally = [0]
     reconnects = -1
     while True:
@@ -640,7 +1015,7 @@ def run_volunteer_resilient(host: str, port: int, vid: str, n_updates: int, *,
             raise ConnectionError(
                 f"{vid}: gave up after {max_reconnects} reconnects")
         try:
-            transport = SocketTransport(host, port, vid, connect_timeout=15.0)
+            transport = transport_cls(host, port, vid, connect_timeout=15.0)
         except ConnectionError:
             continue
         try:
@@ -709,9 +1084,9 @@ def _volunteer(args) -> int:
     n_updates = _target(args)
     final, tasks, reconnects = run_volunteer_resilient(
         "127.0.0.1", args.port, args.vid, n_updates, policy=args.policy,
-        task_delay=args.task_delay)
-    print(f"volunteer {args.vid}: final_version={final} tasks={tasks} "
-          f"reconnects={reconnects}", flush=True)
+        task_delay=args.task_delay, dialect=args.dialect)
+    print(f"volunteer {args.vid} [{args.dialect}]: final_version={final} "
+          f"tasks={tasks} reconnects={reconnects}", flush=True)
     if args.expect_final is not None and final != args.expect_final:
         print(f"FAIL: expected final_version={args.expect_final}")
         return 1
@@ -914,14 +1289,91 @@ def _smoke_server_applier(args) -> None:
           f"0 PublishModel frames (server applied every gradient)")
 
 
+def _smoke_ws_dialect(args) -> None:
+    """Leg 5 — one port, two framing dialects: a WebSocket-framed volunteer
+    PROCESS and a native-TCP volunteer PROCESS join the SAME gateway run and
+    must both observe the identical (bit-identical) final model version."""
+    n_tasks = args.n_versions * (args.n_mb + 1)
+    with tempfile.TemporaryDirectory() as td:
+        port_file = os.path.join(td, "gw.port")
+        proc = _spawn_server(args, port_file)
+        volunteers = []
+        try:
+            port = _wait_port(port_file, proc)
+            for vid, dialect in (("ws0", "ws"), ("tcp0", "tcp")):
+                volunteers.append(subprocess.Popen(
+                    [sys.executable, "-m", "repro.core.gateway",
+                     "--volunteer", "--port", str(port), "--vid", vid,
+                     "--dialect", dialect,
+                     "--n-versions", str(args.n_versions),
+                     "--n-mb", str(args.n_mb),
+                     "--expect-final", str(args.n_versions)],
+                    env=os.environ.copy()))
+            rcs = [v.wait(timeout=90) for v in volunteers]
+            rc = proc.wait(timeout=15)
+        finally:
+            for p in (*volunteers, proc):
+                if p.poll() is None:
+                    p.kill()
+    assert rcs == [0, 0], f"volunteer processes exited {rcs}"
+    assert rc == 0, f"gateway server exited {rc}"
+    print(f"# OK gateway smoke [ws-dialect]: a WebSocket volunteer and a "
+          f"TCP volunteer shared one gateway port and finished the same "
+          f"{n_tasks}-task run at the identical final version "
+          f"v{args.n_versions}")
+
+
+def _smoke_browser_thin(args) -> None:
+    """Leg 6 — the browser tier end to end: a ``repro.core.browser`` thin
+    client PROCESS (WebSocket framing, lease/fetch-latest/SubmitUpdate only)
+    and a TCP volunteer finish a barrierless run; the browser client asserts
+    ZERO PublishModel frames itself (MLitB's thin-client contract)."""
+    policy = "staleness:2"
+    n_updates = make_policy(policy).n_updates(_problem(args), args.n_versions)
+    with tempfile.TemporaryDirectory() as td:
+        port_file = os.path.join(td, "gw.port")
+        proc = _spawn_server(args, port_file, extra=("--policy", policy))
+        browser = tcp = None
+        try:
+            port = _wait_port(port_file, proc)
+            browser = subprocess.Popen(
+                [sys.executable, "-m", "repro.core.browser",
+                 "--port", str(port), "--vid", "browser0",
+                 "--policy", policy,
+                 "--n-versions", str(args.n_versions),
+                 "--n-mb", str(args.n_mb),
+                 "--expect-final", str(n_updates)],
+                env=os.environ.copy())
+            tcp = subprocess.Popen(
+                [sys.executable, "-m", "repro.core.gateway", "--volunteer",
+                 "--port", str(port), "--vid", "tcp1", "--policy", policy,
+                 "--n-versions", str(args.n_versions),
+                 "--n-mb", str(args.n_mb),
+                 "--expect-final", str(n_updates)],
+                env=os.environ.copy())
+            rcs = [browser.wait(timeout=90), tcp.wait(timeout=90)]
+            rc = proc.wait(timeout=15)
+        finally:
+            for p in (browser, tcp, proc):
+                if p is not None and p.poll() is None:
+                    p.kill()
+    assert rcs == [0, 0], f"volunteer processes exited {rcs}"
+    assert rc == 0, f"gateway server exited {rc}"
+    print(f"# OK gateway smoke [browser-thin]: browser thin client over "
+          f"WebSocket + TCP volunteer finished the {policy} run at "
+          f"v{n_updates}; browser pushed zero PublishModel frames")
+
+
 def _smoke(args) -> int:
     _smoke_transport_equivalence(args)
     _smoke_lease_sweeper(args)
     _smoke_crash_recovery(args)
     _smoke_server_applier(args)
-    print("# OK gateway smoke: all 4 legs green (transport equivalence, "
+    _smoke_ws_dialect(args)
+    _smoke_browser_thin(args)
+    print("# OK gateway smoke: all 6 legs green (transport equivalence, "
           "wall-clock lease sweeper, kill -9 crash recovery, server-side "
-          "applier)")
+          "applier, ws dialect, browser thin client)")
     return 0
 
 
@@ -934,6 +1386,9 @@ def main(argv=None) -> int:
     ap.add_argument("--port", type=int, default=0)
     ap.add_argument("--port-file", default=None)
     ap.add_argument("--vid", default="gw0")
+    ap.add_argument("--dialect", choices=sorted(_DIALECTS), default="tcp",
+                    help="volunteer framing: native length-prefixed TCP or "
+                         "RFC 6455 WebSocket (one server port serves both)")
     ap.add_argument("--n-versions", type=int, default=4)
     ap.add_argument("--n-mb", type=int, default=6)
     ap.add_argument("--policy", default="sync",

@@ -50,6 +50,7 @@ from __future__ import annotations
 import heapq
 import itertools
 import math
+from bisect import bisect_right
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple, Union
 
@@ -227,6 +228,10 @@ class Simulator:
         enqueue_problem(problem, self.qs, self.ds, n_versions=self.n_versions,
                         policy=self.policy, store_real_model=False)
         self.specs = {s.vid: s for s in specs}
+        # sorted join/leave arrays for O(log N) active-fleet counts — the
+        # per-task churn scan is the 100k-1M volunteer bottleneck. Rebuilt
+        # lazily; ChaosSimulator invalidates on every spec mutation.
+        self._active_cache: Optional[Tuple[List[float], List[float]]] = None
         self.sessions: Dict[str, VolunteerSession] = {}
         self.grad_bytes = grad_bytes if grad_bytes is not None else problem.grad_bytes
         self.model_bytes = model_bytes if model_bytes is not None else problem.model_bytes
@@ -316,6 +321,23 @@ class Simulator:
     def _alive(self, vid: str) -> bool:
         s = self.specs[vid]
         return s.join_time <= self._now < s.leave_time
+
+    def _active_count(self, now: float) -> int:
+        """|{s : join_time <= now < leave_time}| in O(log N).
+
+        Exactly ``sum(1 for s in specs if s.join_time <= now < s.leave_time)``
+        — the count of joins at-or-before ``now`` minus the count of leaves
+        at-or-before ``now`` (leaves clamped up to their join so a degenerate
+        empty interval contributes 0, matching the linear scan). The old
+        per-task linear scan made million-volunteer sweeps O(N x tasks)."""
+        cache = self._active_cache
+        if cache is None:
+            specs = self.specs.values()
+            joins = sorted(s.join_time for s in specs)
+            leaves = sorted(max(s.leave_time, s.join_time) for s in specs)
+            cache = self._active_cache = (joins, leaves)
+        joins, leaves = cache
+        return bisect_right(joins, now) - bisect_right(leaves, now)
 
     # wait primitives: poll reschedules, event notifications -------------------
     def _on_notify(self, vid: str, msg) -> None:
@@ -408,8 +430,7 @@ class Simulator:
         spec = self.specs[vid]
         # working set: a lone volunteer cycles model+opt+the whole 128-batch
         # through cache; k volunteers each hold ~1/k of the batch's tasks.
-        active = sum(1 for s in self.specs.values()
-                     if s.join_time <= now < s.leave_time)
+        active = self._active_count(now)
         share = (self.model_bytes
                  + self.grad_bytes
                  + self._batch_bytes() / max(active, 1))
@@ -467,8 +488,7 @@ class Simulator:
         spec = self.specs[vid]
         local = isinstance(work, LocalWork)
         flops = self.map_flops * (t.k if local else 1)
-        active = sum(1 for s in self.specs.values()
-                     if s.join_time <= now < s.leave_time)
+        active = self._active_count(now)
         share = (self.model_bytes + self.grad_bytes
                  + self._batch_bytes() / max(active, 1))
         thr = self.cost.throughput(spec.speed, share)

@@ -1,0 +1,58 @@
+"""The browser-tier thin client (core/browser) against a live gateway."""
+import pytest
+
+from repro.core import browser as browser_mod
+from repro.core.browser import BrowserClient
+from repro.core.gateway import GatewayServer
+from repro.core.simulator import SyntheticProblem
+
+N_VERSIONS, N_MB = 3, 4
+POLICY = "staleness:2"
+
+
+def _problem():
+    return SyntheticProblem(n_versions=N_VERSIONS, n_mb=N_MB)
+
+
+@pytest.fixture
+def server():
+    s = GatewayServer(_problem(), n_versions=N_VERSIONS, policy=POLICY)
+    s.start()
+    yield s
+    s.close()
+
+
+def test_browser_client_refuses_barrier_policy():
+    # refused at construction, BEFORE any connection attempt: port 1 is
+    # never dialed
+    with pytest.raises(ValueError, match="barrierless"):
+        BrowserClient("127.0.0.1", 1, "b0", policy="sync")
+
+
+def test_browser_client_completes_a_run_with_zero_model_pushes(server):
+    client = BrowserClient("127.0.0.1", server.port, "b0", policy=POLICY)
+    final, tasks = client.run(server.n_updates)
+    sent = dict(client.transport.sent)
+    client.close()
+    assert final == server.n_updates == N_VERSIONS * N_MB
+    assert tasks == server.n_updates
+    assert client.transport.dialect == "ws"
+    assert sent.get("SubmitUpdate") == tasks
+    assert "PublishModel" not in sent          # thin: gradients up, never models
+    assert server.done.is_set()
+
+
+def test_browser_client_enforces_thin_contract_at_runtime(server,
+                                                          monkeypatch):
+    """If the volunteer loop ever sent a PublishModel, run() must raise —
+    the contract is checked against the wire histogram, not assumed."""
+    client = BrowserClient("127.0.0.1", server.port, "b1", policy=POLICY)
+
+    def fat_volunteer(transport, vid, n_updates, **kw):
+        transport.sent["PublishModel"] = 1     # simulate a fat client bug
+        return 0, 0
+
+    monkeypatch.setattr(browser_mod, "run_volunteer", fat_volunteer)
+    with pytest.raises(RuntimeError, match="thin-client contract"):
+        client.run(server.n_updates)
+    client.close()

@@ -1,0 +1,127 @@
+"""Session traces (core/traces) + the simulator's O(log N) fleet counting."""
+import pytest
+
+from repro.core.simulator import (CostModel, Simulator, SyntheticProblem,
+                                  VolunteerSpec)
+from repro.core.traces import (DEVICE_MIX, TraceParams, generate_sessions,
+                               trace_stats)
+
+# small but statistically meaningful fleet; a compressed 1-hour "day"
+PARAMS = TraceParams(n_devices=400, horizon=4 * 3600.0, day=3600.0,
+                     session_median=120.0, seed=3)
+
+
+@pytest.fixture(scope="module")
+def specs():
+    return generate_sessions(PARAMS)
+
+
+def test_trace_is_deterministic(specs):
+    again = generate_sessions(PARAMS)
+    assert specs == again
+    # and genuinely sensitive to the seed
+    other = generate_sessions(
+        TraceParams(**{**PARAMS.__dict__, "seed": 4}))
+    assert specs != other
+
+
+def test_sessions_are_valid_intervals(specs):
+    assert specs, "empty trace"
+    for s in specs:
+        assert 0.0 <= s.join_time < s.leave_time <= PARAMS.horizon
+    joins = [s.join_time for s in specs]
+    assert joins == sorted(joins)
+    assert len({s.vid for s in specs}) == len(specs)   # vids unique
+
+
+def test_duty_cycle_matches_online_frac(specs):
+    stats = trace_stats(specs, PARAMS)
+    target = PARAMS.online_frac
+    # Jensen's inequality on the diurnal gap division costs a few percent;
+    # ±20 % still cleanly separates 6.5 h/day from e.g. always-on or 1 h/day
+    assert 0.8 * target < stats.duty_cycle < 1.2 * target, stats.duty_cycle
+
+
+def test_session_lengths_are_heavy_tailed(specs):
+    stats = trace_stats(specs, PARAMS)
+    # lognormal with sigma 1.2: p95 is ~7x the median; anything light-tailed
+    # (exponential ~ 4.3x, uniform ~ 1.9x) fails this
+    assert stats.p95_session / stats.median_session > 3.0
+
+
+def test_warm_start_opens_in_steady_state(specs):
+    online_at_zero = sum(1 for s in specs if s.join_time == 0.0)
+    # ~online_frac of the fleet should already be mid-session at t=0
+    assert online_at_zero > 0.5 * PARAMS.online_frac * PARAMS.n_devices
+
+
+def test_diurnal_amplitude_shapes_arrivals(specs):
+    tide = trace_stats(specs, PARAMS)
+    flat_params = TraceParams(**{**PARAMS.__dict__, "diurnal_amplitude": 0.0})
+    flat = trace_stats(generate_sessions(flat_params), flat_params)
+    assert tide.peak_to_trough > 1.5           # arrivals bunch into "evening"
+    assert tide.peak_to_trough > 1.3 * flat.peak_to_trough
+
+
+def test_device_mixture_fractions(specs):
+    stats = trace_stats(specs, PARAMS)
+    total = sum(stats.speed_counts.values())
+    for cls in DEVICE_MIX:
+        frac = stats.speed_counts.get(cls.speed, 0) / total
+        # session counts track device weights (sessions per device is
+        # speed-independent); generous tolerance for 400 devices
+        assert abs(frac - cls.weight) < 0.12, (cls.name, frac)
+
+
+@pytest.mark.parametrize("bad", [
+    {"n_devices": 0},
+    {"online_frac": 0.0},
+    {"online_frac": 1.0},
+    {"diurnal_amplitude": 1.0},
+    {"diurnal_amplitude": -0.1},
+])
+def test_invalid_params_rejected(bad):
+    with pytest.raises(ValueError):
+        generate_sessions(TraceParams(**{**PARAMS.__dict__, **bad}))
+
+
+# ---------------------------------------------------------------------------
+# the simulator's bisect-based active-fleet counting
+# ---------------------------------------------------------------------------
+
+def _linear_active(specs, now):
+    return sum(1 for s in specs if s.join_time <= now < s.leave_time)
+
+
+def test_active_count_matches_linear_scan(specs):
+    sim = Simulator(SyntheticProblem(n_versions=1, n_mb=1), specs,
+                    cost=CostModel(), mode="event")
+    probes = [0.0, 1.0, PARAMS.horizon / 3, PARAMS.horizon - 1.0,
+              PARAMS.horizon, PARAMS.horizon + 100.0]
+    probes += [s.join_time for s in specs[::37]]       # boundary-exact probes
+    probes += [s.leave_time for s in specs[::41]]
+    for now in probes:
+        assert sim._active_count(now) == _linear_active(specs, now), now
+
+
+def test_active_count_handles_degenerate_intervals():
+    """A spec whose leave precedes its join (can arise from chaos editing
+    leave_time mid-run) must count as never-active, not negative."""
+    specs = [VolunteerSpec("ok", join_time=0.0, leave_time=10.0),
+             VolunteerSpec("gone", join_time=5.0, leave_time=2.0)]
+    sim = Simulator(SyntheticProblem(n_versions=1, n_mb=1), specs,
+                    cost=CostModel(), mode="event")
+    for now, want in ((0.0, 1), (3.0, 1), (6.0, 1), (20.0, 0)):
+        assert sim._active_count(now) == want, now
+
+
+def test_active_count_cache_invalidated_on_spec_mutation(specs):
+    sim = Simulator(SyntheticProblem(n_versions=1, n_mb=1), list(specs),
+                    cost=CostModel(), mode="event")
+    now = PARAMS.horizon / 2
+    before = sim._active_count(now)
+    extra = VolunteerSpec("late", join_time=now - 1.0,
+                          leave_time=PARAMS.horizon)
+    sim.specs[extra.vid] = extra
+    sim._active_cache = None                   # what chaos does on mutation
+    assert sim._active_count(now) == before + 1

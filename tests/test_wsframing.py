@@ -1,0 +1,306 @@
+"""Byte-for-byte tests of the sans-IO RFC 6455 framer (core/wsframing)."""
+import pytest
+
+from repro.core import wsframing as wf
+
+# deterministic mask for byte-exact assertions
+MASK = bytes([0x37, 0xFA, 0x21, 0x3D])
+
+
+def masked_client(payload_mask: bytes = MASK) -> wf.Framer:
+    return wf.client_framer(mask_source=lambda n: payload_mask)
+
+
+# ---------------------------------------------------------------------------
+# handshake
+# ---------------------------------------------------------------------------
+
+def test_accept_key_rfc_vector():
+    # the worked example in RFC 6455 section 1.3
+    assert wf.accept_key("dGhlIHNhbXBsZSBub25jZQ==") == \
+        "s3pPLMBiTxaQ9kYGzzhZRbK+xOo="
+
+
+def upgrade_request(key: str = "dGhlIHNhbXBsZSBub25jZQ==") -> bytes:
+    return (f"GET /train HTTP/1.1\r\n"
+            f"Host: localhost\r\n"
+            f"Upgrade: websocket\r\n"
+            f"Connection: keep-alive, Upgrade\r\n"
+            f"Sec-WebSocket-Key: {key}\r\n"
+            f"Sec-WebSocket-Version: 13\r\n\r\n").encode()
+
+
+def test_server_handshake_accepts_and_computes_key():
+    hs = wf.ServerHandshake()
+    resp = hs.feed(upgrade_request())
+    assert resp is not None
+    assert b"101 Switching Protocols" in resp
+    assert b"Sec-WebSocket-Accept: s3pPLMBiTxaQ9kYGzzhZRbK+xOo=\r\n" in resp
+    assert hs.path == "/train"
+    assert hs.leftover == b""
+
+
+def test_server_handshake_incremental_with_leftover():
+    data = upgrade_request() + b"\x82\x00"      # frame bytes glued on
+    hs = wf.ServerHandshake()
+    assert hs.feed(data[:40]) is None           # mid-header: incomplete
+    assert hs.feed(data[40:100]) is None
+    resp = hs.feed(data[100:])                  # rest + glued frame bytes
+    assert resp is not None and b"101" in resp
+    assert hs.leftover == b"\x82\x00"
+
+
+@pytest.mark.parametrize("mutate", [
+    lambda r: r.replace(b"GET", b"POST"),
+    lambda r: r.replace(b"Upgrade: websocket\r\n", b""),
+    lambda r: r.replace(b"Sec-WebSocket-Key", b"X-Key"),
+    lambda r: r.replace(b"Version: 13", b"Version: 8"),
+    lambda r: r.replace(b"Connection: keep-alive, Upgrade\r\n",
+                        b"Connection: close\r\n"),
+])
+def test_server_handshake_rejects_bad_upgrades(mutate):
+    with pytest.raises(wf.WsProtocolError):
+        wf.ServerHandshake().feed(mutate(upgrade_request()))
+
+
+def test_server_handshake_header_block_cap():
+    hs = wf.ServerHandshake()
+    with pytest.raises(wf.WsProtocolError) as ei:
+        hs.feed(b"GET / HTTP/1.1\r\nX: " + b"a" * 10_000)
+    assert ei.value.code == wf.CLOSE_TOO_BIG
+
+
+def test_client_handshake_round_trip():
+    request, key = wf.client_handshake_request("localhost:1234", "/x")
+    assert request.startswith(b"GET /x HTTP/1.1\r\n")
+    hs = wf.ServerHandshake()
+    resp = hs.feed(request)
+    ch = wf.ClientHandshake(key)
+    assert ch.feed(resp + b"\x89\x00")          # a ping glued to the 101
+    assert ch.done and ch.leftover == b"\x89\x00"
+
+
+def test_client_handshake_rejects_wrong_accept():
+    _, key = wf.client_handshake_request("h", key="dGhlIHNhbXBsZSBub25jZQ==")
+    bad = (b"HTTP/1.1 101 Switching Protocols\r\n"
+           b"Sec-WebSocket-Accept: bogus\r\n\r\n")
+    with pytest.raises(wf.WsProtocolError):
+        wf.ClientHandshake(key).feed(bad)
+    with pytest.raises(wf.WsProtocolError):
+        wf.ClientHandshake(key).feed(b"HTTP/1.1 403 Forbidden\r\n\r\n")
+
+
+def test_preamble_sniff():
+    assert wf.is_ws_preamble(b"GET / HTTP/1.1")
+    assert wf.is_ws_preamble(b"G")              # one byte disambiguates
+    assert not wf.is_ws_preamble(b"")
+    assert not wf.is_ws_preamble(b"\x00\x00\x01\x00")
+    # a native length prefix below MAX_FRAME can never start with 'G'
+    assert (wf.MAX_FRAME).to_bytes(4, "big")[0] < ord("G")
+
+
+# ---------------------------------------------------------------------------
+# framing: byte-exact vectors
+# ---------------------------------------------------------------------------
+
+def test_rfc_masked_hello_example():
+    # RFC 6455 section 5.7: a masked single-frame text "Hello" from client
+    frame = bytes([0x81, 0x85, 0x37, 0xFA, 0x21, 0x3D,
+                   0x7F, 0x9F, 0x4D, 0x51, 0x58])
+    assert wf.server_framer().feed(frame) == [wf.Message(b"Hello")]
+
+
+def test_rfc_unmasked_hello_example():
+    # section 5.7: the unmasked server variant
+    frame = bytes([0x81, 0x05]) + b"Hello"
+    assert wf.client_framer().feed(frame) == [wf.Message(b"Hello")]
+
+
+def test_client_send_bytes_are_exact():
+    frame = masked_client().send_message(b"Hello")
+    want = bytes([0x82, 0x85]) + MASK + bytes(
+        b ^ MASK[i % 4] for i, b in enumerate(b"Hello"))
+    assert frame == want
+    assert wf.server_framer().feed(frame) == [wf.Message(b"Hello")]
+
+
+def test_server_send_is_unmasked():
+    frame = wf.server_framer().send_message(b"Hi")
+    assert frame == bytes([0x82, 0x02]) + b"Hi"
+
+
+@pytest.mark.parametrize("n", [0, 125, 126, 127, 65_535, 65_536, 100_000])
+def test_length_encodings_round_trip(n):
+    payload = bytes(i % 251 for i in range(n))
+    for tx, rx in ((masked_client(), wf.server_framer()),
+                   (wf.server_framer(), wf.client_framer())):
+        assert rx.feed(tx.send_message(payload)) == [wf.Message(payload)]
+
+
+def test_mask_direction_enforced_both_ways():
+    unmasked = wf.server_framer().send_message(b"x")    # no mask bit
+    with pytest.raises(wf.WsProtocolError):
+        wf.server_framer().feed(unmasked)               # client must mask
+    masked = masked_client().send_message(b"x")
+    with pytest.raises(wf.WsProtocolError):
+        wf.client_framer().feed(masked)                 # server must not
+
+
+def test_rsv_bits_rejected():
+    with pytest.raises(wf.WsProtocolError):
+        wf.client_framer().feed(bytes([0xC2, 0x01, 0x40]))
+
+
+def test_unknown_opcode_rejected():
+    with pytest.raises(wf.WsProtocolError):
+        wf.client_framer().feed(bytes([0x83, 0x00]))
+
+
+# ---------------------------------------------------------------------------
+# fragmentation
+# ---------------------------------------------------------------------------
+
+def test_fragmentation_reassembles():
+    payload = bytes(range(256)) * 5
+    frame = masked_client().send_message(payload, fragment_size=100)
+    assert wf.server_framer().feed(frame) == [wf.Message(payload)]
+
+
+def test_fragments_interleaved_with_ping():
+    cf = masked_client()
+    sf = wf.server_framer()
+    frags = cf.send_message(b"abcdef", fragment_size=2)
+    # each masked 2-byte fragment is 8 wire bytes (2 header + 4 mask + 2);
+    # interleave a control frame between fragments (RFC 5.4 allows it)
+    events = []
+    events += sf.feed(frags[:8])                # first fragment exactly
+    events += sf.feed(cf.ping(b"hb"))
+    events += sf.feed(frags[8:])
+    assert events == [wf.Ping(b"hb"), wf.Message(b"abcdef")]
+
+
+def test_continuation_without_start_rejected():
+    frame = masked_client()._frame(wf.OP_CONT, b"x", fin=True)
+    with pytest.raises(wf.WsProtocolError):
+        wf.server_framer().feed(frame)
+
+
+def test_new_data_frame_mid_fragment_rejected():
+    cf = masked_client()
+    sf = wf.server_framer()
+    sf.feed(cf._frame(wf.OP_BINARY, b"a", fin=False))
+    with pytest.raises(wf.WsProtocolError):
+        sf.feed(cf._frame(wf.OP_BINARY, b"b", fin=True))
+
+
+def test_fragmented_control_frame_rejected():
+    frame = masked_client()._frame(wf.OP_PING, b"x", fin=False)
+    with pytest.raises(wf.WsProtocolError):
+        wf.server_framer().feed(frame)
+
+
+def test_oversize_control_frame_rejected():
+    frame = masked_client()._frame(wf.OP_PING, b"x" * 126)
+    with pytest.raises(wf.WsProtocolError):
+        wf.server_framer().feed(frame)
+
+
+# ---------------------------------------------------------------------------
+# torn delivery: resync at every split point
+# ---------------------------------------------------------------------------
+
+def test_byte_by_byte_feed_equals_one_shot():
+    cf = masked_client()
+    stream = (cf.send_message(b"first") + cf.ping(b"p")
+              + cf.send_message(bytes(range(200)), fragment_size=64)
+              + cf.close(wf.CLOSE_NORMAL, b"done"))
+    one_shot = wf.server_framer().feed(stream)
+    dribble = wf.server_framer()
+    events = []
+    for i in range(len(stream)):
+        events.extend(dribble.feed(stream[i:i + 1]))
+    assert events == one_shot
+    assert events == [wf.Message(b"first"), wf.Ping(b"p"),
+                      wf.Message(bytes(range(200))),
+                      wf.Closed(wf.CLOSE_NORMAL, b"done")]
+
+
+def test_mid_frame_flag_tracks_partial_input():
+    sf = wf.server_framer()
+    frame = masked_client().send_message(b"hello world")
+    assert not sf.mid_frame
+    sf.feed(frame[:5])
+    assert sf.mid_frame                          # header consumed, body not
+    sf.feed(frame[5:])
+    assert not sf.mid_frame
+    # a pending fragmented message also counts as mid-frame
+    sf.feed(masked_client()._frame(wf.OP_BINARY, b"a", fin=False))
+    assert sf.mid_frame
+
+
+# ---------------------------------------------------------------------------
+# size caps: refused before allocation
+# ---------------------------------------------------------------------------
+
+def test_oversize_frame_rejected_with_1009():
+    sf = wf.Framer(masking=False, require_masked=True, max_frame=64)
+    cf = wf.Framer(masking=True, require_masked=False, max_frame=1 << 40,
+                   mask_source=lambda n: MASK)
+    with pytest.raises(wf.WsProtocolError) as ei:
+        sf.feed(cf.send_message(b"x" * 65))
+    assert ei.value.code == wf.CLOSE_TOO_BIG
+
+
+def test_oversize_header_rejected_without_payload():
+    # only the 10-byte header of a "1 TB" frame arrives: the length field
+    # alone must kill it (no waiting for, or buffering of, the payload)
+    sf = wf.server_framer()
+    header = bytes([0x82, 0x80 | 127]) + (1 << 40).to_bytes(8, "big") + MASK
+    with pytest.raises(wf.WsProtocolError) as ei:
+        sf.feed(header)
+    assert ei.value.code == wf.CLOSE_TOO_BIG
+
+
+def test_fragment_total_capped():
+    sf = wf.Framer(masking=False, require_masked=True, max_frame=100)
+    cf = wf.Framer(masking=True, require_masked=False,
+                   mask_source=lambda n: MASK)
+    sf.feed(cf._frame(wf.OP_BINARY, b"x" * 60, fin=False))
+    with pytest.raises(wf.WsProtocolError) as ei:
+        sf.feed(cf._frame(wf.OP_CONT, b"x" * 60, fin=True))
+    assert ei.value.code == wf.CLOSE_TOO_BIG
+
+
+def test_send_refuses_oversize_message():
+    f = wf.Framer(masking=False, require_masked=True, max_frame=10)
+    with pytest.raises(wf.WsProtocolError):
+        f.send_message(b"x" * 11)
+
+
+# ---------------------------------------------------------------------------
+# close handshake
+# ---------------------------------------------------------------------------
+
+def test_close_frame_parses_code_and_reason():
+    frame = masked_client().close(wf.CLOSE_TOO_BIG, b"fat")
+    events = wf.server_framer().feed(frame)
+    assert events == [wf.Closed(wf.CLOSE_TOO_BIG, b"fat")]
+
+
+def test_close_without_code():
+    events = wf.server_framer().feed(
+        masked_client()._frame(wf.OP_CLOSE, b""))
+    assert events == [wf.Closed(None, b"")]
+
+
+def test_one_byte_close_payload_rejected():
+    with pytest.raises(wf.WsProtocolError):
+        wf.server_framer().feed(masked_client()._frame(wf.OP_CLOSE, b"\x03"))
+
+
+def test_framer_ignores_input_after_close():
+    sf = wf.server_framer()
+    cf = masked_client()
+    sf.feed(cf.close())
+    assert sf.closed
+    assert sf.feed(cf.send_message(b"late")) == []
