@@ -1,0 +1,80 @@
+"""Model-checker throughput benchmark: states/sec and reduction factor.
+
+One record per CI policy world (the same three ``repro.analysis.mc``
+explores in the MC CI leg), exploring under a fixed state/time budget and
+reporting what the exhaustive-search machinery actually achieved: states
+stored, transitions executed, dedup + partial-order savings (the reduction
+factor), search depth, and raw states/sec. Successive PRs diff these in
+``BENCH_mc.json`` — a protocol change that silently explodes the state
+space, or an optimization that regresses throughput, shows up as a record
+delta rather than a mysteriously slower CI leg.
+
+CSV: name,policy,states,transitions,states_per_sec,depth,reduction,truncated
+
+Usage: PYTHONPATH=src python benchmarks/mc.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.analysis.mc import DEFAULT_POLICIES, default_config, explore
+
+HEADER = ("name,policy,states,transitions,states_per_sec,depth,"
+          "reduction,truncated")
+
+
+def run_point(policy: str, *, max_states: int, max_depth: int,
+              max_seconds: float) -> dict:
+    cfg = default_config(policy)
+    t0 = time.time()
+    report = explore(cfg, max_states=max_states, max_depth=max_depth,
+                     max_seconds=max_seconds, first_violation=False)
+    wall = time.time() - t0
+    s = report.stats
+    assert report.ok, [v.invariant for v in report.violations]
+    label = policy.replace(":", "").replace(".", "")
+    return {
+        "name": f"mc_{label}",
+        "params": {
+            "policy": policy,
+            "n_volunteers": cfg.n_volunteers,
+            "max_states": max_states,
+            "max_depth": max_depth,
+            "states": s.states,
+            "transitions": s.transitions,
+            "dedup_hits": s.dedup_hits,
+            "symmetry_hits": s.symmetry_hits,
+            "por_skipped": s.por_skipped,
+            "states_per_sec": round(s.states_per_sec, 1),
+            "depth": s.max_depth,
+            "reduction_factor": round(s.reduction_factor, 2),
+            "truncated": int(s.truncated),
+        },
+        "makespan": round(wall, 3),
+        "events": s.states,
+        "bytes": None,
+    }
+
+
+def main(quick: bool = True):
+    budget = dict(max_states=2000 if quick else 20000,
+                  max_depth=24 if quick else 50,
+                  max_seconds=6.0 if quick else 60.0)
+    print(HEADER)
+    records = []
+    for policy in DEFAULT_POLICIES:
+        rec = run_point(policy, **budget)
+        p = rec["params"]
+        print(f"{rec['name']},{policy},{p['states']},{p['transitions']},"
+              f"{p['states_per_sec']},{p['depth']},{p['reduction_factor']},"
+              f"{p['truncated']}")
+        records.append(rec)
+    return records
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    main(quick=args.quick)

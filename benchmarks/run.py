@@ -32,7 +32,7 @@ import traceback
 
 # suites whose return value is a list of perf records to persist
 BENCH_RECORD_SUITES = ("volunteer_scaling", "rebalance", "staleness",
-                       "browser_scale")
+                       "browser_scale", "mc")
 
 # the BENCH_<name>.json record schema: field -> accepted types. ``params`` is
 # free-form by design (each suite names its own axes) but must be a dict;
@@ -121,9 +121,9 @@ def main(argv=None) -> int:
     reduced = not args.full
 
     from benchmarks import (browser_scale, classroom, cluster_scaling,
-                            compression, dynamism, kernel_bench, rebalance,
-                            roofline, sequential_baseline, staleness,
-                            timeline, volunteer_scaling)
+                            compression, dynamism, kernel_bench, mc,
+                            rebalance, roofline, sequential_baseline,
+                            staleness, timeline, volunteer_scaling)
     suites = [
         ("volunteer_scaling", lambda: volunteer_scaling.main(quick=reduced)),
         ("cluster_scaling", lambda: cluster_scaling.main(reduced)),
@@ -137,6 +137,7 @@ def main(argv=None) -> int:
         ("rebalance", lambda: rebalance.main(quick=reduced)),
         ("staleness", lambda: staleness.main(reduced)),
         ("browser_scale", lambda: browser_scale.main(quick=reduced)),
+        ("mc", lambda: mc.main(quick=reduced)),
     ]
     failed = []
     for name, fn in suites:

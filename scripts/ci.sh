@@ -8,21 +8,40 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 # static analysis first — cheapest leg, fails fastest (ISSUE 6). ruff and
-# mypy are optional extras (requirements-dev.txt): permissive baselines in
-# pyproject.toml, skipped when not installed, like hypothesis.
-if command -v ruff >/dev/null 2>&1; then
+# mypy (version-pinned in requirements-dev.txt) are REQUIRED legs in CI:
+# when $CI is set their absence is a failure, not a skip. Locally they stay
+# optional extras — skipped with a pointer at the install command.
+require_or_skip() {
+  local tool="$1"
+  if command -v "$tool" >/dev/null 2>&1; then
+    return 0
+  fi
+  if [ -n "${CI:-}" ]; then
+    echo "# $tool is a required CI leg but is not installed" \
+         "(pip install -r requirements-dev.txt)" >&2
+    exit 1
+  fi
+  echo "# $tool not installed — skipping (pip install -r requirements-dev.txt)"
+  return 1
+}
+if require_or_skip ruff; then
   ruff check src tests benchmarks scripts
-else
-  echo "# ruff not installed — skipping (pip install -r requirements-dev.txt)"
 fi
-if command -v mypy >/dev/null 2>&1; then
+if require_or_skip mypy; then
   mypy src/repro
-else
-  echo "# mypy not installed — skipping (pip install -r requirements-dev.txt)"
 fi
 # the repo-native pass is NOT optional: layering linter, lock-order race
 # detector, wire-schema exhaustiveness checker (strict = stale ignores fail)
 python -m repro.analysis --strict
+
+# bounded model checking (ISSUE 8): explore each CI policy's fault world —
+# message reordering, drops/dups, lease expiry, crash/rejoin, leave,
+# heartbeat/release races — against the full invariant catalog; any
+# violation prints a minimized, replayable counterexample. Three legs, one
+# per aggregation policy, each within a <20 s budget (<60 s total).
+python -m repro.analysis --only mc --mc-policy sync
+python -m repro.analysis --only mc --mc-policy staleness:1
+python -m repro.analysis --only mc --mc-policy local:2
 
 python -m pytest -x -q "$@"
 

@@ -1,16 +1,24 @@
 """repro.analysis — the repo-native static-analysis layer.
 
-Three passes, each runnable standalone or together via
+Four passes, each runnable standalone or together via
 ``python -m repro.analysis`` (CI runs ``--strict``, which also fails on
 stale ignore comments):
 
 - ``rules``  — layering & invariant linter over ``src/repro/core/``
   (REPRO-TIME / REPRO-LAYER / REPRO-SESSION / REPRO-EXCEPT).
 - ``locks``  — lock-order race detector: static acquisition-graph cycle
-  check, plus a runtime half (``repro.analysis.runtime``) active during
+  check with transitive same-module call resolution, plus a runtime half
+  (``repro.analysis.runtime``) active during
   ``ANALYSIS_INSTRUMENT=1 gateway --smoke`` (LOCK-ORDER / LOCK-SELF /
   LOCK-BLOCK / PARKED-HOLDER).
-- ``schema`` — wire-schema exhaustiveness checker (SCHEMA-*).
+- ``schema`` — wire-schema exhaustiveness checker (SCHEMA-*), including
+  the SCHEMA-MC cross-check that every wire type is modeled by the model
+  checker.
+- ``mc``     — bounded explicit-state model checker (``repro.analysis.mc``,
+  opt-in via ``--mc``): exhaustive exploration of real sessions against a
+  real endpoint under message reordering, drops/dups, lease expiry,
+  crash/rejoin, and heartbeat/release races, checking the invariant
+  catalog and shrinking any counterexample to a replayable trace (MC-*).
 
 Rule catalog and how-to: docs/analysis.md. Findings can be excused in
 place with ``# analysis: ignore[RULE-ID]``.

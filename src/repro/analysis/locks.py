@@ -5,10 +5,12 @@ ASTs and fails on cycles. Nodes are lock attributes assigned from a lock
 factory (``threading.Lock()``/``RLock()`` or the gateway's ``_make_lock``
 seam), named ``<module>.<attr>``; an edge ``a -> b`` means some code path
 acquires ``b`` while holding ``a`` — from nested ``with`` statements, from
-bare ``.acquire()`` calls, and from one level of intra-module call
-resolution (a ``with self._lock:`` body calling a method that itself takes
-another lock contributes the edge, transitively through same-module
-helpers). Any cycle is a potential deadlock: two threads entering the cycle
+bare ``.acquire()`` calls, and from transitive intra-module call resolution:
+a ``with self._lock:`` body calling a method that (through any bounded,
+cycle-safe chain of same-module helpers, lock-free intermediates included)
+takes another lock contributes the edge — a helper that takes no lock itself
+cannot hide the locks past it. Any cycle is a potential deadlock: two
+threads entering the cycle
 from different ends can each hold what the other needs, and no test will
 reliably catch the interleaving.
 
@@ -55,6 +57,20 @@ def _call_name(func: ast.AST) -> Optional[str]:
     return None
 
 
+def _resolvable(func: ast.AST) -> bool:
+    """True when a call may target a same-module function/method: a bare
+    name ``f()`` or a ``self.f()``/``cls.f()`` method call. Calls through any
+    other receiver (``qs.snapshot()``, ``self.qs.lease()``) are a foreign
+    object's methods — resolving those by simple name would conflate e.g.
+    ``QueueServer.snapshot`` with the gateway's own ``snapshot``."""
+    if isinstance(func, ast.Name):
+        return True
+    if isinstance(func, ast.Attribute):
+        return isinstance(func.value, ast.Name) and \
+            func.value.id in ("self", "cls")
+    return False
+
+
 def _lock_attrs(tree: ast.AST) -> Set[str]:
     """Attribute/variable names assigned from a lock factory."""
     names = set()
@@ -80,12 +96,15 @@ def _lock_of(expr: ast.AST, lockset: Set[str]) -> Optional[str]:
 
 class _FnInfo:
     """Per-function facts: locks it acquires anywhere, direct nesting edges,
-    and calls made while holding locks (resolved transitively later)."""
+    calls made while holding locks (the edge sources), and ALL calls made
+    anywhere in the body (the resolution graph — a lock-free helper in the
+    middle of a call chain must not hide the locks past it)."""
 
     def __init__(self):
         self.acquires: Set[str] = set()
         self.edges: Set[Tuple[str, str]] = set()
         self.calls_while_held: List[Tuple[Tuple[str, ...], str]] = []
+        self.calls: Set[str] = set()
 
 
 _SCOPES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef, ast.Lambda)
@@ -124,8 +143,10 @@ def _scan(node: ast.AST, held: Tuple[str, ...], lockset: Set[str],
                 for h in held:
                     info.edges.add((h, name))
                 info.acquires.add(name)
-        elif nm is not None and held and nm != "release":
-            info.calls_while_held.append((held, nm))
+        elif nm is not None and nm != "release" and _resolvable(node.func):
+            info.calls.add(nm)
+            if held:
+                info.calls_while_held.append((held, nm))
     for child in ast.iter_child_nodes(node):
         _scan(child, held, lockset, qual, info)
 
@@ -147,13 +168,19 @@ def _scan_file(path: pathlib.Path):
             for st in node.body:
                 _scan(st, (), lockset, qual, info)
     # resolve calls made under a held lock: the callee's transitive acquires
-    # (same module, matched by simple name) become edges from each held lock
+    # (same module, matched by simple name) become edges from each held lock.
+    # Resolution follows ALL calls — including ones made with no lock held —
+    # so a lock-free helper between the holder and the acquirer cannot hide
+    # the edge; it is cycle-safe (``seen``) and depth-bounded (recursion
+    # deeper than any sane same-module helper chain stops contributing)
+    _MAX_RESOLVE_DEPTH = 16
+
     def all_acquires(name: str, seen: frozenset) -> Set[str]:
         info = functions.get(name)
-        if info is None or name in seen:
+        if info is None or name in seen or len(seen) >= _MAX_RESOLVE_DEPTH:
             return set()
         acq = set(info.acquires)
-        for _, callee in info.calls_while_held:
+        for callee in info.calls:
             acq |= all_acquires(callee, seen | {name})
         return acq
 

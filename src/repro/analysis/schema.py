@@ -21,6 +21,11 @@ bodies) must therefore be:
 - **SCHEMA-DOC** — listed (as a backticked name) in docs/protocol.md.
   ``scripts/check_docs.py`` delegates its wire-type check here so the two
   can't drift.
+- **SCHEMA-MC** — modeled by the model checker: every REQUEST and
+  NOTIFICATION type must map to an exploration action in
+  ``repro.analysis.mc.COVERED_MESSAGES``, so the protocol cannot grow a
+  message the exhaustive search silently never exercises (the coverage test
+  in tests/test_mc.py proves each mapping is real, not just declared).
 
 Unlike the other passes this one imports the code under test — round-trip
 and snapshot coverage are semantic claims AST inspection can't make.
@@ -42,6 +47,7 @@ RULES = {
     "SCHEMA-DISPATCH": "request not dispatched / reply never constructed",
     "SCHEMA-SNAPSHOT": "task body does not survive snapshot/restore",
     "SCHEMA-DOC": "wire type missing from docs/protocol.md",
+    "SCHEMA-MC": "wire type not modeled by any model-checker action",
 }
 
 _PROTO = "protocol.py"
@@ -205,9 +211,32 @@ def check_doc(doc_path=None,
     return out
 
 
+def check_mc_coverage(
+        covered: Optional[Dict[str, str]] = None) -> List[Violation]:
+    """Every REQUEST/NOTIFICATION wire type must map to a model-checker
+    action in ``repro.analysis.mc.COVERED_MESSAGES`` — otherwise the
+    protocol has grown a message the exhaustive search never exercises.
+    Replies are excluded: they only exist as the return values of the
+    requests that elicit them, so request coverage subsumes them. ``covered``
+    overrides the shipped map (the fixture tests inject a partial one)."""
+    if covered is None:
+        from repro.analysis.mc import COVERED_MESSAGES
+        covered = COVERED_MESSAGES
+    out = []
+    for cls in (*protocol.REQUEST_TYPES, *protocol.NOTIFICATION_TYPES):
+        name = cls.__name__
+        if not str(covered.get(name, "") or "").strip():
+            out.append(Violation(
+                "SCHEMA-MC", _PROTO, 0,
+                f"wire type {name} has no model-checker action mapping — "
+                f"add it to repro.analysis.mc.COVERED_MESSAGES and model "
+                f"the action that sends it"))
+    return out
+
+
 def run(doc_path=None,
         extra_types: Tuple[type, ...] = ()) -> List[Violation]:
-    """All five checks over the registry (plus ``extra_types``, which tests
+    """All six checks over the registry (plus ``extra_types``, which tests
     use to inject rogue types without touching the global registry)."""
     types = registered_types()
     for cls in extra_types:
@@ -218,4 +247,5 @@ def run(doc_path=None,
     out.extend(check_dispatch())
     out.extend(check_snapshot())
     out.extend(check_doc(doc_path, types))
+    out.extend(check_mc_coverage())
     return out

@@ -52,7 +52,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, Optional, Tuple
 
 from repro.checkpoint import serialize
 from repro.core.aggregation import AggregationPolicy, SyncBSP, make_policy
@@ -421,6 +421,12 @@ class ServerEndpoint:
     def set_notify(self, notify: Callable[[str, Any], None]) -> None:
         self._notify = notify
 
+    def watch_view(self) -> Tuple[Tuple[str, int], ...]:
+        """Live ``(consumer, version)`` watches, sorted. Introspection hook
+        for ``repro.analysis.mc`` (no-lost-wake invariant + state
+        fingerprint); the watcher callbacks themselves stay private."""
+        return tuple(sorted(self._watch_keys))
+
     def disconnect(self, consumer: str) -> int:
         """Server-side cleanup for a consumer whose CONNECTION died (not a
         ``Bye``: that is the volunteer leaving voluntarily, and it also
@@ -642,6 +648,37 @@ class VolunteerSession:
         self._rtags = []
         self._handed = False
         self._base = self._apply_version = -1
+
+    # -- introspection (repro.analysis.mc) ----------------------------------
+    @property
+    def holding(self) -> bool:
+        """True while a leased ticket is held (heartbeat/release are legal)."""
+        return self.tag is not None
+
+    @property
+    def computing(self) -> bool:
+        """True while compute is handed out and not yet finished."""
+        return self._handed
+
+    def state_view(self) -> Dict[str, Any]:
+        """The session's protocol-visible state as plain data, for the model
+        checker's state fingerprint. ``load_view`` is the inverse; together
+        they let an explorer branch a session without deep-copying the
+        transport it is bound to."""
+        return {"tag": self.tag, "task": self.task,
+                "lease_latest": self.lease_latest,
+                "rtags": list(self._rtags), "handed": self._handed,
+                "base": self._base, "apply_version": self._apply_version}
+
+    def load_view(self, view: Dict[str, Any]) -> None:
+        """Restore state captured by ``state_view`` (model-checker replay)."""
+        self.tag = view["tag"]
+        self.task = view["task"]
+        self.lease_latest = view["lease_latest"]
+        self._rtags = list(view["rtags"])
+        self._handed = view["handed"]
+        self._base = view["base"]
+        self._apply_version = view["apply_version"]
 
     # -- protocol: lease ----------------------------------------------------
     def lease(self, now: float):

@@ -301,6 +301,14 @@ class Queue:
     def peek_all(self) -> List[Any]:
         return [b for _, b in self._pending]
 
+    def waiter_view(self) -> Dict[str, Tuple[str, ...]]:
+        """Registered waiter consumers in FIFO order, per kind. Introspection
+        hook for ``repro.analysis.mc`` (no-lost-wake invariant, state
+        fingerprint, waiter re-registration on restore); the one-shot
+        callbacks themselves stay private."""
+        return {"any": tuple(c for c, _ in self._waiters),
+                "publish": tuple(c for c, _ in self._pub_waiters)}
+
     def check_invariants(self) -> None:
         """Structural invariants that must hold at every quiescent point.
 
@@ -538,6 +546,10 @@ class QueueServer:
 
     def depth(self, qname: str) -> int:
         return self.declare(qname).depth
+
+    def waiter_views(self) -> Dict[str, Dict[str, Tuple[str, ...]]]:
+        """Per-queue ``waiter_view``s, sorted by queue name (model checker)."""
+        return {n: self.queues[n].waiter_view() for n in sorted(self.queues)}
 
     @property
     def total_requeued(self) -> int:

@@ -1,0 +1,35 @@
+"""Seeded fixture: a lock-order inversion hidden behind a LOCK-FREE helper.
+
+``forward`` nests a -> b only through ``middle`` — a method that takes no
+lock itself, so single-level call resolution (resolving only calls made
+while a lock is held inside the callee) never reaches ``inner_b`` and the
+inversion against ``backward`` goes unreported. Transitive resolution must
+surface the cycle: forward holds _a and (two calls deep) takes _b, while
+backward holds _b and takes _a.
+"""
+import threading
+
+
+class HiddenInversion:
+    def __init__(self):
+        self._a = threading.Lock()
+        self._b = threading.Lock()
+
+    # -- the a -> b path, laundered through a lock-free intermediary --------
+    def inner_b(self):
+        with self._b:
+            pass
+
+    def middle(self):
+        # no lock taken here: this frame is invisible to a depth-1 resolver
+        self.inner_b()
+
+    def forward(self):
+        with self._a:
+            self.middle()
+
+    # -- the b -> a path, direct --------------------------------------------
+    def backward(self):
+        with self._b:
+            with self._a:
+                pass

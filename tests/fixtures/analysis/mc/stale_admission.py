@@ -1,0 +1,39 @@
+"""Mutation fixture: the bounded-staleness admission off-by-one.
+
+The historical bug: the admission predicate compared ``latest - computed_at
+<= staleness + 1`` (an inclusive-bound slip), so under ``staleness:1`` a
+gradient computed at v0 could be applied onto v2 — staleness 2, one more
+than the policy's declared SSP guarantee. Nothing crashes: training quietly
+converges worse, which is why only an exhaustive interleaving search (or a
+sharp-eyed reviewer) catches it.
+
+``configure()`` plants the buggy policy via ``MCConfig.policy_object``; the
+checker must report an ``admission-soundness`` violation whose shrunk trace
+is pure protocol moves — three volunteers racing their commits, no fault
+injection needed. The honest ``staleness:1`` policy on the same world must
+explore clean.
+"""
+from dataclasses import dataclass
+
+from repro.analysis.mc import MCConfig
+from repro.core.aggregation import BoundedStaleness
+
+
+@dataclass(frozen=True)
+class OffByOneStaleness(BoundedStaleness):
+    """BoundedStaleness with the seeded admission slip re-introduced."""
+
+    def admit(self, computed_at: int, latest: int) -> bool:
+        return (latest - computed_at) <= self.staleness + 1   # the bug
+
+
+def configure() -> MCConfig:
+    return MCConfig(
+        policy="staleness:1", n_volunteers=3, n_versions=3, n_mb=2,
+        visibility_timeout=10.0,
+        policy_object=OffByOneStaleness(staleness=1),
+    )
+
+
+#: ample budget — the violation surfaces within ~25 states, fault-free
+BUDGET = {"max_states": 30000, "max_depth": 24, "max_seconds": 30.0}

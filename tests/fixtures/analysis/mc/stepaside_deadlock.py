@@ -1,0 +1,33 @@
+"""Mutation fixture: the PR 5 step-aside deadlock, as a checkable world.
+
+The historical bug: a volunteer that reached the reduce barrier parked on
+the results queue while HOLDING the reduce lease, with no step-aside path.
+If the only other volunteer crashed holding an unfinished map lease, expiry
+requeued that map ticket — but nobody could take it: the survivor was parked
+on a publish-kind wait for a barrier that could never fill, over a transport
+whose wake for the requeued task it never subscribed to. The fleet wedged
+with work pending: a textbook lost-progress deadlock the gateway fixed by
+releasing the held ticket (``release(front=False)``) before parking.
+
+``configure()`` rebuilds exactly that world minus the fix
+(``allow_release=False``): the checker must report a ``deadlock-freedom``
+violation with a shrunk, replayable trace. Flipping ``allow_release=True``
+on the same world (the shipped engines' behavior) must explore clean — the
+regression tests assert both directions.
+"""
+from repro.analysis.mc import MCConfig
+
+
+def configure() -> MCConfig:
+    return MCConfig(
+        policy="sync", n_volunteers=2, n_versions=2, n_mb=2,
+        visibility_timeout=10.0, crashable=("w0",), max_crashes=1,
+        rejoin=False,               # the crashed incarnation never returns
+        allow_release=False,        # the PR 5 bug: no step-aside escape
+    )
+
+
+#: the budget at which the deadlock is known reachable (depth ~15); tests
+#: and the CLI fixture leg pass these so discovery does not depend on the
+#: driver's defaults
+BUDGET = {"max_states": 30000, "max_depth": 16, "max_seconds": 30.0}

@@ -1,0 +1,16 @@
+"""Seeded fixture: a model-checker coverage map with holes.
+
+A copy of ``repro.analysis.mc.COVERED_MESSAGES`` with three entries broken
+in the three ways SCHEMA-MC must catch — ``LeaseReq`` deleted outright,
+``Wake`` mapped to an empty string, ``SubmitUpdate`` mapped to whitespace —
+while everything else stays covered, so the check must flag exactly those
+three and stay silent on the rest.
+"""
+from repro.analysis.mc import COVERED_MESSAGES
+
+COVERED = dict(COVERED_MESSAGES)
+del COVERED["LeaseReq"]
+COVERED["Wake"] = ""
+COVERED["SubmitUpdate"] = "   "
+
+MISSING = ("LeaseReq", "SubmitUpdate", "Wake")

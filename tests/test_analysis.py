@@ -107,6 +107,36 @@ def test_static_graph_sees_gateway_locks():
                    for e in edges), edges
 
 
+def test_static_cycle_found_through_lock_free_intermediate():
+    # depth-2 chain: forward holds _a -> calls a LOCK-FREE helper -> helper
+    # takes _b; only transitive call resolution sees the inversion
+    vs = locks.check([FIXTURES / "lock_depth2.py"])
+    assert [v.rule for v in vs] == ["LOCK-ORDER"]
+    assert "lock_depth2._a" in vs[0].message
+    assert "lock_depth2._b" in vs[0].message
+
+
+def test_foreign_receiver_calls_do_not_resolve(tmp_path):
+    # self.other.snapshot() must NOT be conflated with this module's own
+    # snapshot() — the gateway/_encode_snapshot false positive
+    p = tmp_path / "foreign.py"
+    p.write_text(
+        "import threading\n"
+        "class S:\n"
+        "    def __init__(self, other):\n"
+        "        self._a = threading.Lock()\n"
+        "        self._b = threading.Lock()\n"
+        "        self.other = other\n"
+        "    def snapshot(self):\n"
+        "        with self._b:\n"
+        "            pass\n"
+        "    def outer(self):\n"
+        "        with self._a:\n"
+        "            self.other.snapshot()\n")
+    _, edges = locks.lock_graph([p])
+    assert ("foreign._a", "foreign._b") not in edges
+
+
 def test_transitive_edges_via_same_module_calls(tmp_path):
     p = tmp_path / "nested.py"
     p.write_text(
@@ -273,6 +303,40 @@ def test_schema_samples_construct_every_registered_type():
         assert type(inst).__name__ == name
 
 
+def test_schema_mc_coverage_fires_on_partial_ledger():
+    fx = _load_fixture("mc_partial_coverage")
+    vs = schema.check_mc_coverage(fx.COVERED)
+    assert all(v.rule == "SCHEMA-MC" for v in vs)
+    assert sorted(m for v in vs for m in fx.MISSING if m in v.message) == \
+        sorted(fx.MISSING)
+    assert len(vs) == len(fx.MISSING)
+
+
+# ---------------------------------------------------------------------------
+# the mc pass: seeded historical bugs rediscovered with replayable repros
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fixture,rule,invariant", [
+    ("mc/stepaside_deadlock.py", "MC-DEADLOCK", "deadlock-freedom"),
+    ("mc/stale_admission.py", "MC-ADMIT", "admission-soundness"),
+])
+def test_mc_rediscovers_seeded_bug_with_replayable_repro(fixture, rule,
+                                                         invariant):
+    from repro.analysis.mc import replay_payload, run_mc
+    path = str(FIXTURES / fixture)
+    vs = run_mc(fixture=path, max_states=30000, max_depth=24,
+                max_seconds=30.0)
+    assert vs, "seeded bug not rediscovered"
+    assert vs[0].rule == rule
+    assert "minimized" in vs[0].message
+    # the inline payload is a complete runnable repro: parse it back out and
+    # replay it through the chaos harness entry point
+    import json as _json
+    payload = _json.loads(vs[0].message[vs[0].message.index('{"'):])
+    outcome = replay_payload(payload)
+    assert outcome.invariant == invariant
+
+
 # ---------------------------------------------------------------------------
 # the CLI contract
 # ---------------------------------------------------------------------------
@@ -300,6 +364,8 @@ def test_cli_strict_clean_on_shipped_tree():
      "tests/fixtures/analysis/lock_inversion.py"),
     ("--only", "schema", "--doc",
      "tests/fixtures/analysis/protocol_missing.md"),
+    ("--mc", "--mc-fixture", "tests/fixtures/analysis/mc/stale_admission.py",
+     "--mc-depth", "24"),
 ])
 def test_cli_nonzero_on_each_violation_fixture(argv):
     res = _cli(*argv)

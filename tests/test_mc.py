@@ -1,0 +1,225 @@
+"""repro.analysis.mc — the model checker itself: exhaustive clean runs,
+seeded-bug rediscovery with shrunk bit-deterministic counterexamples,
+capture/restore soundness, symmetry/dedup fingerprints, and the honesty of
+the COVERED_MESSAGES wire-coverage ledger."""
+import importlib.util
+import json
+import pathlib
+
+import pytest
+
+from repro.analysis.mc import (COVERED_MESSAGES, DEADLOCK, DEFAULT_INVARIANTS,
+                               Invariant, MCConfig, MCWorld, check_all,
+                               explore, fingerprint, replay, replay_payload,
+                               repro_payload, repro_script, shrink)
+from repro.core.chaos import replay_mc_trace
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+MC_FIXTURES = ROOT / "tests" / "fixtures" / "analysis" / "mc"
+
+
+def _fixture(name: str):
+    p = MC_FIXTURES / f"{name}.py"
+    spec = importlib.util.spec_from_file_location(name, p)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+TINY = MCConfig(policy="sync", n_volunteers=2, n_versions=1, n_mb=2,
+                visibility_timeout=10.0)
+
+
+# ---------------------------------------------------------------------------
+# exhaustive clean exploration
+# ---------------------------------------------------------------------------
+
+def test_tiny_sync_world_explores_exhaustively_clean():
+    # unbounded expiry makes every world inexhaustible (expire/re-lease
+    # cycles never dedup); a finite expiry budget turns the tiny world into
+    # a genuinely exhaustive search
+    cfg = MCConfig.from_json({**TINY.to_json(), "max_expiries": 1})
+    report = explore(cfg, max_states=50000, max_depth=60, max_seconds=60.0)
+    s = report.stats
+    assert report.ok, report.violations
+    assert not s.truncated, "tiny world must exhaust, not truncate"
+    assert s.completes > 0, "no interleaving reached the version target"
+    assert s.dedup_hits > 0, "dedup never fired on a converging lattice"
+
+
+def test_expiry_budget_gates_the_expire_fault():
+    cfg = MCConfig.from_json({**TINY.to_json(), "max_expiries": 0})
+    world = MCWorld(cfg)
+    world.apply(("lease", "w0"))
+    assert world.qs.next_deadline() is not None
+    assert ("expire",) not in world.enabled_actions()
+    unbounded = MCWorld(TINY)
+    unbounded.apply(("lease", "w0"))
+    assert ("expire",) in unbounded.enabled_actions()
+
+
+def test_explore_reports_por_savings_with_faults():
+    cfg = MCConfig(policy="sync", n_volunteers=2, n_versions=1, n_mb=2,
+                   visibility_timeout=10.0, max_drops=1, max_dups=1)
+    report = explore(cfg, max_states=1500, max_depth=30, max_seconds=8.0)
+    assert report.ok, report.violations
+    assert report.stats.reduction_factor > 1.0
+
+
+# ---------------------------------------------------------------------------
+# seeded historical bugs: rediscovery + shrunk replayable counterexamples
+# ---------------------------------------------------------------------------
+
+def test_stepaside_deadlock_rediscovered_and_fix_is_clean():
+    fx = _fixture("stepaside_deadlock")
+    cfg = fx.configure()
+    report = explore(cfg, **fx.BUDGET)
+    assert [v.invariant for v in report.violations] == [DEADLOCK]
+    # the shipped engines' behavior (step-aside release) explores clean
+    # under the same bounded budget
+    fixed = MCConfig.from_json({**cfg.to_json(), "allow_release": True})
+    ok = explore(fixed, max_states=2500, max_depth=16, max_seconds=8.0)
+    assert ok.violations == []
+
+
+def test_stale_admission_rediscovered_and_honest_policy_is_clean():
+    fx = _fixture("stale_admission")
+    cfg = fx.configure()
+    report = explore(cfg, **fx.BUDGET)
+    assert [v.invariant for v in report.violations] == ["admission-soundness"]
+    assert "exceeds the declared bound 1" in report.violations[0].message
+    honest = MCConfig.from_json(cfg.to_json())      # policy_object dropped
+    ok = explore(honest, max_states=2500, max_depth=24, max_seconds=8.0)
+    assert ok.violations == []
+
+
+@pytest.mark.parametrize("name", ["stepaside_deadlock", "stale_admission"])
+def test_shrunk_counterexample_replays_bit_deterministically(name):
+    fx = _fixture(name)
+    cfg = fx.configure()
+    report = explore(cfg, **fx.BUDGET)
+    v = report.violations[0]
+    small = shrink(cfg, v.trace, v.invariant)
+    assert 0 < len(small) <= len(v.trace)
+    # 1-minimality: dropping any single remaining action loses the violation
+    for i in range(len(small)):
+        cand = small[:i] + small[i + 1:]
+        assert replay(cfg, cand).invariant != v.invariant, i
+    # bit-determinism: two replays agree on violation, step, AND final state
+    r1 = replay(cfg, small)
+    r2 = replay(cfg, small)
+    assert r1.invariant == v.invariant
+    assert (r1.step, r1.final_fingerprint) == (r2.step, r2.final_fingerprint)
+    # ...and through the chaos harness entry point, from the JSON payload
+    payload = repro_payload(cfg, small, v.invariant, v.message,
+                            fixture=str(MC_FIXTURES / f"{name}.py"))
+    payload = json.loads(json.dumps(payload))       # a real wire round-trip
+    r3 = replay_mc_trace(payload)
+    assert r3.invariant == v.invariant
+    assert r3.final_fingerprint == r1.final_fingerprint
+    script = repro_script(payload)
+    assert "replay_mc_trace" in script
+    assert v.invariant in script
+
+
+# ---------------------------------------------------------------------------
+# capture/restore and fingerprints
+# ---------------------------------------------------------------------------
+
+def test_capture_restore_roundtrips_fingerprint():
+    world = MCWorld(TINY)
+    world.apply(("lease", "w0"))
+    world.apply(("advance", "w0"))
+    cap = world.capture()
+    fp = fingerprint(world)
+    world.apply(("lease", "w1"))
+    world.apply(("expire",))
+    assert fingerprint(world) != fp
+    world.restore(cap)
+    assert fingerprint(world) == fp
+    assert check_all(world, DEFAULT_INVARIANTS) is None
+
+
+def test_symmetric_volunteers_merge_under_relabeling():
+    w1 = MCWorld(TINY)
+    w2 = MCWorld(TINY)
+    w1.apply(("lease", "w0"))
+    w2.apply(("lease", "w1"))
+    # w0 and w1 are interchangeable in TINY: leasing with either must land
+    # on the same canonical state
+    assert TINY.crashable == () and TINY.leavable == ()
+    assert fingerprint(w1) == fingerprint(w2)
+
+
+def test_asymmetric_volunteers_do_not_merge():
+    cfg = MCConfig(policy="sync", n_volunteers=2, n_versions=1, n_mb=2,
+                   visibility_timeout=10.0, crashable=("w0",), max_crashes=1)
+    w1 = MCWorld(cfg)
+    w2 = MCWorld(cfg)
+    assert not w1.symmetry_possible()
+    w1.apply(("lease", "w0"))
+    w2.apply(("lease", "w1"))
+    assert fingerprint(w1) != fingerprint(w2)
+
+
+# ---------------------------------------------------------------------------
+# invariant API
+# ---------------------------------------------------------------------------
+
+def test_invariant_api_verdict_forms():
+    good = Invariant("ok", lambda w: None)
+    also_good = Invariant("ok2", lambda w: True)
+    bad_msg = Invariant("bad", lambda w: "broke")
+    bad_bool = Invariant("bad2", lambda w: False)
+    world = MCWorld(TINY)
+    assert good.check(world) is None and also_good.check(world) is None
+    assert bad_msg.check(world) == "broke"
+    assert bad_bool.check(world) == "bad2 violated"
+    assert check_all(world, [good, bad_msg]) == ("bad", "broke")
+    assert check_all(world, DEFAULT_INVARIANTS) is None
+
+
+def test_custom_invariant_violation_carries_trace():
+    # a predicate that fails once any volunteer computes: the trace must be
+    # exactly the actions that got there, and replay must agree
+    inv = Invariant("no-compute", lambda w: not any(
+        d.state == "computing" for d in w.drivers.values()))
+    report = explore(TINY, invariants=[inv], max_states=500, max_depth=10,
+                     max_seconds=10.0)
+    assert report.violations and report.violations[0].invariant == "no-compute"
+    trace = report.violations[0].trace
+    assert replay(TINY, trace, invariants=[inv]).invariant == "no-compute"
+
+
+# ---------------------------------------------------------------------------
+# wire coverage: COVERED_MESSAGES is honest
+# ---------------------------------------------------------------------------
+
+def test_covered_messages_ledger_is_honest():
+    """Every wire type COVERED_MESSAGES claims the checker exercises must
+    actually be sent during exploration of the shipped worlds (plus a
+    server-apply world — SubmitUpdate's rung)."""
+    from repro.analysis.mc import default_config
+    sent = set()
+    worlds = [default_config("sync"), default_config("staleness:1"),
+              default_config("local:2"),
+              # fault-free sync world: the DFS dives straight down the happy
+              # path, reaching the version-wait park (WatchVersion) and the
+              # commit notification (VersionReady) within a small budget
+              MCConfig(policy="sync", n_volunteers=2, n_versions=2, n_mb=1,
+                       visibility_timeout=10.0),
+              MCConfig(policy="staleness:1", n_volunteers=2, n_versions=2,
+                       n_mb=2, visibility_timeout=10.0, server_apply=True,
+                       gc_keep=2)]
+    for cfg in worlds:
+        world = MCWorld(cfg)
+        explore(cfg, max_states=1500, max_depth=40, max_seconds=15.0,
+                first_violation=False, world=world)
+        sent |= world.sent_types
+    missing = set(COVERED_MESSAGES) - sent
+    assert not missing, f"claimed covered but never sent: {sorted(missing)}"
+
+
+def test_schema_mc_coverage_cross_check_is_clean_on_tree():
+    from repro.analysis.schema import check_mc_coverage
+    assert check_mc_coverage() == []
