@@ -35,14 +35,17 @@ def classroom_cost(problem: TrainingProblem) -> CostModel:
     return cluster_cost(problem, speed=3.0)
 
 
-def paper_problem(*, reduced: bool = False, seed: int = 0) -> TrainingProblem:
+def paper_problem(*, reduced: bool = False, seed: int = 0,
+                  d_model: Optional[int] = None) -> TrainingProblem:
     if reduced:
         tp = TrainParams(batch_size=32, examples_per_epoch=256, num_epochs=1,
                          sample_len=40, mini_batch_size=8,
                          mini_batches_to_accumulate=4)
         return TrainingProblem.paper_problem(
-            corpus=synthetic_corpus(20_000), tp=tp, seed=seed)
-    return TrainingProblem.paper_problem(tp=PAPER_PARAMS, seed=seed)
+            corpus=synthetic_corpus(20_000), tp=tp, seed=seed,
+            d_model=d_model)
+    return TrainingProblem.paper_problem(tp=PAPER_PARAMS, seed=seed,
+                                         d_model=d_model)
 
 
 def simulate(problem: TrainingProblem, k: int, *, cost: CostModel,

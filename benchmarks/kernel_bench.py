@@ -1,16 +1,22 @@
 """Per-kernel microbenchmarks: us_per_call (interpret-mode CPU — structural,
-not TPU wall-clock) + derived FLOPs and oracle agreement.
+not TPU wall-clock) + oracle agreement + roofline-derived terms.
+
+Two sizes: the default shapes exercise the kernels at meaningful extents
+(flash_attention at S=256 runs ~0.8s/call in interpret mode — fine offline,
+too slow for a CI leg), and ``--quick`` shrinks every kernel to CI scale.
+Records land in ``BENCH_kernels.json`` via ``benchmarks.run``.
 
 CSV: name,us_per_call,derived
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from benchmarks.roofline import derive
 from repro.kernels import ops, ref
 
 
@@ -22,11 +28,24 @@ def _time(fn, *args, iters=3):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def main(reduced: bool = True):
+def _record(name, us, flops, bytes_moved, shape, maxerr=None, **extra):
+    params = {"shape": shape, "us_per_call": round(us, 1)}
+    if maxerr is not None:
+        params["maxerr"] = float(maxerr)
+    params.update({k: (round(v, 6) if isinstance(v, float) else v)
+                   for k, v in derive(flops, bytes_moved).items()})
+    params.update(extra)
+    return {"name": f"kernels_{name}", "params": params,
+            "makespan": us / 1e6, "events": 1, "bytes": int(bytes_moved)}
+
+
+def main(quick: bool = False):
     k = jax.random.PRNGKey(0)
     rows = []
+    records = []
 
-    B, Din, H = (32, 98, 50)                    # the paper's layer-1 cell
+    # the paper's layer-1 cell is small enough to run at full shape always
+    B, Din, H = (8, 98, 50) if quick else (32, 98, 50)
     x = jax.random.normal(k, (B, Din))
     h = jax.random.normal(k, (B, H))
     c = jax.random.normal(k, (B, H))
@@ -34,41 +53,58 @@ def main(reduced: bool = True):
     b = jnp.zeros((4 * H,))
     us = _time(lambda *a: ops.lstm_cell(*a, interpret=True), x, h, c, W, b)
     flops = 2 * B * (Din + H) * 4 * H
+    moved = sum(a.nbytes for a in (x, h, c, W, b)) + 2 * h.nbytes
     err = float(jnp.abs(ops.lstm_cell(x, h, c, W, b, interpret=True)[0]
                         - ref.lstm_cell(x, h, c, W, b)[0]).max())
     rows.append(("lstm_cell", us, f"flops={flops};maxerr={err:.1e}"))
+    records.append(_record("lstm_cell", us, flops, moved,
+                           f"B{B}xD{Din}xH{H}", err))
 
-    S, Hh, Kv, hd = (256, 8, 4, 64) if reduced else (1024, 16, 8, 128)
+    S, Hh, Kv, hd = (128, 4, 2, 32) if quick else (256, 8, 4, 64)
     q = jax.random.normal(k, (1, S, Hh, hd)) * 0.5
     kk = jax.random.normal(k, (1, S, Kv, hd)) * 0.5
     vv = jax.random.normal(k, (1, S, Kv, hd)) * 0.5
     us = _time(lambda *a: ops.flash_attention(*a, interpret=True), q, kk, vv,
                iters=1)
     flops = 4 * S * S * Hh * hd // 2            # causal half
+    moved = q.nbytes + kk.nbytes + vv.nbytes + q.nbytes
     err = float(jnp.abs(ops.flash_attention(q, kk, vv, interpret=True)
                         - ref.flash_attention(q, kk, vv)).max())
     rows.append(("flash_attention", us, f"flops={flops};maxerr={err:.1e}"))
+    records.append(_record("flash_attention", us, flops, moved,
+                           f"S{S}xH{Hh}xKV{Kv}xhd{hd}", err))
 
-    xx = jax.random.normal(k, (4096, 1024))
-    sc = jnp.ones((1024,))
+    R, C = (512, 256) if quick else (4096, 1024)
+    xx = jax.random.normal(k, (R, C))
+    sc = jnp.ones((C,))
     us = _time(lambda *a: ops.rmsnorm(*a, interpret=True), xx, sc)
+    moved = xx.nbytes * 2
     err = float(jnp.abs(ops.rmsnorm(xx, sc, interpret=True)
                         - ref.rmsnorm(xx, sc)).max())
-    rows.append(("rmsnorm", us, f"bytes={xx.nbytes * 2};maxerr={err:.1e}"))
+    rows.append(("rmsnorm", us, f"bytes={moved};maxerr={err:.1e}"))
+    records.append(_record("rmsnorm", us, 4 * R * C, moved, f"{R}x{C}", err))
 
-    g = jax.random.normal(k, (1 << 16,))
+    n = (1 << 14) if quick else (1 << 16)
+    g = jax.random.normal(k, (n,))
     s = jnp.max(jnp.abs(g))
     us = _time(lambda *a: ops.ternary_encode(*a, interpret=True), g, s)
     packed = ops.ternary_encode(g, s, interpret=True)
     rows.append(("ternary_encode", us,
                  f"in={g.nbytes};out={packed.nbytes};"
                  f"ratio={g.nbytes / packed.nbytes:.0f}x"))
+    records.append(_record("ternary_encode", us, 2 * n,
+                           g.nbytes + packed.nbytes, f"n{n}",
+                           ratio=round(g.nbytes / packed.nbytes, 1)))
 
     print("name,us_per_call,derived")
-    for name, us, derived in rows:
-        print(f"{name},{us:.0f},{derived}")
-    return rows
+    for name, us, derived_s in rows:
+        print(f"{name},{us:.0f},{derived_s}")
+    return records
 
 
 if __name__ == "__main__":
-    main(reduced=False)
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-scale shapes for every kernel")
+    args = ap.parse_args()
+    main(quick=args.quick)

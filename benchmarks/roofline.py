@@ -13,6 +13,24 @@ import sys
 DEFAULT_PATH = pathlib.Path(__file__).resolve().parents[1] / "results" / \
     "dryrun_baseline.jsonl"
 
+# Nominal single-core host peaks for turning a kernel's counted flops/bytes
+# into the same three-term split the dry-run records carry. Structural
+# numbers (which term dominates, at what intensity), not TPU wall-clock.
+HOST_FLOPS_PER_SEC = 5.0e9
+HOST_BYTES_PER_SEC = 1.0e10
+
+
+def derive(flops: float, bytes_moved: float, *,
+           flops_per_sec: float = HOST_FLOPS_PER_SEC,
+           bytes_per_sec: float = HOST_BYTES_PER_SEC) -> dict:
+    """Roofline terms for one kernel: compute time, memory time, which of
+    the two binds, and arithmetic intensity (flops/byte)."""
+    t_compute = flops / flops_per_sec
+    t_memory = bytes_moved / bytes_per_sec
+    return {"t_compute": t_compute, "t_memory": t_memory,
+            "bottleneck": "compute" if t_compute >= t_memory else "memory",
+            "intensity": flops / max(bytes_moved, 1.0)}
+
 
 def load(path=DEFAULT_PATH):
     recs = []

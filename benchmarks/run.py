@@ -9,7 +9,8 @@ Artifacts covered:
   Fig. 7      timeline            per-volunteer task spans
   Fig. 8      sequential_baseline absolute speedup vs TFJS-Sequential-128/8
   §VI         compression         top-k / ternary wire bytes + convergence
-  (kernels)   kernel_bench        us_per_call per Pallas kernel
+  (kernels)   kernel_bench        us_per_call + roofline terms per Pallas kernel
+  (applier)   applier_bench       server-apply updates/sec, single vs batched
   (roofline)  roofline            dry-run derived terms, if records exist
   (scale)     volunteer_scaling   event-driven vs polling at 1k/10k volunteers
   (elastic)   rebalance           live shard join/leave migration cost
@@ -32,7 +33,7 @@ import traceback
 
 # suites whose return value is a list of perf records to persist
 BENCH_RECORD_SUITES = ("volunteer_scaling", "rebalance", "staleness",
-                       "browser_scale", "mc")
+                       "browser_scale", "mc", "applier", "kernels")
 
 # the BENCH_<name>.json record schema: field -> accepted types. ``params`` is
 # free-form by design (each suite names its own axes) but must be a dict;
@@ -120,10 +121,11 @@ def main(argv=None) -> int:
         return 1 if problems else 0
     reduced = not args.full
 
-    from benchmarks import (browser_scale, classroom, cluster_scaling,
-                            compression, dynamism, kernel_bench, mc,
-                            rebalance, roofline, sequential_baseline,
-                            staleness, timeline, volunteer_scaling)
+    from benchmarks import (applier_bench, browser_scale, classroom,
+                            cluster_scaling, compression, dynamism,
+                            kernel_bench, mc, rebalance, roofline,
+                            sequential_baseline, staleness, timeline,
+                            volunteer_scaling)
     suites = [
         ("volunteer_scaling", lambda: volunteer_scaling.main(quick=reduced)),
         ("cluster_scaling", lambda: cluster_scaling.main(reduced)),
@@ -132,7 +134,8 @@ def main(argv=None) -> int:
         ("sequential_baseline", lambda: sequential_baseline.main(reduced)),
         ("compression", lambda: compression.main(reduced)),
         ("dynamism", lambda: dynamism.main(reduced)),
-        ("kernel_bench", lambda: kernel_bench.main(reduced)),
+        ("kernels", lambda: kernel_bench.main(quick=reduced)),
+        ("applier", lambda: applier_bench.main(quick=reduced)),
         ("roofline", lambda: roofline.main()),
         ("rebalance", lambda: rebalance.main(quick=reduced)),
         ("staleness", lambda: staleness.main(reduced)),

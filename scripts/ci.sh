@@ -104,6 +104,18 @@ python benchmarks/staleness.py --quick
 # in BENCH_browser_scale.json come from the uncapped --flagship run)
 python benchmarks/browser_scale.py --quick
 
+# batched server-applier smoke (ISSUE 9): real-JAX applies through the
+# drained SubmitUpdate path must bit-match sequential_async at every batch
+# size (asserted inside the bench) while measuring updates/sec single vs
+# batched; runs under the pinned launch profile so numbers are comparable
+scripts/launch_profile.sh python -m benchmarks.applier_bench --quick
+
+# Pallas kernel perf surface at CI-scale shapes + the roofline derivation
+# (structural interpret-mode numbers; the committed BENCH_kernels.json
+# records come from the full shapes via `benchmarks.run --full`)
+scripts/launch_profile.sh python -m benchmarks.kernel_bench --quick
+python -m benchmarks.roofline
+
 # docs leg (ISSUE 5): the README is executable documentation — run every
 # quickstart bash block, fail if the results tables drifted from the
 # committed BENCH_*.json, and fail if docs/protocol.md misses a wire type

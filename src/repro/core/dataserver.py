@@ -95,9 +95,13 @@ class DataServer:
         them), the latest-version cursor, and the accounting counters.
         Pending watchers are live callbacks and never serialize; see
         ``restore`` for how in-process watchers survive."""
+        # lazily-published blobs (the real applier's LazyModelBlob)
+        # solidify here: a checkpoint must hold values, not live thunks
         return {"kind": "DataServer",
                 "kv": dict(self._kv),
-                "models": [[v, self._models[v]] for v in sorted(self._models)],
+                "models": [[v, b.materialize()
+                            if hasattr(b, "materialize") else b]
+                           for v, b in sorted(self._models.items())],
                 "latest": self._latest,
                 "reads": self.reads, "writes": self.writes,
                 "bytes_read": self.bytes_read,

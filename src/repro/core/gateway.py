@@ -86,11 +86,14 @@ from repro.core import wsframing
 from repro.core.aggregation import PolicyLike, make_policy
 from repro.core.dataserver import DataServer
 from repro.core.initiator import enqueue_problem
-from repro.core.protocol import (Blocked, Hello, KickQueue, LocalWork, MapWork,
-                                 NoTask, NOTIFICATION_TYPES, ReduceWork,
-                                 ServerApplier, ServerEndpoint, TaskDone,
-                                 VolunteerSession, Wake, decode_message,
-                                 encode_message)
+from repro.core.applier import make_real_applier
+from repro.core.mapreduce import TrainingProblem
+from repro.core.protocol import (Blocked, FetchModel, Hello, KickQueue,
+                                 LocalWork, MapWork, NoTask,
+                                 NOTIFICATION_TYPES, ReduceWork,
+                                 ServerApplier, ServerEndpoint, SubmitUpdate,
+                                 TaskDone, VolunteerSession, Wake,
+                                 decode_message, encode_message)
 from repro.core.queue import QueueServer, ShardedQueueServer, WallClock
 from repro.core.simulator import SyntheticProblem
 from repro.core.transport import InProcessTransport, Transport
@@ -398,7 +401,8 @@ class GatewayServer:
                  visibility_timeout: float = float("inf"),
                  sweep_interval: float = 0.05,
                  snapshot_path: Optional[str] = None, snapshot_every: int = 0,
-                 restore_from: Optional[str] = None):
+                 restore_from: Optional[str] = None,
+                 real_apply: bool = False):
         self.policy = make_policy(policy)
         self.clock = WallClock()
         if problem is None:
@@ -418,14 +422,26 @@ class GatewayServer:
         # the run's commit target: the policy decides how many model versions
         # `nv` BSP-equivalent rounds must publish (sync: nv; async: nv * n_mb)
         self.n_updates = self.policy.n_updates(problem, nv)
+        if real_apply and self.policy.barrier:
+            raise ValueError("real_apply needs a barrierless policy "
+                             "(staleness:<s> or local:<k>)")
         if restore_from is not None:
             self.restore(restore_from)
         else:
+            # real applies need the real (params, opt_state) blob as v0;
+            # the synthetic applier runs on version-string tokens
             enqueue_problem(problem, self.qs, self.ds, n_versions=nv,
-                            policy=self.policy, store_real_model=False)
+                            policy=self.policy, store_real_model=real_apply)
         applier = None
         if not self.policy.barrier:
-            applier = ServerApplier(self.policy, _synthetic_apply)
+            if real_apply:
+                applier = make_real_applier(problem, self.policy)
+                if restore_from is not None:
+                    # the snapshot's latest blob is the applier's new truth
+                    latest = self.ds.latest_version
+                    applier.backend.reseed(self.ds.get_model(latest), latest)
+            else:
+                applier = ServerApplier(self.policy, _synthetic_apply)
         self.applier = applier
         self.endpoint = ServerEndpoint(self.qs, self.ds, self._notify,
                                        clock=self.clock, applier=applier)
@@ -439,6 +455,12 @@ class GatewayServer:
         # without ever stalling dispatch
         self._lock = _make_lock("gateway._lock", guard=True)
         self._snap_lock = _make_lock("gateway._snap_lock")
+        # submit combining queue (leaf lock; order: _lock -> _submit_lock).
+        # SubmitUpdates enqueue here; whichever connection thread wins the
+        # dispatch lock drains them ALL as one endpoint.submit_batch — one
+        # jitted dispatch on a real applier instead of one per update.
+        self._submit_lock = _make_lock("gateway._submit_lock")
+        self._submit_pending: list = []
         self._snap_seq = 0                       # encode order (under _lock)
         self._snap_written = 0                   # last seq on disk (_snap_lock)
         self._conns: Dict[str, object] = {}      # consumer -> channel
@@ -602,6 +624,48 @@ class GatewayServer:
             return None
         return channel
 
+    def _submit_drain(self, msg, channel) -> None:
+        """Combining-lock commit: enqueue this ``SubmitUpdate``, then whoever
+        wins the dispatch lock drains EVERY pending submit through one
+        ``endpoint.submit_batch`` call (one jitted dispatch on a real
+        applier) and sends every drained reply — all under the lock, like
+        ordinary dispatch, so reply frames never interleave with pushed
+        notifications. A thread whose entry was drained by another finds its
+        event already set and just returns to ``recv``."""
+        entry = (msg, channel, threading.Event())
+        with self._submit_lock:
+            self._submit_pending.append(entry)
+        pendings = []
+        with self._lock:
+            with self._submit_lock:
+                batch, self._submit_pending = self._submit_pending, []
+            if batch:
+                try:
+                    replies = self.endpoint.submit_batch(
+                        [e[0] for e in batch])
+                    for e, reply in zip(batch, replies):
+                        try:
+                            e[1].send(reply)
+                        except OSError:
+                            # peer died mid-drain: its update is already
+                            # committed/nacked server-side; drop the dead
+                            # conn registration (the _notify convention) and
+                            # let ITS thread's recv observe the close
+                            for c, ch in list(self._conns.items()):
+                                if ch is e[1]:
+                                    self._conns.pop(c, None)
+                        p = self._maybe_snapshot(e[0])
+                        if p is not None:
+                            pendings.append(p)
+                finally:
+                    for e in batch:
+                        e[2].set()
+                if self.ds.latest_version >= self.n_updates:
+                    self.done.set()
+        for p in pendings:
+            self._write_snapshot(*p)
+        entry[2].wait()
+
     def _serve_conn(self, conn: socket.socket) -> None:
         channel = self._open_channel(conn)
         if channel is None:
@@ -612,6 +676,10 @@ class GatewayServer:
                 msg = channel.recv()
                 if msg is None:
                     break
+                if isinstance(msg, SubmitUpdate) and \
+                        self.applier is not None:
+                    self._submit_drain(msg, channel)
+                    continue
                 with self._lock:
                     if isinstance(msg, Hello):
                         consumer = msg.consumer
@@ -895,7 +963,9 @@ def _wait(transport: Transport, inbox: Deque,
 def run_volunteer(transport: Transport, vid: str, n_updates: int, *,
                   policy: PolicyLike = None, task_delay: float = 0.0,
                   heartbeat_every: float = 0.5,
-                  tally: Optional[list] = None) -> Tuple[int, int]:
+                  tally: Optional[list] = None,
+                  problem: Optional[TrainingProblem] = None
+                  ) -> Tuple[int, int]:
     """Drive one volunteer to run completion over any transport. Compute is
     synthetic (gradient payloads None, model blobs version strings);
     ``task_delay`` sleeps that long per compute — the window the chaos legs
@@ -983,10 +1053,27 @@ def run_volunteer(transport: Transport, vid: str, n_updates: int, *,
                 if not sess.finish_map(None, 0, 0.0).stale:
                     bump()
             else:
-                if not sess.submit_update(sess.grad_result(None, 0, 0.0)).stale:
+                if problem is not None:
+                    # real compute: gradient of this stream slot at the
+                    # fetched latest model — pushed to the server's real
+                    # applier through the same SubmitUpdate
+                    t = out.task
+                    g, loss = problem.map_compute(out.model[0], t.version,
+                                                  t.mb_index)
+                    res = sess.grad_result(g, problem.grad_bytes, loss)
+                else:
+                    res = sess.grad_result(None, 0, 0.0)
+                if not sess.submit_update(res).stale:
                     bump()
         elif isinstance(out, LocalWork):
-            if not sess.submit_update(sess.delta_result(None, 0, 0.0)).stale:
+            if problem is not None:
+                t = out.task
+                p0, s0 = out.model
+                delta, loss = problem.local_compute(p0, s0, t.start, t.k)
+                res = sess.delta_result(delta, problem.model_bytes, loss)
+            else:
+                res = sess.delta_result(None, 0, 0.0)
+            if not sess.submit_update(res).stale:
                 bump()
         elif isinstance(out, ReduceWork):
             sess.finish_reduce(f"v{out.task.version + 1}")
@@ -999,6 +1086,7 @@ def run_volunteer(transport: Transport, vid: str, n_updates: int, *,
 def run_volunteer_resilient(host: str, port: int, vid: str, n_updates: int, *,
                             policy: PolicyLike = None, task_delay: float = 0.0,
                             max_reconnects: int = 20, dialect: str = "tcp",
+                            problem: Optional[TrainingProblem] = None,
                             ) -> Tuple[int, int, int]:
     """``run_volunteer`` that survives gateway crashes: on a connection error
     it reconnects (fresh transport + session, same consumer id) and resumes.
@@ -1021,7 +1109,7 @@ def run_volunteer_resilient(host: str, port: int, vid: str, n_updates: int, *,
         try:
             final, _ = run_volunteer(transport, vid, n_updates,
                                      policy=policy, task_delay=task_delay,
-                                     tally=tally)
+                                     tally=tally, problem=problem)
             return final, tally[0], reconnects
         except ConnectionError:
             # server died mid-run; partial progress is already durable
@@ -1038,7 +1126,24 @@ def run_volunteer_resilient(host: str, port: int, vid: str, n_updates: int, *,
 # CLI
 # ---------------------------------------------------------------------------
 
-def _problem(args) -> SyntheticProblem:
+def _real_problem(seed: int = 0) -> TrainingProblem:
+    """Seed-deterministic shrunk REAL problem for ``--real-apply`` runs: the
+    paper model family at d_model=8 on the hermetic synthetic corpus. Every
+    term is seeded (corpus, schedule hashes, init PRNGKey), so a volunteer
+    process building this independently computes gradients the server's
+    applier chains bit-exactly."""
+    from repro.configs.paper_lstm import TrainParams
+    from repro.data.text import synthetic_corpus
+    tp = TrainParams(batch_size=32, examples_per_epoch=256, num_epochs=1,
+                     sample_len=40, mini_batch_size=8,
+                     mini_batches_to_accumulate=4)
+    return TrainingProblem.paper_problem(corpus=synthetic_corpus(20_000),
+                                         tp=tp, seed=seed, d_model=8)
+
+
+def _problem(args):
+    if getattr(args, "real_apply", False):
+        return _real_problem()
     return SyntheticProblem(n_versions=args.n_versions, n_mb=args.n_mb)
 
 
@@ -1052,7 +1157,7 @@ def _serve(args) -> int:
         policy=args.policy, n_shards=args.shards,
         visibility_timeout=args.visibility_timeout,
         snapshot_path=args.snapshot_path, snapshot_every=args.snapshot_every,
-        restore_from=args.restore_from)
+        restore_from=args.restore_from, real_apply=args.real_apply)
     if args.port_file:
         tmp = args.port_file + ".tmp"
         with open(tmp, "w") as f:
@@ -1073,9 +1178,15 @@ def _serve(args) -> int:
     while server._conns and _CLOCK.now() < deadline:
         time.sleep(0.02)
     ok = server.ds.latest_version >= server.n_updates
+    applier_stats = ""
+    if args.real_apply and server.applier is not None:
+        ap = server.applier
+        applier_stats = (f" applied={ap.applied} rejected={ap.rejected} "
+                         f"batches={ap.batches} "
+                         f"batched_updates={ap.batched_updates}")
     print(f"gateway: final_version={server.ds.latest_version} "
           f"snapshots={server.snapshots_written} "
-          f"({'done' if ok else 'TIMEOUT'})", flush=True)
+          f"({'done' if ok else 'TIMEOUT'})" + applier_stats, flush=True)
     server.close()
     return 0 if ok else 1
 
@@ -1084,7 +1195,8 @@ def _volunteer(args) -> int:
     n_updates = _target(args)
     final, tasks, reconnects = run_volunteer_resilient(
         "127.0.0.1", args.port, args.vid, n_updates, policy=args.policy,
-        task_delay=args.task_delay, dialect=args.dialect)
+        task_delay=args.task_delay, dialect=args.dialect,
+        problem=_real_problem() if args.real_apply else None)
     print(f"volunteer {args.vid} [{args.dialect}]: final_version={final} "
           f"tasks={tasks} reconnects={reconnects}", flush=True)
     if args.expect_final is not None and final != args.expect_final:
@@ -1364,6 +1476,78 @@ def _smoke_browser_thin(args) -> None:
           f"v{n_updates}; browser pushed zero PublishModel frames")
 
 
+def _smoke_real_applier(args) -> None:
+    """Leg 7 — the REAL JAX applier over the socket: (a) one real-compute
+    volunteer against a ``--real-apply`` server PROCESS must land on a final
+    model BIT-IDENTICAL to ``sequential_async`` (fetched back over the wire);
+    (b) three concurrent real-compute volunteers must finish the run with
+    contiguous versions — the combining-lock drain path under real races."""
+    from repro.core.mapreduce import sequential_async
+    import numpy as np
+    policy = "staleness:2"
+    problem = _real_problem()
+    n_versions = 2                       # 2 * n_mb(4) = 8 updates
+    n_updates = make_policy(policy).n_updates(problem, n_versions)
+    extra = ("--policy", policy, "--real-apply")
+
+    def serve_run(vids):
+        with tempfile.TemporaryDirectory() as td:
+            port_file = os.path.join(td, "gw.port")
+            proc = _spawn_server(
+                args, port_file,
+                extra=extra + ("--n-versions", str(n_versions)))
+            try:
+                port = _wait_port(port_file, proc)
+                results: Dict[str, Tuple[int, int]] = {}
+
+                def drive(vid: str) -> None:
+                    tr = SocketTransport("127.0.0.1", port, vid)
+                    results[vid] = run_volunteer(tr, vid, n_updates,
+                                                 policy=policy,
+                                                 problem=problem)
+                    tr.close()
+
+                threads = [threading.Thread(target=drive, args=(v,),
+                                            daemon=True) for v in vids[1:]]
+                for th in threads:
+                    th.start()
+                # the first vid runs on THIS thread and fetches the final
+                # model over the wire before saying goodbye
+                tr = SocketTransport("127.0.0.1", port, vids[0])
+                results[vids[0]] = run_volunteer(tr, vids[0], n_updates,
+                                                 policy=policy,
+                                                 problem=problem)
+                for th in threads:
+                    th.join(timeout=120)
+                    assert not th.is_alive(), "real volunteer deadlocked"
+                final_blob = tr.call(FetchModel(n_updates)).blob
+                tr.close()
+                rc = proc.wait(timeout=15)
+            finally:
+                if proc.poll() is None:
+                    proc.kill()
+        assert rc == 0, f"gateway server exited {rc}"
+        finals = [results[v][0] for v in sorted(results)]
+        assert finals == [n_updates] * len(vids), finals
+        return final_blob
+
+    # (a) one volunteer: commit order is serialized, so the wire-fetched
+    # final model must BIT-match the sequential reference
+    blob = serve_run(["r0"])
+    ref_p, ref_s, _ = sequential_async(problem, n_updates=n_updates)
+    import jax
+    same = jax.tree.all(jax.tree.map(
+        lambda a, b: bool((np.asarray(a) == np.asarray(b)).all()),
+        blob, (ref_p, ref_s)))
+    assert same, "real-apply final model != sequential_async bits"
+    # (b) three racing volunteers: liveness + a contiguous final version
+    serve_run(["r0", "r1", "r2"])
+    print(f"# OK gateway smoke [real-applier]: --real-apply served real JAX "
+          f"applies over the socket — 1-volunteer run bit-matched "
+          f"sequential_async at v{n_updates}; 3 racing volunteers finished "
+          f"the drained run")
+
+
 def _smoke(args) -> int:
     _smoke_transport_equivalence(args)
     _smoke_lease_sweeper(args)
@@ -1371,9 +1555,10 @@ def _smoke(args) -> int:
     _smoke_server_applier(args)
     _smoke_ws_dialect(args)
     _smoke_browser_thin(args)
-    print("# OK gateway smoke: all 6 legs green (transport equivalence, "
+    _smoke_real_applier(args)
+    print("# OK gateway smoke: all 7 legs green (transport equivalence, "
           "wall-clock lease sweeper, kill -9 crash recovery, server-side "
-          "applier, ws dialect, browser thin client)")
+          "applier, ws dialect, browser thin client, real applier)")
     return 0
 
 
@@ -1394,6 +1579,11 @@ def main(argv=None) -> int:
     ap.add_argument("--policy", default="sync",
                     help="sync | staleness:<s> | local:<k> (barrierless "
                          "policies enable the server-side applier)")
+    ap.add_argument("--real-apply", action="store_true",
+                    help="serve: host the REAL JAX applier (batched drains, "
+                         "measured blob sizes) on the seed-deterministic "
+                         "shrunk paper problem; volunteer: compute real "
+                         "gradients for the same problem")
     ap.add_argument("--shards", type=int, default=1)
     ap.add_argument("--visibility-timeout", type=float, default=float("inf"),
                     help="wall-clock lease seconds before the sweeper "

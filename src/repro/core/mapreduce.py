@@ -45,9 +45,14 @@ class TrainingProblem:
     def paper_problem(cls, *, seed: int = 0, corpus: Optional[str] = None,
                       tp: TrainParams = PAPER_PARAMS,
                       rt: Runtime = Runtime(remat=False),
-                      lr: Optional[float] = None) -> "TrainingProblem":
+                      lr: Optional[float] = None,
+                      d_model: Optional[int] = None) -> "TrainingProblem":
         data = TextTask.build(corpus, sample_len=tp.sample_len, seed=seed + 99)
         cfg = LSTM_CONFIG.replace(vocab=data.vocab.size)
+        if d_model is not None:
+            # shrunk variants for overhead-dominated benchmarks (the paper's
+            # browser-device regime); same family, same data, fewer cells
+            cfg = cfg.replace(d_model=d_model)
         params0 = M.init_params(cfg, jax.random.PRNGKey(seed))
         opt = rmsprop(lr if lr is not None else tp.learning_rate)
         opt_state0 = opt.init(params0)
@@ -70,12 +75,20 @@ class TrainingProblem:
         # per commit; LocalSteps adds a weighted (params, opt_state) delta.
         self._acc_apply_fn = jax.jit(acc_apply)
         self._apply_one_fn = jax.jit(self.optimizer.update)
+        # donated variant: params/opt_state buffers are consumed and reused
+        # for the outputs instead of copied. ONLY safe when the caller owns
+        # them exclusively (the server-side applier's hot state) — donating a
+        # DataServer-stored blob destroys it for every later reader.
+        self._apply_one_don_fn = jax.jit(self.optimizer.update,
+                                         donate_argnums=(0, 1))
 
         def delta_apply(blob, delta, weight):
             return jax.tree.map(
                 lambda c, d: (c + weight * d).astype(c.dtype), blob, delta)
 
         self._delta_apply_fn = jax.jit(delta_apply)
+        self._delta_apply_don_fn = jax.jit(delta_apply, donate_argnums=(0,))
+        self._apply_batch_fns: Dict[bool, Callable] = {}
 
     # ------------------------------------------------------------------ schedule
     @property
@@ -110,9 +123,14 @@ class TrainingProblem:
         stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *ordered)
         return self._acc_apply_fn(params, opt_state, stacked)
 
-    def apply_one(self, params, opt_state, grads):
-        """BoundedStaleness commit: apply one (possibly stale) gradient."""
-        return self._apply_one_fn(params, opt_state, grads)
+    def apply_one(self, params, opt_state, grads, *, donate: bool = False):
+        """BoundedStaleness commit: apply one (possibly stale) gradient.
+
+        ``donate=True`` reuses the params/opt_state buffers for the outputs
+        (no copy). The inputs are INVALIDATED — only pass buffers the caller
+        owns exclusively, never a blob other readers may still fetch."""
+        fn = self._apply_one_don_fn if donate else self._apply_one_fn
+        return fn(params, opt_state, grads)
 
     def local_compute(self, params, opt_state, start: int, k: int):
         """LocalSteps ticket: k local optimizer steps from stream offset
@@ -128,10 +146,171 @@ class TrainingProblem:
                              (p0, s0))
         return delta, float(np.mean(losses))
 
-    def apply_delta(self, params, opt_state, delta, weight: float = 1.0):
+    def apply_delta(self, params, opt_state, delta, weight: float = 1.0, *,
+                    donate: bool = False):
         """LocalSteps commit: current blob + weight * delta (dtype-preserving,
-        so the int32 optimizer step counter survives a fractional weight)."""
-        return self._delta_apply_fn((params, opt_state), delta, weight)
+        so the int32 optimizer step counter survives a fractional weight).
+
+        ``donate=True`` consumes the (params, opt_state) buffers — same
+        exclusive-ownership contract as ``apply_one(donate=True)``."""
+        fn = self._delta_apply_don_fn if donate else self._delta_apply_fn
+        return fn((params, opt_state), delta, weight)
+
+    # ------------------------------------------------------------- flat batch
+    # The batched server applier applies a whole drain of gradients in ONE
+    # jitted dispatch: params and every params-shaped optimizer-state subtree
+    # are packed into single contiguous f32 vectors and a lax.scan(unroll=1)
+    # chains the per-update optimizer steps over the stacked gradient rows.
+    # Bit-exactness with the chained ``apply_one`` reference holds because
+    # (a) flatten/unflatten is pure data movement and (b) the scan body is
+    # compiled once and reused for every step — the same property that makes
+    # ``sequential_async`` a usable reference. Unrolling (scan unroll>1 or a
+    # Python loop inside one jit) is FORBIDDEN: cross-step fusion contracts
+    # mul+add into FMA differently per compilation and breaks bit-equality
+    # (verified empirically; see tests/test_applier.py).
+
+    @functools.cached_property
+    def _flat_spec(self):
+        """(treedef, shapes, sizes, dtype, tree_keys, scalar_keys) when the
+        problem qualifies for the flat fast path, else None. Qualifying means:
+        one shared float dtype across params leaves, and an optimizer state
+        that is a dict of params-treedef-mirroring subtrees plus scalars."""
+        leaves, treedef = jax.tree.flatten(self.params0)
+        if not leaves:
+            return None
+        dtype = leaves[0].dtype
+        if any(l.dtype != dtype for l in leaves):
+            return None
+        if not isinstance(self.opt_state0, dict):
+            return None
+        tree_keys, scalar_keys = [], []
+        for k in sorted(self.opt_state0):
+            v = self.opt_state0[k]
+            sl, sdef = jax.tree.flatten(v)
+            if sdef == treedef and len(sl) == len(leaves) and \
+                    all(a.shape == b.shape and a.dtype == dtype
+                        for a, b in zip(sl, leaves)):
+                tree_keys.append(k)
+            elif len(sl) == 1 and sl[0].ndim == 0:
+                scalar_keys.append(k)
+            else:
+                return None
+        shapes = tuple(l.shape for l in leaves)
+        sizes = tuple(int(np.prod(s)) for s in shapes)
+        return (treedef, shapes, sizes, dtype, tuple(tree_keys),
+                tuple(scalar_keys))
+
+    @property
+    def supports_flat_apply(self) -> bool:
+        return self._flat_spec is not None
+
+    def pack_grads(self, grads) -> np.ndarray:
+        """Host-side flatten of a gradient pytree into one contiguous row
+        (exact: pure reshape/concat, no arithmetic)."""
+        treedef = self._flat_spec[0]
+        return np.concatenate(
+            [np.ravel(np.asarray(x)) for x in treedef.flatten_up_to(grads)])
+
+    def pack_grad_rows(self, grads_seq) -> np.ndarray:
+        """Stacked ``pack_grads`` rows built with ONE concatenate — the hot
+        drain path (per-row concat + stack allocates and copies twice)."""
+        treedef = self._flat_spec[0]
+        return np.concatenate(
+            [np.ravel(np.asarray(x)) for g in grads_seq
+             for x in treedef.flatten_up_to(g)]).reshape(len(grads_seq), -1)
+
+    def _flatten_tree(self, tree):
+        treedef = self._flat_spec[0]
+        return jnp.concatenate(
+            [jnp.ravel(x) for x in treedef.flatten_up_to(tree)])
+
+    def _unflatten_tree(self, vec):
+        treedef, shapes, sizes = self._flat_spec[:3]
+        splits = np.cumsum(sizes)[:-1]
+        parts = jnp.split(vec, splits)
+        return jax.tree.unflatten(
+            treedef, [p.reshape(s) for p, s in zip(parts, shapes)])
+
+    def flat_carry(self, params, opt_state):
+        """Pack (params, opt_state) into the scan carry. Every array in the
+        carry is freshly created (copied), so the caller owns it and may pass
+        it to the donating ``apply_batch_flat``."""
+        _, _, _, _, tree_keys, scalar_keys = self._flat_spec
+        vecs = {k: self._flatten_tree(opt_state[k]) for k in tree_keys}
+        scalars = {k: jnp.array(opt_state[k]) for k in scalar_keys}
+        return (self._flatten_tree(params), vecs, scalars)
+
+    def _unflatten_carry_impl(self, carry):
+        fp, vecs, scalars = carry
+        state = {k: self._unflatten_tree(v) for k, v in vecs.items()}
+        state.update({k: v for k, v in scalars.items()})
+        return self._unflatten_tree(fp), state
+
+    @functools.cached_property
+    def _unflatten_fn(self):
+        # unflatten is pure data movement (split/reshape), so jitting cannot
+        # change bits — and it folds the dozens of eager slice dispatches
+        # into ONE, which is what makes materializing a lazily-published
+        # version (FetchModel, measure, snapshot) cheap
+        return jax.jit(self._unflatten_carry_impl)
+
+    def unflatten_carry(self, carry):
+        """Inverse of ``flat_carry``: (params, opt_state) pytrees."""
+        return self._unflatten_fn(carry)
+
+    @functools.cached_property
+    def _unflatten_step_fn(self):
+        # fused slice+unflatten, one dispatch; ``i`` traces as a dynamic
+        # scalar so one compilation serves every step index (retraced only
+        # per distinct leading batch length)
+        return jax.jit(lambda steps, i: self._unflatten_carry_impl(
+            jax.tree.map(lambda a: a[i], steps)))
+
+    def unflatten_step(self, steps, i: int):
+        """(params, opt_state) at row ``i`` of a scan's stacked step outputs
+        — eager per-leaf indexing costs ~200us/leaf on this box, which is
+        what lazily-published versions must NOT pay per materialize."""
+        return self._unflatten_step_fn(steps, i)
+
+    def _flat_step(self, carry, g):
+        fp, vecs, scalars = carry
+        # single-leaf trees are wrapped in LISTS: the optimizers unzip their
+        # per-leaf pair results with is_leaf=isinstance(tuple), which a
+        # tuple-wrapped container would defeat
+        state = {k: [v] for k, v in vecs.items()}
+        state.update(scalars)
+        new_p, new_s = self.optimizer.update([fp], state, [g])
+        new_carry = (new_p[0],
+                     {k: new_s[k][0] for k in vecs},
+                     {k: new_s[k] for k in scalars})
+        return new_carry, new_carry
+
+    def apply_batch_flat(self, carry, grad_rows, *, donate: bool = True):
+        """Apply ``B`` stacked flat gradient rows in ONE jitted dispatch.
+
+        Returns ``(carry', steps)`` where ``steps`` mirrors the carry with a
+        leading length-B axis — row i is the full flat model/optimizer state
+        after update i (needed because a drain publishes every intermediate
+        version). ``donate=True`` consumes the carry buffers (the applier owns
+        its hot state, so each drain reuses them in place)."""
+        fn = self._apply_batch_fns.get(donate)
+        if fn is None:
+            fn = jax.jit(
+                lambda c, gs: jax.lax.scan(self._flat_step, c, gs),
+                donate_argnums=(0,) if donate else ())
+            self._apply_batch_fns[donate] = fn
+        return fn(carry, grad_rows)
+
+    def apply_batch(self, params, opt_state, grads_seq):
+        """Pytree-level batched apply: one scan dispatch over a sequence of
+        gradient pytrees. Returns the list of per-step (params, opt_state) —
+        bit-identical to folding ``apply_one`` over ``grads_seq``."""
+        if not grads_seq:
+            return []
+        rows = jnp.asarray(self.pack_grad_rows(grads_seq))
+        carry = self.flat_carry(params, opt_state)
+        _, steps = self.apply_batch_flat(carry, rows, donate=True)
+        return [self.unflatten_step(steps, i) for i in range(len(grads_seq))]
 
     # ------------------------------------------------------------------ sizes
     @functools.cached_property

@@ -132,6 +132,13 @@ class CostModel:
     # cache-effect model (superlinearity, paper §V.A):
     cache_bytes: float = 4.0e6      # fast-memory budget per device
     thrash_penalty: float = 0.22    # throughput multiplier when set exceeds cache
+    # server-apply service time: seconds per jitted apply DISPATCH on the
+    # parameter server. The applier drains serially, and every commit that
+    # arrives while a dispatch is pending rides the next one for free — the
+    # batched fast path's economics (benchmarks/applier_bench.py measures the
+    # real constant). 0.0 (default) keeps commits inline and every existing
+    # run bit-identical.
+    dispatch_cost: float = 0.0
 
     def throughput(self, speed: float, working_set: float) -> float:
         base = self.flops_per_sec * speed
@@ -247,6 +254,13 @@ class Simulator:
             self.endpoint.applier = ServerApplier(
                 self.policy, lambda blob, result, v: "blob",
                 model_nbytes=self.model_bytes)
+        # serial applier pipeline state for CostModel.dispatch_cost: end of
+        # the last scheduled dispatch, start of the last scheduled dispatch
+        # (arrivals before a dispatch starts pool into it), and counters
+        self._applier_free_at = 0.0
+        self._applier_batch_start = float("-inf")
+        self.apply_dispatches = 0
+        self.batched_dispatch_credits = 0
         self._heap: List[Tuple[float, int, Callable]] = []
         self._seq = itertools.count()
         self.timeline: List[TimelineEvent] = []
@@ -263,6 +277,28 @@ class Simulator:
     # ------------------------------------------------------------------ engine
     def _post(self, t: float, fn: Callable):
         heapq.heappush(self._heap, (t, next(self._seq), fn))
+
+    def _apply_slot(self, t: float) -> float:
+        """Completion time of a server-side apply arriving at ``t`` under the
+        serial dispatch pipeline: an idle applier dispatches immediately; an
+        arrival after the last scheduled dispatch STARTED opens the next one;
+        an arrival before it started pools into it (the batched-drain credit).
+        ``dispatch_cost == 0`` returns ``t`` untouched — commits stay inline
+        and event order is unchanged."""
+        c = self.cost.dispatch_cost
+        if c <= 0.0:
+            return t
+        if t >= self._applier_free_at:
+            self._applier_batch_start = t
+            self._applier_free_at = t + c
+            self.apply_dispatches += 1
+        elif t >= self._applier_batch_start:
+            self._applier_batch_start = self._applier_free_at
+            self._applier_free_at += c
+            self.apply_dispatches += 1
+        else:
+            self.batched_dispatch_credits += 1
+        return self._applier_free_at
 
     def _post_poll(self, t: float, fn: Callable):
         self.poll_events += 1
@@ -504,6 +540,21 @@ class Simulator:
                 return
             result = (sess.delta_result(None, self.model_bytes, 0.0) if local
                       else sess.grad_result(None, self.grad_bytes, 0.0))
+            if self.server_apply:
+                # dispatch_cost > 0 queues this commit behind the applier's
+                # serial dispatch pipeline (pooling concurrent arrivals into
+                # one batched dispatch); the 0.0 default keeps the commit
+                # inline on this event and every existing run bit-identical
+                commit_at = self._apply_slot(end)
+                if commit_at > end:
+                    self._post(commit_at, lambda: commit(result, commit_at))
+                    return
+            commit(result, end)
+
+        def commit(result, end):
+            if not self._alive(vid):
+                sess.abort()                # ticket requeues via its lease
+                return
             if self.server_apply:
                 # one SubmitUpdate round-trip: the server runs admission,
                 # applies, publishes, acks — commit semantics identical to
