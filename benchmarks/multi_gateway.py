@@ -1,0 +1,215 @@
+"""Multi-gateway control plane benchmark: forwarding overhead + failover gap.
+
+Two questions the K-gateway replicated control plane (``repro.core.gateway
+--gid``) must answer with numbers:
+
+1. **Forwarding tax** — a volunteer homed on a gateway that does not own the
+   slice its request targets pays one extra inter-gateway ``Forward`` hop.
+   The sweep runs the same workload against in-process clusters of K=1
+   (single gateway, op log on — the durability baseline), K=2 and K=3, and
+   reports end-to-end task throughput (updates/sec through the full
+   wire + fsync path).
+
+2. **Failover gap** — when the MODEL-owning gateway is killed (``die()``:
+   the in-process stand-in for kill -9, buffered ops dropped), how long
+   until a request against the dead slice succeeds again through a
+   survivor? That interval covers death detection, op-log replay by the
+   deterministic adopter, and slice re-routing — measured by a probe client
+   hammering ``LatestReq`` (ring-routed to the dead slice) through a
+   surviving gateway.
+
+CSV: leg,gateways,volunteers,tasks,wall_s,updates_per_sec,gap_ms
+
+Usage: PYTHONPATH=src python benchmarks/multi_gateway.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import tempfile
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.elastic import MODEL_KEY, GatewayRing
+from repro.core.gateway import (GatewayServer, SocketTransport,
+                                run_volunteer_resilient)
+from repro.core.protocol import LatestReq
+from repro.core.simulator import SyntheticProblem
+
+POLICY = "sync"
+
+
+def _problem(n_versions: int, n_mb: int) -> SyntheticProblem:
+    return SyntheticProblem(n_versions=n_versions, n_mb=n_mb,
+                            model_bytes=1.0e4, grad_bytes=1.0e3,
+                            map_flops=1.0e6, reduce_flops=1.0e5)
+
+
+def _cluster(k: int, problem: SyntheticProblem, tmpdir: str,
+             visibility_timeout: float = 2.0) -> List[GatewayServer]:
+    servers = [GatewayServer(problem, policy=POLICY, gid=g, gateways=k,
+                             cluster_dir=tmpdir,
+                             visibility_timeout=visibility_timeout)
+               for g in range(k)]
+    for s in servers:
+        s.start()
+    return servers
+
+
+def _drive(ports: List[int], n_volunteers: int, target: int, *,
+           task_delay: float = 0.0) -> Tuple[float, int]:
+    """Run ``n_volunteers`` resilient volunteers homed round-robin over the
+    cluster ports until every one reaches ``target``. Returns
+    (wall seconds, total tasks done)."""
+    results: Dict[int, Tuple[int, int, int]] = {}
+
+    def run(i: int) -> None:
+        home = i % len(ports)
+        order = [ports[home]] + [p for j, p in enumerate(ports)
+                                 if j != home]
+        results[i] = run_volunteer_resilient(
+            "127.0.0.1", order[0], f"bench{i}", target, policy=POLICY,
+            task_delay=task_delay, fallback_ports=tuple(order[1:]))
+
+    threads = [threading.Thread(target=run, args=(i,), daemon=True)
+               for i in range(n_volunteers)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=180)
+        assert not t.is_alive(), "benchmark volunteer deadlocked"
+    wall = time.perf_counter() - t0
+    finals = [results[i][0] for i in sorted(results)]
+    assert finals == [target] * n_volunteers, \
+        f"run did not converge: {finals} != {target}"
+    return wall, sum(results[i][1] for i in results)
+
+
+def throughput_leg(k: int, n_versions: int, n_mb: int,
+                   n_volunteers: int) -> dict:
+    problem = _problem(n_versions, n_mb)
+    target = n_versions                       # sync: one commit per version
+    with tempfile.TemporaryDirectory() as td:
+        servers = _cluster(k, problem, td)
+        try:
+            wall, tasks = _drive([s.port for s in servers], n_volunteers,
+                                 target)
+        finally:
+            for s in servers:
+                s.close()
+    ups = tasks / wall if wall > 0 else 0.0
+    print(f"throughput,{k},{n_volunteers},{tasks},{wall:.3f},{ups:.1f},")
+    return {"name": f"multi_gateway_throughput_k{k}",
+            "params": {"gateways": k, "volunteers": n_volunteers,
+                       "policy": POLICY, "n_versions": n_versions,
+                       "n_mb": n_mb, "updates_per_sec": round(ups, 1)},
+            "makespan": round(wall, 3), "events": tasks, "bytes": None}
+
+
+def _probe_gap(port: int, timeout: float = 30.0) -> float:
+    """Seconds until a ``LatestReq`` against the dead slice succeeds again
+    through the surviving gateway at ``port``."""
+    t0 = time.perf_counter()
+    deadline = t0 + timeout
+    probe: Optional[SocketTransport] = None
+    while True:
+        try:
+            if probe is None:
+                probe = SocketTransport("127.0.0.1", port, "gap-probe",
+                                        connect_timeout=5.0)
+            probe.call(LatestReq())
+            break
+        except (ConnectionError, OSError):
+            if probe is not None:
+                try:
+                    probe.close()
+                except OSError:
+                    pass
+                probe = None
+            if time.perf_counter() >= deadline:
+                raise RuntimeError("failover never completed")
+            time.sleep(0.01)
+    gap = time.perf_counter() - t0
+    try:
+        probe.close()
+    except OSError:
+        pass
+    return gap
+
+
+def failover_leg(k: int, n_versions: int, n_mb: int,
+                 n_volunteers: int) -> dict:
+    """Kill the MODEL-owning gateway mid-run; measure the gap until the
+    slice answers again, and require the run to still converge."""
+    problem = _problem(n_versions, n_mb)
+    target = n_versions
+    victim = GatewayRing(range(k)).owner_of(MODEL_KEY)
+    with tempfile.TemporaryDirectory() as td:
+        servers = _cluster(k, problem, td)
+        try:
+            ports = [s.port for s in servers]
+            survivor = next(p for g, p in enumerate(ports) if g != victim)
+            done: Dict[int, Tuple[int, int, int]] = {}
+
+            def run(i: int) -> None:
+                home = i % k
+                order = [ports[home]] + [p for j, p in enumerate(ports)
+                                         if j != home]
+                done[i] = run_volunteer_resilient(
+                    "127.0.0.1", order[0], f"fv{i}", target, policy=POLICY,
+                    task_delay=0.05, fallback_ports=tuple(order[1:]))
+
+            threads = [threading.Thread(target=run, args=(i,), daemon=True)
+                       for i in range(n_volunteers)]
+            for t in threads:
+                t.start()
+            time.sleep(0.8)                   # mid-run
+            servers[victim].die()
+            gap = _probe_gap(survivor)
+            for t in threads:
+                t.join(timeout=120)
+                assert not t.is_alive(), "failover volunteer deadlocked"
+            finals = [done[i][0] for i in sorted(done)]
+            assert finals == [target] * n_volunteers, \
+                f"failover run did not converge: {finals}"
+            reconnects = sum(done[i][2] for i in done)
+        finally:
+            for s in servers:
+                s.close()
+    gap_ms = gap * 1e3
+    print(f"failover,{k},{n_volunteers},,,,{gap_ms:.1f}")
+    return {"name": f"multi_gateway_failover_k{k}",
+            "params": {"gateways": k, "volunteers": n_volunteers,
+                       "policy": POLICY, "victim": victim,
+                       "reconnects": reconnects,
+                       "gap_ms": round(gap_ms, 1)},
+            "makespan": round(gap, 3), "events": None, "bytes": None}
+
+
+def main(quick: bool = False) -> List[dict]:
+    n_versions, n_mb = (3, 4) if quick else (6, 8)
+    n_volunteers = 3 if quick else 6
+    print("leg,gateways,volunteers,tasks,wall_s,updates_per_sec,gap_ms")
+    records = []
+    for k in (1, 2, 3):
+        records.append(throughput_leg(k, n_versions, n_mb, n_volunteers))
+    for k in ((3,) if quick else (2, 3)):
+        records.append(failover_leg(k, n_versions, n_mb, n_volunteers))
+    base = next(r for r in records
+                if r["name"] == "multi_gateway_throughput_k1")
+    k3 = next(r for r in records
+              if r["name"] == "multi_gateway_throughput_k3")
+    print(f"# throughput scaling (k=1 -> k=3): "
+          f"{base['params']['updates_per_sec']:.1f} -> "
+          f"{k3['params']['updates_per_sec']:.1f} updates/sec "
+          f"(forwarding hop vs parallel dispatch)")
+    return records
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sizes (~seconds, the CI leg)")
+    args = ap.parse_args()
+    main(quick=args.quick)

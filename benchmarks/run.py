@@ -16,6 +16,7 @@ Artifacts covered:
   (elastic)   rebalance           live shard join/leave migration cost
   (policies)  staleness           makespan + loss vs aggregation policy
   (browser)   browser_scale       100k-1M volunteer session-trace sweeps
+  (cluster)   multi_gateway       K-gateway throughput + kill -9 failover gap
 
 Perf trajectory: suites that return record lists additionally write
 ``BENCH_<name>.json`` — a JSON list of records, each with the schema
@@ -33,7 +34,8 @@ import traceback
 
 # suites whose return value is a list of perf records to persist
 BENCH_RECORD_SUITES = ("volunteer_scaling", "rebalance", "staleness",
-                       "browser_scale", "mc", "applier", "kernels")
+                       "browser_scale", "mc", "applier", "kernels",
+                       "multi_gateway")
 
 # the BENCH_<name>.json record schema: field -> accepted types. ``params`` is
 # free-form by design (each suite names its own axes) but must be a dict;
@@ -69,6 +71,10 @@ def check_bench_records(paths=None) -> int:
 
     if not paths:
         complain("no BENCH_*.json files found")
+    # a record name is the key of one cross-PR perf series; the same name in
+    # two files makes the trajectory ambiguous (which suite owns the series?)
+    owners: dict = {}               # record name -> file that first used it
+    reported_pairs = set()
     for path in paths:
         problems_before = problems
         try:
@@ -99,6 +105,13 @@ def check_bench_records(paths=None) -> int:
                     not name.startswith(expected_name + "_"):
                 complain(f"{path}[{i}]: name {name!r} does not belong to "
                          f"{expected_name!r}")
+            if isinstance(name, str):
+                first = owners.setdefault(name, path)
+                if first != path and (name, str(path)) not in reported_pairs:
+                    reported_pairs.add((name, str(path)))
+                    complain(f"{path}[{i}]: record name {name!r} already "
+                             f"used by {first} — every perf series must "
+                             f"belong to exactly one suite file")
         print(f"# {path}: {len(records)} records ok"
               if problems == problems_before
               else f"# {path}: {problems - problems_before} problem(s)")
@@ -123,9 +136,9 @@ def main(argv=None) -> int:
 
     from benchmarks import (applier_bench, browser_scale, classroom,
                             cluster_scaling, compression, dynamism,
-                            kernel_bench, mc, rebalance, roofline,
-                            sequential_baseline, staleness, timeline,
-                            volunteer_scaling)
+                            kernel_bench, mc, multi_gateway, rebalance,
+                            roofline, sequential_baseline, staleness,
+                            timeline, volunteer_scaling)
     suites = [
         ("volunteer_scaling", lambda: volunteer_scaling.main(quick=reduced)),
         ("cluster_scaling", lambda: cluster_scaling.main(reduced)),
@@ -141,6 +154,7 @@ def main(argv=None) -> int:
         ("staleness", lambda: staleness.main(reduced)),
         ("browser_scale", lambda: browser_scale.main(quick=reduced)),
         ("mc", lambda: mc.main(quick=reduced)),
+        ("multi_gateway", lambda: multi_gateway.main(quick=reduced)),
     ]
     failed = []
     for name, fn in suites:

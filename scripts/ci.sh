@@ -49,12 +49,16 @@ python -m pytest -x -q "$@"
 # event-driven coordination win is still >=10x at identical semantics
 python benchmarks/volunteer_scaling.py --quick
 
-# 5-seed chaos smoke (<30 s): for fixed seeds x {churn, reshard, mixed}
-# schedules, in both event and poll modes — including a tight-visibility leg
-# with live lease expiry AND a wire-transport leg with seeded notification
-# faults (dropped/duplicated/delayed Wake and VersionReady deliveries) — a
-# sharded federation's SimResult must bit-match the single-server SimResult
-# (metamorphic contracts of ISSUEs 2 and 3)
+# 5-seed chaos smoke (<30 s): for fixed seeds x {churn, reshard, mixed,
+# snapshot, gateway} schedules, in both event and poll modes — including a
+# tight-visibility leg with live lease expiry, a wire-transport leg with
+# seeded notification faults (dropped/duplicated/delayed Wake and
+# VersionReady deliveries), AND the gateway-kill contract (ISSUE 10): each
+# gateway_kill replays the op journal into scratch servers, asserts the
+# replay bit-matches the live durable state, and a schedule with kills
+# substituted by plain expire sweeps must yield a bit-identical SimResult —
+# a sharded federation's SimResult must bit-match the single-server
+# SimResult throughout (metamorphic contracts of ISSUEs 2, 3 and 10)
 python -m repro.core.chaos --seeds 5
 
 # gateway durability smoke (<90 s), 6 legs (ISSUEs 3 + 5 + 7): (1) an
@@ -77,6 +81,20 @@ python -m repro.core.gateway --smoke
 # the dispatch lock), or PARKED-HOLDER (PR 5's step-aside deadlock shape)
 ANALYSIS_INSTRUMENT=1 python -m repro.core.gateway --smoke
 
+# multi-gateway failover smoke (ISSUE 10): 3 real gateway PROCESSES share a
+# consistent-hash ring; the MODEL-owning member is SIGKILLed mid-run; the
+# deterministic adopter replays the victim's op log, volunteers fail over
+# to surviving ports, and the run completes at the reference version —
+# once plain, once under runtime lock/invariant instrumentation (the
+# forwarding + failover paths take locks the single-gateway legs never do)
+python -m repro.core.gateway --smoke-cluster
+ANALYSIS_INSTRUMENT=1 python -m repro.core.gateway --smoke-cluster
+
+# K-gateway perf surface: throughput at K=1/2/3 through the full
+# wire + fsync path, and the kill -9 failover gap measured by a probe
+# through a survivor (the committed BENCH_multi_gateway.json records)
+python -m benchmarks.multi_gateway --quick
+
 # elastic rebalance smoke: every shard join/leave migrates <= 1.5/K of queue
 # names, conserves all live state, and keeps per-queue invariants
 python benchmarks/rebalance.py --quick
@@ -87,7 +105,8 @@ python benchmarks/rebalance.py --quick
 # sequential references, over BOTH transports
 python -m repro.core.aggregation --smoke
 
-# chaos metamorphic contract per async policy: a seeded fault schedule on a
+# chaos metamorphic contract per async policy (gateway-kill journal replay
+# included via the schedule families above): a seeded fault schedule on a
 # sharded federation still bit-matches single-server with no reduce barrier
 python -m repro.core.chaos --seeds 2 --policy staleness:2
 python -m repro.core.chaos --seeds 2 --policy local:4

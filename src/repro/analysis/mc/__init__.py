@@ -17,6 +17,7 @@ from repro.analysis.mc.check import (DEFAULT_POLICIES, RULES, check_config,
                                      default_config, run_mc)
 from repro.analysis.mc.explore import MCReport, MCStats, explore
 from repro.analysis.mc.fingerprint import canonical_state, fingerprint
+from repro.analysis.mc.gateway_world import GatewayMCConfig, GatewayMCWorld
 from repro.analysis.mc.invariants import (DEADLOCK, DEFAULT_INVARIANTS,
                                           Invariant, check_all)
 from repro.analysis.mc.shrink import (Replay, load_payload_config, replay,
@@ -50,6 +51,9 @@ COVERED_MESSAGES = {
     "LatestReq": "advance/finish admission reads",
     "SubmitUpdate": "finish action under server_apply",
     "Bye": "leave action (clean departure)",
+    "ExpireAll": "expire action (the lease sweep is a logged wire op)",
+    "Forward": "gateway world: remotely-homed op routed to its slice owner",
+    "ForwardNotify": "gateway world: wake crossing back to its origin",
     # notifications
     "Wake": "deliver/drop/dup fates + wake action",
     "VersionReady": "deliver/drop/dup fates + wake action",
@@ -57,6 +61,7 @@ COVERED_MESSAGES = {
 
 __all__ = [
     "COVERED_MESSAGES", "DEADLOCK", "DEFAULT_INVARIANTS", "DEFAULT_POLICIES",
+    "GatewayMCConfig", "GatewayMCWorld",
     "Invariant", "MCConfig", "MCReport", "MCStats", "MCWorld", "RULES",
     "Replay", "canonical_state", "check_all", "check_config",
     "default_config", "explore", "fingerprint", "load_payload_config",

@@ -24,6 +24,8 @@ RULES = {
     "MC-SNAPSHOT": "server state did not survive snapshot/restore",
     "MC-DEADLOCK": "reachable state with no enabled action, run incomplete",
     "MC-ASSERT": "a protocol assertion failed during exploration",
+    "MC-OWNER": "a ring slice had zero or multiple serving gateways",
+    "MC-FORWARD": "acknowledged work lost across a gateway failover",
 }
 
 _RULE_BY_INVARIANT = {
@@ -34,6 +36,8 @@ _RULE_BY_INVARIANT = {
     "snapshot-durability": "MC-SNAPSHOT",
     "deadlock-freedom": "MC-DEADLOCK",
     "internal-assertion": "MC-ASSERT",
+    "single-owner-per-slice": "MC-OWNER",
+    "no-lost-forward": "MC-FORWARD",
 }
 
 DEFAULT_POLICIES: Tuple[str, ...] = ("sync", "staleness:1", "local:2")

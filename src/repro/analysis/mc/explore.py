@@ -33,8 +33,7 @@ from dataclasses import dataclass, field
 from typing import List, Optional, Tuple
 
 from repro.analysis.mc.fingerprint import fingerprint, raw_fingerprint
-from repro.analysis.mc.invariants import (DEADLOCK, DEFAULT_INVARIANTS,
-                                          Invariant, check_all)
+from repro.analysis.mc.invariants import DEADLOCK, Invariant, check_all
 from repro.analysis.mc.world import MCConfig, MCWorld
 
 Action = Tuple[str, ...]
@@ -113,11 +112,11 @@ def explore(cfg: MCConfig, *,
             max_seconds: float = 30.0,
             first_violation: bool = True,
             world: Optional[MCWorld] = None) -> MCReport:
-    invariants = DEFAULT_INVARIANTS if invariants is None else invariants
+    invariants = cfg.default_invariants() if invariants is None else invariants
     fast, slow, sampled = _split(invariants)
     # a caller-provided world lets tests inspect exploration-global state
     # afterwards (e.g. ``sent_types``, the wire-coverage ledger)
-    world = MCWorld(cfg) if world is None else world
+    world = cfg.make_world() if world is None else world
     stats = MCStats()
     report = MCReport(cfg, stats)
     t0 = time.perf_counter()

@@ -122,6 +122,12 @@ def _state_tree(world, *, symmetric: bool) -> Any:
                    world.expiries if world.cfg.max_expiries is not None
                    else 0],
     }
+    # world-specific overlay (the gateway micro-world's ring/op-log state):
+    # anything that can change a future transition must reach the hash, or
+    # dedup could merge states with different failover futures
+    extra = getattr(world, "extra_state", None)
+    if extra is not None:
+        state["extra"] = extra()
     return _plain(state, rename)
 
 

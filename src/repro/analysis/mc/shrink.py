@@ -21,9 +21,8 @@ import json
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.analysis.mc.fingerprint import fingerprint
-from repro.analysis.mc.invariants import (DEADLOCK, DEFAULT_INVARIANTS,
-                                          Invariant, check_all)
-from repro.analysis.mc.world import MCConfig, MCWorld
+from repro.analysis.mc.invariants import DEADLOCK, Invariant, check_all
+from repro.analysis.mc.world import MCConfig
 
 Action = Tuple[str, ...]
 
@@ -59,8 +58,8 @@ def replay(cfg: MCConfig, trace: Sequence[Action], *,
     classification runs exactly as in the explorer, so deadlock
     counterexamples replay too.
     """
-    invariants = DEFAULT_INVARIANTS if invariants is None else invariants
-    world = MCWorld(cfg)
+    invariants = cfg.default_invariants() if invariants is None else invariants
+    world = cfg.make_world()
     v = check_all(world, invariants)
     if v is not None:
         return Replay(v, 0, fingerprint(world), 0)

@@ -41,10 +41,11 @@ from typing import Any, Dict, List, Optional, Tuple
 from repro.core.aggregation import AggregationPolicy, make_policy
 from repro.core.dataserver import DataServer
 from repro.core.initiator import enqueue_problem
-from repro.core.protocol import (ApplyWork, Blocked, Busy, Hello, LocalWork,
-                                 MapWork, NoTask, ReduceWork, ServerApplier,
-                                 ServerEndpoint, SubscribeQueue, TaskDone,
-                                 VolunteerSession, WatchVersion)
+from repro.core.protocol import (ApplyWork, Blocked, Busy, ExpireAll, Hello,
+                                 LocalWork, MapWork, NoTask, ReduceWork,
+                                 ServerApplier, ServerEndpoint,
+                                 SubscribeQueue, TaskDone, VolunteerSession,
+                                 WatchVersion)
 from repro.core.queue import QueueServer, VirtualClock
 from repro.core.simulator import SyntheticProblem
 from repro.core.tasks import INITIAL_QUEUE, results_queue
@@ -95,6 +96,18 @@ class MCConfig:
             self.policy_object if self.policy_object is not None
             else self.policy)
 
+    def make_world(self) -> "MCWorld":
+        """The concrete world this config describes. Subclasses (the gateway
+        micro-world) override so the explorer/replayer construct the right
+        world type from the config alone."""
+        return MCWorld(self)
+
+    def default_invariants(self) -> List["Invariant"]:  # noqa: F821
+        """The invariant catalog checked when the caller supplies none;
+        subclasses extend it with world-specific invariants."""
+        from repro.analysis.mc.invariants import DEFAULT_INVARIANTS
+        return list(DEFAULT_INVARIANTS)
+
     def to_json(self) -> Dict[str, Any]:
         d = {f: getattr(self, f) for f in self.__dataclass_fields__}
         d.pop("policy_object")
@@ -105,6 +118,10 @@ class MCConfig:
     @classmethod
     def from_json(cls, d: Dict[str, Any]) -> "MCConfig":
         kw = dict(d)
+        world = kw.pop("world", None)
+        if world == "gateway" and cls is MCConfig:
+            from repro.analysis.mc.gateway_world import GatewayMCConfig
+            return GatewayMCConfig.from_json(d)
         kw["crashable"] = tuple(kw.get("crashable", ()))
         kw["leavable"] = tuple(kw.get("leavable", ()))
         return cls(**kw)
@@ -318,7 +335,10 @@ class MCWorld:
             assert deadline is not None, "expire with no finite deadline"
             self.expiries += 1
             self.now = max(self.now, deadline)
-            self.qs.expire_all(self.now)
+            # the sweep goes through the wire op (``ExpireAll`` carries the
+            # authoritative now, applied verbatim) — the same message the
+            # gateway's sweeper dispatches so its op log can replay expiry
+            self.port.call(ExpireAll(self.now))
         elif kind == "heartbeat":
             # the shipped engines ignore the renewal result (gateway: a
             # zombie keeps acting and its eventual ack/nack hits a dead or
@@ -498,10 +518,15 @@ class MCWorld:
                 work=dd["work"], mailbox=list(dd["mailbox"]),
                 dropped=dd["dropped"])
         self.pending = list(cap["pending"])
-        # re-register live waits in their captured FIFO order. Safe from
-        # immediate fires: a banked signal and a registered waiter never
-        # coexist (the queue consumes the bank at subscribe), and a live
-        # watch key implies the version is still uncommitted.
+        self._reregister_waits(cap)
+
+    def _reregister_waits(self, cap: Dict[str, Any]) -> None:
+        """Re-register live waits in their captured FIFO order. Safe from
+        immediate fires: a banked signal and a registered waiter never
+        coexist (the queue consumes the bank at subscribe), and a live
+        watch key implies the version is still uncommitted. The gateway
+        micro-world overrides this to route each re-subscription through the
+        consumer's own home gateway (exercising ``Forward`` registration)."""
         for qname, kinds in cap["waiters"].items():
             for c in kinds["any"]:
                 self.endpoint.handle(SubscribeQueue(qname, c, "any"))
@@ -512,4 +537,4 @@ class MCWorld:
 
     def fork(self) -> "MCWorld":
         """A fresh world for the same config (root state)."""
-        return MCWorld(replace(self.cfg))
+        return replace(self.cfg).make_world()

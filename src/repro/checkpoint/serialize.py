@@ -11,6 +11,7 @@ regardless of which codecs it has installed:
 """
 from __future__ import annotations
 
+import struct
 import zlib
 from typing import Any, Optional, Tuple
 
@@ -26,6 +27,9 @@ except ImportError:
     _CTX = _DCTX = None
 
 _ARR = "__nd__"
+
+# op-log record header: payload length + crc32 of the payload
+_REC = struct.Struct(">II")
 
 DEFAULT_CODEC = "zstd" if zstandard is not None else "zlib"
 
@@ -109,6 +113,43 @@ def dump_path(tree: Any, path: str, compress: bool = True,
 
 def load_path(path: str) -> Any:
     return loads(read_bytes(path))
+
+
+def pack_record(data: bytes) -> bytes:
+    """Frame one op-log record: 8-byte header (u32 length, u32 crc32 of the
+    payload, both big-endian) + payload. The crc makes a torn or bit-rotted
+    tail detectable, so an append-only log survives kill -9 mid-write."""
+    return _REC.pack(len(data), zlib.crc32(data) & 0xFFFFFFFF) + data
+
+
+def append_record(path: str, data: bytes, *, fsync: bool = True) -> int:
+    """Append one framed record to an append-only log file, creating it if
+    needed. ``fsync=True`` (the default) makes the record durable before
+    returning — the op-log contract: an operation acknowledged to a client
+    is recoverable after kill -9. Returns bytes written."""
+    import os
+    rec = pack_record(data)
+    with open(path, "ab") as f:
+        f.write(rec)
+        f.flush()
+        if fsync:
+            os.fsync(f.fileno())
+    return len(rec)
+
+
+def iter_records(data: bytes):
+    """Yield the framed record payloads in ``data`` in order, stopping at the
+    first incomplete or corrupt record. A torn tail (the writer was killed
+    mid-append) is EXPECTED, not an error: every record before it is intact
+    by construction (appends are sequential), so replay simply ends there."""
+    off, n = 0, len(data)
+    while off + _REC.size <= n:
+        length, crc = _REC.unpack_from(data, off)
+        body = data[off + _REC.size:off + _REC.size + length]
+        if len(body) < length or (zlib.crc32(body) & 0xFFFFFFFF) != crc:
+            return
+        yield body
+        off += _REC.size + length
 
 
 def loads(data: bytes) -> Any:

@@ -85,16 +85,22 @@ from repro.checkpoint import serialize
 from repro.core import wsframing
 from repro.core.aggregation import PolicyLike, make_policy
 from repro.core.dataserver import DataServer
+from repro.core.elastic import MODEL_KEY, GatewayRing, OpLog
 from repro.core.initiator import enqueue_problem
 from repro.core.applier import make_real_applier
 from repro.core.mapreduce import TrainingProblem
-from repro.core.protocol import (Blocked, FetchModel, Hello, KickQueue,
-                                 LocalWork, MapWork, NoTask,
-                                 NOTIFICATION_TYPES, ReduceWork,
-                                 ServerApplier, ServerEndpoint, SubmitUpdate,
-                                 TaskDone, VolunteerSession, Wake,
-                                 decode_message, encode_message)
-from repro.core.queue import QueueServer, ShardedQueueServer, WallClock
+from repro.core.protocol import (Ack, Blocked, Bye, DropConsumer, ExpireAll,
+                                 FetchModel, Forward, ForwardNotify,
+                                 ForwardReply, GcModels, Hello, KickQueue,
+                                 LatestReq, LatestVersion, LeaseGrant,
+                                 LocalWork, MapWork, ModelBlob, Nack, NoTask,
+                                 NOTIFICATION_TYPES, Ok, PublishModel,
+                                 ReduceWork, ServerApplier, ServerEndpoint,
+                                 SubmitUpdate, TaskDone, UpdateCommitted,
+                                 VersionReady, VolunteerSession, Wake,
+                                 WatchVersion, decode_message, encode_message)
+from repro.core.queue import (QueueServer, ShardedQueueServer, WallClock,
+                              colocate_results)
 from repro.core.simulator import SyntheticProblem
 from repro.core.transport import InProcessTransport, Transport
 
@@ -163,7 +169,12 @@ def _sock_timeout(sock: socket.socket, timeout: Optional[float]):
         prev = sock.gettimeout()
     except OSError:
         prev = None
-    sock.settimeout(timeout)
+    try:
+        sock.settimeout(timeout)
+    except OSError:
+        pass                    # socket already closed under us (die()/close):
+        #                         the next recv/send raises and the caller
+        #                         treats the connection as over
     try:
         yield sock
     finally:
@@ -244,6 +255,97 @@ def _synthetic_apply(blob, result, version: int):
     applying any admitted contribution to version v just names v+1 (the real
     engines hand ``ApplyWork`` to JAX; the gateway proves the protocol)."""
     return f"v{version + 1}"
+
+
+# ---------------------------------------------------------------------------
+# multi-gateway control plane: ownership facade + op-log replay
+# ---------------------------------------------------------------------------
+
+class _ClusterQueueView:
+    """The endpoint's queue-server facade on a cluster gateway: local queues
+    dispatch straight through; ticket acks/nacks/kicks for a queue owned by a
+    PEER gateway are handed to ``relay`` instead (the model owner committing
+    a SubmitUpdate acks a ticket whose queue lives elsewhere).
+
+    The presence check matters: ``QueueServer.ack`` auto-declares unknown
+    queues (``declare(qname).ack(tag)``), so blind delegation would grow
+    phantom queues on the model owner — and again during op-log replay, where
+    ``relay=None`` simply DROPS remote-queue ops (the owning gateway's own
+    log carries them; at-least-once absorbs a relay lost to a crash)."""
+
+    def __init__(self, local, relay=None):
+        self._local = local
+        self._relay = relay
+
+    def __getattr__(self, name):
+        return getattr(self._local, name)
+
+    def ack(self, qname: str, tag: int) -> bool:
+        if qname in self._local.queues:
+            return self._local.ack(qname, tag)
+        if self._relay is not None:
+            self._relay(Ack(qname, tag))
+        return True
+
+    def nack(self, qname: str, tag: int, *, front: bool = True) -> bool:
+        if qname in self._local.queues:
+            return self._local.nack(qname, tag, front=front)
+        if self._relay is not None:
+            self._relay(Nack(qname, tag, front))
+        return True
+
+    def kick(self, qname: str) -> bool:
+        if qname in self._local.queues:
+            return self._local.kick(qname)
+        if self._relay is not None:
+            self._relay(KickQueue(qname))
+        return False
+
+
+class _ReplayClock:
+    """LeaseClock for op-log replay: ``now`` is the recorded stamp of the op
+    being replayed, so the reconstructed server re-lives its own history —
+    lease deadlines land exactly where the live server put them."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def now(self) -> float:
+        return self.t
+
+
+def replay_oplog(prefix: str, *, policy: PolicyLike = None,
+                 visibility_timeout: float = float("inf")):
+    """Reconstruct a gateway's durable state from its op log: restore the
+    newest base, then re-dispatch every intact op record through a scratch
+    endpoint whose clock replays each op's recorded timestamp. Returns
+    ``(queue_server, data_server, meta)`` — ``meta`` carries the base's
+    policy/n_updates cross-check fields (None when the log has no base yet).
+
+    Ops that touch a queue owned by a DIFFERENT gateway (the model owner's
+    relayed ticket acks) are dropped by the same ownership facade the live
+    server dispatches through — the owning gateway's log carries them."""
+    pol = make_policy(policy)
+    base, ops = OpLog(prefix).load()
+    rq = QueueServer(default_timeout=visibility_timeout)
+    rd = DataServer()
+    meta = None
+    if base is not None:
+        state = decode_message(base)
+        # a fresh process replays the log: no live connections, so waiters
+        # are dropped rather than carried (the snapshot-restore convention)
+        rq.restore(state["qs"], waiters_from={})
+        rd.restore(state["ds"])
+        meta = {"policy": state.get("policy"),
+                "n_updates": state.get("n_updates")}
+    clk = _ReplayClock()
+    applier = None if pol.barrier else ServerApplier(pol, _synthetic_apply)
+    ep = ServerEndpoint(_ClusterQueueView(rq), rd, clock=clk, applier=applier)
+    for rec in ops:
+        r = decode_message(rec)
+        clk.t = r["t"]
+        ep.handle(r["m"])
+    return rq, rd, meta
 
 
 # ---------------------------------------------------------------------------
@@ -387,12 +489,129 @@ class _WsChannel:
 
 
 # ---------------------------------------------------------------------------
+# inter-gateway link
+# ---------------------------------------------------------------------------
+
+class _PeerLink:
+    """Client half of one inter-gateway connection (origin side).
+
+    One native-dialect socket serves three flows concurrently: ``forward``
+    request/reply (correlated by ``Forward.seq`` — many may be in flight),
+    ``forward_async`` fire-and-forget ticket relays, and owner->origin
+    ``ForwardNotify`` pushes, which the reader thread hands back to the
+    server for local delivery. The link registers on the peer as consumer
+    ``gw:<origin gid>`` via Hello — which is exactly how the peer's endpoint
+    addresses ForwardNotify frames at us."""
+
+    _DEAD = object()                 # reply slot sentinel: link died waiting
+
+    def __init__(self, server: "GatewayServer", gid: int, host: str,
+                 port: int):
+        self.server = server
+        self.gid = gid
+        self.closed = False
+        self.sock = _connect_with_retry(host, port, 2.0)
+        self._send_lock = _make_lock(f"gateway.peer{gid}._send_lock")
+        self._pending_lock = _make_lock(f"gateway.peer{gid}._pending_lock")
+        self._pending: Dict[int, list] = {}      # seq -> [Event, reply slot]
+        self._seq = 0
+        try:
+            with self._send_lock:
+                _send_frame(self.sock, Hello(f"gw:{server.gid}"))
+        except OSError as e:
+            self.close()
+            raise ConnectionError(f"gateway {gid} hung up: {e}") from e
+        threading.Thread(target=self._read_loop, daemon=True).start()
+
+    def _read_loop(self) -> None:
+        while True:
+            msg = _recv_frame(self.sock)
+            if msg is None:
+                break
+            if isinstance(msg, ForwardReply):
+                with self._pending_lock:
+                    ent = self._pending.pop(msg.seq, None)
+                if ent is not None:
+                    ent[1] = msg.inner
+                    ent[0].set()
+                # unknown seq: a forward_async reply or a timed-out waiter's
+                # late answer — both dropped by design
+            elif isinstance(msg, ForwardNotify):
+                self.server._deliver_forwarded(msg)
+            # anything else (the Hello's Ok) needs no action
+        self.closed = True
+        with self._pending_lock:
+            pend, self._pending = self._pending, {}
+        for ent in pend.values():
+            ent[0].set()             # slot stays _DEAD -> ConnectionError
+
+    def forward(self, inner, timeout: float = 30.0):
+        """Send ``Forward(inner)`` and block for the correlated reply."""
+        if self.closed:
+            raise ConnectionError(f"gateway {self.gid} link is down")
+        ent = [threading.Event(), _PeerLink._DEAD]
+        with self._pending_lock:
+            self._seq += 1
+            seq = self._seq
+            self._pending[seq] = ent
+        try:
+            with self._send_lock:
+                _send_frame(self.sock,
+                            Forward(seq, str(self.server.gid), inner))
+        except OSError as e:
+            with self._pending_lock:
+                self._pending.pop(seq, None)
+            raise ConnectionError(f"gateway {self.gid} hung up: {e}") from e
+        if not ent[0].wait(timeout):
+            with self._pending_lock:
+                self._pending.pop(seq, None)
+            raise ConnectionError(f"gateway {self.gid} forward timed out")
+        if ent[1] is _PeerLink._DEAD:
+            raise ConnectionError(f"gateway {self.gid} died mid-forward")
+        return ent[1]
+
+    def forward_async(self, inner) -> None:
+        """Fire-and-forget Forward (ticket relays): the reply frame is
+        dropped by the reader (unregistered seq). At-least-once semantics
+        absorb a relay the peer never received — the lease re-expires."""
+        if self.closed:
+            raise ConnectionError(f"gateway {self.gid} link is down")
+        with self._pending_lock:
+            self._seq += 1
+            seq = self._seq
+        try:
+            with self._send_lock:
+                _send_frame(self.sock,
+                            Forward(seq, str(self.server.gid), inner))
+        except OSError as e:
+            raise ConnectionError(f"gateway {self.gid} hung up: {e}") from e
+
+    def close(self) -> None:
+        self.closed = True
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+
+
+# ---------------------------------------------------------------------------
 # server
 # ---------------------------------------------------------------------------
 
 class GatewayServer:
     """Loopback volunteer service: wall-clock leases + sweeper, optional
     periodic snapshots, optional server-side applier (barrierless policies).
+
+    With ``gateways > 1`` the server is ONE member of a K-gateway control
+    plane: a ``GatewayRing`` (consistent hashing over ``colocate_results``
+    placement keys, ``MODEL_KEY`` for all DataServer state) decides which
+    gateway owns each request; non-owned requests are forwarded over
+    inter-gateway ``Forward`` frames. Durability is the per-gateway op log
+    under ``cluster_dir`` (``--cluster-dir`` alone, with ``gateways == 1``,
+    turns the op log on without the ring): every state-changing op is
+    fsynced BEFORE its reply goes out, so a kill -9'd gateway's slice can be
+    replayed by the deterministic adopter (smallest live gid) and the run
+    completes at the reference final version.
     """
 
     def __init__(self, problem=None, *, host: str = "127.0.0.1", port: int = 0,
@@ -402,7 +621,10 @@ class GatewayServer:
                  sweep_interval: float = 0.05,
                  snapshot_path: Optional[str] = None, snapshot_every: int = 0,
                  restore_from: Optional[str] = None,
-                 real_apply: bool = False):
+                 real_apply: bool = False,
+                 gid: int = 0, gateways: int = 1,
+                 cluster_dir: Optional[str] = None,
+                 oplog_segment_ops: int = 256):
         self.policy = make_policy(policy)
         self.clock = WallClock()
         if problem is None:
@@ -412,6 +634,32 @@ class GatewayServer:
             raise ValueError("GatewayServer needs the problem spec (pass the "
                              "same --n-versions/--n-mb as the original serve "
                              "when restoring)")
+        self.gid = int(gid)
+        self.gateways = int(gateways)
+        self.cluster_dir = cluster_dir
+        self.ring = (GatewayRing(range(self.gateways))
+                     if self.gateways > 1 else None)
+        #: placement rule shared with ShardedQueueServer: map-results:vN
+        #: colocates with the task queue, so ONE gateway owns a version's
+        #: whole barrier (publish + drain never straddle processes)
+        self._place = colocate_results
+        if self.ring is not None:
+            if cluster_dir is None:
+                raise ValueError("gateways > 1 needs cluster_dir (op logs "
+                                 "and peer port files live there)")
+            if not 0 <= self.gid < self.gateways:
+                raise ValueError(f"gid {gid} outside ring of {gateways}")
+            if real_apply:
+                raise ValueError("multi-gateway mode hosts the synthetic "
+                                 "applier only (the real JAX applier is "
+                                 "single-gateway)")
+            if n_shards > 1:
+                raise ValueError("multi-gateway mode subsumes --shards: the "
+                                 "ring partitions queues across processes")
+            if snapshot_path is not None:
+                raise ValueError("multi-gateway durability is the op log "
+                                 "(cluster_dir); snapshot_path is the "
+                                 "single-gateway snapshot file")
         self.qs = (QueueServer(default_timeout=visibility_timeout)
                    if n_shards <= 1
                    else ShardedQueueServer(n_shards,
@@ -443,7 +691,12 @@ class GatewayServer:
             else:
                 applier = ServerApplier(self.policy, _synthetic_apply)
         self.applier = applier
-        self.endpoint = ServerEndpoint(self.qs, self.ds, self._notify,
+        # on a cluster member the endpoint dispatches through the ownership
+        # facade: remote-queue ticket ops relay to their owner instead of
+        # auto-declaring phantom queues locally
+        eqs = self.qs if self.ring is None \
+            else _ClusterQueueView(self.qs, self._relay_ticket)
+        self.endpoint = ServerEndpoint(eqs, self.ds, self._notify,
                                        clock=self.clock, applier=applier)
         self.sweep_interval = sweep_interval
         self.snapshot_path = snapshot_path
@@ -466,6 +719,33 @@ class GatewayServer:
         self._conns: Dict[str, object] = {}      # consumer -> channel
         self.done = threading.Event()
         self._closed = threading.Event()
+        # -- cluster state --------------------------------------------------
+        self._oplog: Optional[OpLog] = None
+        self._op_buffer: list = []               # ("op"|"base", bytes) FIFO
+        self._ops_since_base = 0
+        self._fwd_outbox: list = []              # ticket relays awaiting send
+        self._peers: Dict[int, _PeerLink] = {}
+        self._peers_lock = _make_lock("gateway._peers_lock")
+        # failover is serialized and may block (replay reads the dead
+        # gateway's log from disk); order: _failover_lock -> _lock
+        self._failover_lock = _make_lock("gateway._failover_lock")
+        self._seen_version = 0                   # cluster-wide version echo
+        if self.ring is not None:
+            # this gateway serves only its ring slice: every queue the
+            # shared enqueue created for a peer's slice is dropped here
+            for name in list(self.qs.queues):
+                if self.ring.owner_of(self._place(name)) != self.gid:
+                    self.qs.detach(name)
+        if cluster_dir is not None:
+            os.makedirs(cluster_dir, exist_ok=True)
+            self._oplog = OpLog(
+                os.path.join(cluster_dir, f"gw{self.gid}.oplog"),
+                segment_ops=oplog_segment_ops)
+            self.endpoint.op_sink = self._log_op
+            # boot base: the new epoch captures the (pruned, possibly
+            # restored) starting state, so replaying a freshly-booted
+            # gateway is well-defined and older epochs are subsumed
+            self._oplog.write_base(self._encode_cluster_base())
         if self.ds.latest_version >= self.n_updates:
             self.done.set()                      # restored a finished run
         self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
@@ -473,6 +753,13 @@ class GatewayServer:
         self._sock.bind((host, port))
         self._sock.listen(16)
         self.port = self._sock.getsockname()[1]
+        if cluster_dir is not None:
+            # peers (and in-process clusters) discover us via the port file
+            pf = os.path.join(cluster_dir, f"gw{self.gid}.port")
+            tmp = pf + ".tmp"
+            with open(tmp, "w") as f:
+                f.write(str(self.port))
+            os.replace(tmp, pf)                  # atomic: readers never see ""
 
     # -- durability ------------------------------------------------------------
     def _encode_snapshot(self) -> Tuple[int, bytes]:
@@ -516,6 +803,30 @@ class GatewayServer:
         return self._write_snapshot(seq, data)
 
     def restore(self, path: str) -> None:
+        """Boot from durable state: an op-log prefix (base + replayed ops)
+        when ``path`` names one, else a legacy full-snapshot file."""
+        if OpLog.exists(path):
+            rq, rd, meta = replay_oplog(
+                path, policy=self.policy,
+                visibility_timeout=self.qs.default_timeout)
+            if meta is not None:
+                if meta["policy"] != self.policy.spec:
+                    raise ValueError(
+                        f"op log was served under policy={meta['policy']!r}, "
+                        f"this server is {self.policy.spec!r} — pass the "
+                        f"original --policy")
+                if meta["n_updates"] != self.n_updates:
+                    raise ValueError(
+                        f"op log's commit target is {meta['n_updates']}, "
+                        f"this server computes {self.n_updates} — pass the "
+                        f"original --n-versions/--n-mb")
+            if isinstance(self.qs, ShardedQueueServer):
+                # op logs are written by unsharded cluster members; restore
+                # to the matching kind (the legacy branch's coercion move)
+                self.qs = QueueServer(default_timeout=self.qs.default_timeout)
+            self.qs.restore(rq.snapshot(), waiters_from={})
+            self.ds.restore(rd.snapshot())
+            return
         state = decode_message(serialize.read_bytes(path))["gateway"]
         # the snapshot records the run's semantics as a cross-check: booting
         # it under different CLI flags must fail HERE, not as a confusing
@@ -553,6 +864,76 @@ class GatewayServer:
         self._ops_since_snap = 0
         return self._encode_snapshot()
 
+    # -- op log (cluster durability) -------------------------------------------
+    def _encode_cluster_base(self) -> bytes:
+        """Full durable state as an op-log base record (the protocol wire
+        codec, because queue bodies are wire dataclasses)."""
+        return encode_message({"qs": self.qs.snapshot(),
+                               "ds": self.ds.snapshot(),
+                               "policy": self.policy.spec,
+                               "n_updates": self.n_updates},
+                              codec=serialize.DEFAULT_CODEC)
+
+    def _log_op(self, m) -> None:
+        """Endpoint op sink — runs under the dispatch lock (pure CPU): the
+        op is encoded with its authority timestamp and buffered; the
+        dispatching thread flushes the buffer to disk BEFORE sending the
+        reply, so every acknowledged op is recoverable by replay. Every
+        ``snapshot_every`` ops a fresh base is queued behind the ops that
+        precede it, rolling the log's epoch at the flush."""
+        self._op_buffer.append(
+            ("op", encode_message({"t": self.clock.now(), "m": m})))
+        if self.snapshot_every > 0:
+            self._ops_since_base += 1
+            if self._ops_since_base >= self.snapshot_every:
+                self._ops_since_base = 0
+                self._op_buffer.append(("base", self._encode_cluster_base()))
+
+    def _flush_oplog(self) -> None:
+        """Drain the op buffer to disk in order — called with the dispatch
+        lock RELEASED (fsync is blocking; LOCK-BLOCK). ``_snap_lock``
+        serializes writers so two drains can never interleave their
+        batches; the dispatch lock is retaken only for the buffer swap."""
+        if self._oplog is None or self._closed.is_set():
+            return
+        with self._snap_lock:
+            with self._lock:
+                batch, self._op_buffer = self._op_buffer, []
+            if not batch:
+                return
+            mon = _monitor()
+            if mon is not None:
+                mon.note_blocking("oplog-fsync")
+            for kind, data in batch:
+                if kind == "base":
+                    self._oplog.write_base(data)
+                else:
+                    self._oplog.append(data)
+
+    @property
+    def observed_version(self) -> int:
+        """Latest model version this gateway can vouch for: its own
+        DataServer (when it is the model owner) or versions echoed in
+        forwarded replies and notifications (when a peer is)."""
+        return max(self.ds.latest_version, self._seen_version)
+
+    def _observe_version(self, msg) -> None:
+        """Track the cluster-wide latest version flowing through this
+        gateway — the model owner may be a peer, so the local DataServer
+        can be arbitrarily stale. Reaching the commit target sets ``done``
+        exactly like a local commit would."""
+        v = -1
+        if isinstance(msg, (LatestVersion, UpdateCommitted, VersionReady)):
+            v = msg.version
+        elif isinstance(msg, ModelBlob) and msg.present:
+            v = msg.version
+        elif isinstance(msg, LeaseGrant):
+            v = msg.latest
+        if v > self._seen_version:
+            self._seen_version = v
+        if self.observed_version >= self.n_updates:
+            self.done.set()
+
     # -- lease sweeper ---------------------------------------------------------
     def _sweep_loop(self) -> None:
         """Visibility-timeout enforcement on REAL deadlines: wake when the
@@ -563,15 +944,27 @@ class GatewayServer:
             pending = None
             with self._lock:
                 now = self.clock.now()
-                expired = self.qs.expire_all(now)
-                if expired and self.snapshot_every > 0 \
-                        and self.snapshot_path is not None:
-                    # expiry is a durable state change; encode under the
-                    # lock, fsync after releasing it
-                    pending = self._encode_snapshot()
+                if self._oplog is not None:
+                    # expiry through the endpoint so the op log records it:
+                    # replay must expire exactly what the live server did
+                    # (ExpireAll.now is applied verbatim). Dispatch only
+                    # when a real deadline has passed, so the log never
+                    # fills with no-op sweeps at the polling cadence.
+                    dl0 = self.qs.next_deadline()
+                    if dl0 is not None and dl0 <= now:
+                        self.endpoint.handle(ExpireAll(now))
+                else:
+                    expired = self.qs.expire_all(now)
+                    if expired and self.snapshot_every > 0 \
+                            and self.snapshot_path is not None:
+                        # expiry is a durable state change; encode under the
+                        # lock, fsync after releasing it
+                        pending = self._encode_snapshot()
                 dl = self.qs.next_deadline()
             if pending is not None:
                 self._write_snapshot(*pending)
+            self._flush_oplog()
+            self._drain_outbox()
             wait = self.sweep_interval if dl is None else \
                 max(0.0, min(dl - self.clock.now(), self.sweep_interval))
             self._closed.wait(wait if wait > 0 else 0.001)
@@ -624,46 +1017,362 @@ class GatewayServer:
             return None
         return channel
 
-    def _submit_drain(self, msg, channel) -> None:
+    # -- cluster routing + failover --------------------------------------------
+    def _route_key(self, msg) -> Optional[str]:
+        """Ring routing key for one request; None = dispatch locally (Hello
+        binds the connection; Bye/DropConsumer broadcast; ExpireAll is
+        server-internal)."""
+        if isinstance(msg, (FetchModel, PublishModel, GcModels, WatchVersion,
+                            LatestReq, SubmitUpdate)):
+            return MODEL_KEY
+        q = getattr(msg, "queue", None)
+        if q is not None:
+            return self._place(q)
+        return None
+
+    def _owner_for(self, key: str, timeout: float = 30.0) -> int:
+        """Resolve the current owner of ``key``, waiting out a failover
+        window (owner dead, adoption not yet recorded)."""
+        deadline = _CLOCK.now() + timeout
+        while True:
+            try:
+                return self.ring.owner_of(key)
+            except LookupError:
+                if _CLOCK.now() >= deadline:
+                    raise
+                time.sleep(0.02)
+
+    def _await_ownership(self, key: Optional[str],
+                         timeout: float = 30.0) -> None:
+        """Hold a forwarded request until this gateway owns ``key``'s slice.
+        The window where this actually waits is failover: peers route to
+        the deterministic adopter BEFORE it finishes replaying the dead
+        gateway's op log; the request proceeds the moment the merge
+        commits the adoption."""
+        if key is None or self.ring is None:
+            return
+        deadline = _CLOCK.now() + timeout
+        while not self._closed.is_set():
+            try:
+                if self.ring.owner_of(key) == self.gid:
+                    return
+            except LookupError:
+                pass                 # failover window: nobody owns it yet
+            if _CLOCK.now() >= deadline:
+                raise RuntimeError(
+                    f"gateway {self.gid}: forwarded request for slice "
+                    f"{key!r} but ownership never arrived")
+            time.sleep(0.02)
+
+    def _peer_port(self, g: int, wait: float = 20.0) -> Optional[int]:
+        pf = os.path.join(self.cluster_dir, f"gw{g}.port")
+        deadline = _CLOCK.now() + wait
+        while True:
+            try:
+                with open(pf) as f:
+                    return int(f.read())
+            except (OSError, ValueError):
+                # missing at boot = not up YET (no liveness verdict); the
+                # caller decides how long a missing file is tolerable
+                if _CLOCK.now() >= deadline:
+                    return None
+                time.sleep(0.05)
+
+    def _peer(self, g: int) -> _PeerLink:
+        """The (cached) link to gateway ``g``; reconnects a dead link once —
+        a closed socket may just be a restarted peer."""
+        with self._peers_lock:
+            link = self._peers.get(g)
+        if link is not None and not link.closed:
+            return link
+        port = self._peer_port(g)
+        if port is None:
+            raise ConnectionError(f"gateway {g} never published a port file")
+        fresh = _PeerLink(self, g, "127.0.0.1", port)
+        with self._peers_lock:
+            cur = self._peers.get(g)
+            if cur is not None and not cur.closed and cur is not link:
+                fresh.close()        # lost the reconnect race; use theirs
+                return cur
+            self._peers[g] = fresh
+        return fresh
+
+    def _peer_died(self, g: int) -> None:
+        """A send/connect to ``g`` failed: drop its link and run failover."""
+        with self._peers_lock:
+            link = self._peers.get(g)
+            if link is not None and link.closed:
+                self._peers.pop(g, None)
+        self._on_peer_death(g)
+
+    def _on_peer_death(self, dead: int) -> None:
+        """Failover: mark ``dead`` dead on the ring; the deterministic
+        adopter (smallest live gid) replays the dead gateway's op log and
+        merges its slice, every other survivor just records the redirect.
+        Serialized and idempotent — reentry for an already-dead gid is a
+        no-op, so racing detectors (pinger, forward errors) are safe."""
+        with self._failover_lock:
+            if self.ring is None or dead == self.gid or \
+                    dead not in self.ring.live():
+                return
+            try:
+                dead_owned_model = self.ring.owner_of(MODEL_KEY) == dead
+            except LookupError:
+                dead_owned_model = False
+            self.ring.kill(dead)
+            adopter = self.ring.default_adopter(dead)
+            if adopter != self.gid:
+                # optimistic redirect: the adopter gates forwarded requests
+                # on its own merge, so routing ahead of it is safe
+                self.ring.adopt(dead, adopter)
+                log.warning("gateway %d: peer %d died; slice redirects to "
+                            "adopter %d", self.gid, dead, adopter)
+                return
+            prefix = os.path.join(self.cluster_dir, f"gw{dead}.oplog")
+            rq, rd, _ = replay_oplog(
+                prefix, policy=self.policy,
+                visibility_timeout=self.qs.default_timeout)
+            n_queues = len(rq.queues)
+            with self._lock:
+                for name in list(rq.queues):
+                    moved = rq.detach(name)
+                    if name in self.qs.queues:
+                        # both sides only transiently (a relay declared it
+                        # here): keep OUR live waiters, their durable body
+                        local = self.qs.detach(name)
+                        moved.adopt_waiters(local)
+                    self.qs.attach(moved)
+                if dead_owned_model:
+                    # in-place restore: the endpoint aliases self.ds
+                    self.ds.restore(rd.snapshot())
+                self.ring.adopt(dead, self.gid)
+                # the merged state becomes a fresh base: OUR log now carries
+                # the adopted slice, so a SECOND failover replays from here
+                self._op_buffer.append(
+                    ("base", self._encode_cluster_base()))
+                if self.observed_version >= self.n_updates:
+                    self.done.set()
+            self._flush_oplog()
+            log.warning("gateway %d: adopted slice of dead gateway %d "
+                        "(%d queues, model_owner=%s)", self.gid, dead,
+                        n_queues, dead_owned_model)
+
+    def _forward_retry(self, key: str, msg, timeout: float = 30.0):
+        """Dispatch ``msg`` at the current owner of ``key``, retrying across
+        a failover (the owner may die mid-forward, or become US). Retried
+        ops may double-apply — at-least-once, absorbed the same way
+        re-leased tickets are."""
+        deadline = _CLOCK.now() + timeout
+        while True:
+            owner = self._owner_for(key)
+            if owner == self.gid:
+                with self._lock:
+                    reply = self.endpoint.handle(msg)
+                    if self.ds.latest_version >= self.n_updates:
+                        self.done.set()
+                self._flush_oplog()
+                self._drain_outbox()
+                return reply
+            try:
+                return self._peer(owner).forward(msg)
+            except ConnectionError:
+                self._peer_died(owner)
+                if _CLOCK.now() >= deadline:
+                    raise
+                time.sleep(0.02)
+
+    def _route_cluster(self, msg, channel) -> bool:
+        """Cluster routing for one client request. True = fully handled
+        (forwarded or broadcast, reply sent); False = this gateway owns the
+        slice, fall through to local dispatch."""
+        if isinstance(msg, (Bye, DropConsumer)):
+            # consumer-scoped cleanup must reach EVERY gateway: the
+            # consumer's leases and waiters may span several owners' slices
+            with self._lock:
+                reply = self.endpoint.handle(msg)
+            total = reply.value if isinstance(reply.value, int) else 0
+            for g in self.ring.live():
+                if g == self.gid:
+                    continue
+                try:
+                    r = self._peer(g).forward(msg)
+                    if isinstance(r, Ok) and isinstance(r.value, int):
+                        total += r.value
+                except ConnectionError:
+                    self._peer_died(g)
+            self._flush_oplog()
+            with self._lock:
+                channel.send(Ok(total))
+            return True
+        key = self._route_key(msg)
+        if key is None or self._owner_for(key) == self.gid:
+            return False
+        reply = self._forward_retry(key, msg)
+        self._observe_version(reply)
+        with self._lock:
+            channel.send(reply)
+        return True
+
+    def _relay_ticket(self, msg) -> None:
+        """Ownership-facade hook: an ack/nack/kick for a PEER's queue raised
+        mid-dispatch (the model owner committing a SubmitUpdate acks a
+        ticket whose queue lives elsewhere). Runs UNDER the dispatch lock,
+        so it only enqueues; the dispatching thread relays after release
+        (at-least-once absorbs a relay lost to a crash)."""
+        self._fwd_outbox.append(msg)
+
+    def _drain_outbox(self) -> None:
+        """Send buffered ticket relays to their owners — called with the
+        dispatch lock released. Undeliverable relays requeue for the next
+        drain (sweeper cadence bounds the delay)."""
+        if self.ring is None or not self._fwd_outbox:
+            return
+        with self._lock:
+            batch, self._fwd_outbox = self._fwd_outbox, []
+        requeue = []
+        for m in batch:
+            try:
+                owner = self.ring.owner_of(self._place(m.queue))
+            except LookupError:
+                requeue.append(m)    # failover window: retry next drain
+                continue
+            if owner == self.gid:    # adopted mid-flight: now local
+                with self._lock:
+                    self.endpoint.handle(m)
+                continue
+            try:
+                self._peer(owner).forward_async(m)
+            except ConnectionError:
+                self._peer_died(owner)
+                requeue.append(m)
+            except RuntimeError:
+                requeue.append(m)    # shutting down; next drain decides
+        if requeue:
+            with self._lock:
+                self._fwd_outbox.extend(requeue)
+
+    def _deliver_forwarded(self, fn: ForwardNotify) -> None:
+        """A peer pushed a notification owed to one of OUR consumers
+        (their endpoint fired a watch/wake registered via Forward)."""
+        self._observe_version(fn.inner)
+        with self._lock:
+            self._notify(fn.consumer, fn.inner)
+
+    def _failover_loop(self) -> None:
+        """Peer liveness + end-of-run observation, at sweeper-ish cadence.
+        Each round pings every live peer over its link (a forwarded Hello
+        is the cheapest request that proves the peer's dispatch loop is
+        alive); a failure on a peer that HAS published its port file means
+        the process died -> failover. The model owner's latest version is
+        probed too, so a gateway serving only forwarded traffic still
+        observes the run finishing."""
+        while not self._closed.is_set():
+            for g in self.ring.live():
+                if g == self.gid or self._closed.is_set():
+                    continue
+                if self._peer_port(g, wait=0.0) is None:
+                    continue         # not up yet: no link, no verdict
+                try:
+                    self._peer(g).forward(Hello(f"gw:{self.gid}"),
+                                          timeout=5.0)
+                except ConnectionError:
+                    self._peer_died(g)
+            try:
+                owner = self.ring.owner_of(MODEL_KEY)
+                if owner == self.gid:
+                    self._observe_version(
+                        LatestVersion(self.ds.latest_version))
+                else:
+                    self._observe_version(
+                        self._peer(owner).forward(LatestReq(), timeout=5.0))
+            except (LookupError, ConnectionError):
+                pass                 # failover window / dead link: next round
+            self._drain_outbox()
+            self._closed.wait(0.3)
+
+    def die(self) -> None:
+        """In-process stand-in for kill -9 (benchmarks/tests): stop serving
+        and DROP the buffered-but-unflushed ops — exactly the state the
+        real signal loses. The on-disk op log is left as the crash left
+        it."""
+        self._closed.set()
+        with self._lock:
+            self._op_buffer = []
+            conns, self._conns = dict(self._conns), {}
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+        with self._peers_lock:
+            links, self._peers = dict(self._peers), {}
+        for link in links.values():
+            link.close()
+        for ch in conns.values():
+            ch.close()
+
+    def _send_submit_reply(self, entry, reply) -> None:
+        """Send one drained submit reply (under the dispatch lock),
+        wrapping it as ``ForwardReply`` when the submit arrived forwarded
+        from a peer gateway."""
+        _, channel, _, wrap = entry
+        out = reply if wrap is None else ForwardReply(wrap, reply)
+        try:
+            channel.send(out)
+        except OSError:
+            # peer died mid-drain: its update is already committed/nacked
+            # server-side; drop the dead conn registration (the _notify
+            # convention) and let ITS thread's recv observe the close
+            for c, ch in list(self._conns.items()):
+                if ch is channel:
+                    self._conns.pop(c, None)
+
+    def _submit_drain(self, msg, channel,
+                      wrap: Optional[int] = None) -> None:
         """Combining-lock commit: enqueue this ``SubmitUpdate``, then whoever
         wins the dispatch lock drains EVERY pending submit through one
         ``endpoint.submit_batch`` call (one jitted dispatch on a real
-        applier) and sends every drained reply — all under the lock, like
+        applier) and sends every drained reply — under the lock, like
         ordinary dispatch, so reply frames never interleave with pushed
         notifications. A thread whose entry was drained by another finds its
-        event already set and just returns to ``recv``."""
-        entry = (msg, channel, threading.Event())
+        event already set and just returns to ``recv``. With the op log on,
+        replies go out only AFTER the drained ops are fsynced (durability
+        before acknowledgement); ``wrap`` carries the ``Forward.seq`` of a
+        submit that arrived forwarded from a peer gateway."""
+        entry = (msg, channel, threading.Event(), wrap)
         with self._submit_lock:
             self._submit_pending.append(entry)
-        pendings = []
-        with self._lock:
-            with self._submit_lock:
-                batch, self._submit_pending = self._submit_pending, []
-            if batch:
-                try:
+        pendings: list = []
+        batch: list = []
+        sends: list = []
+        try:
+            with self._lock:
+                with self._submit_lock:
+                    batch, self._submit_pending = self._submit_pending, []
+                if batch:
                     replies = self.endpoint.submit_batch(
                         [e[0] for e in batch])
-                    for e, reply in zip(batch, replies):
-                        try:
-                            e[1].send(reply)
-                        except OSError:
-                            # peer died mid-drain: its update is already
-                            # committed/nacked server-side; drop the dead
-                            # conn registration (the _notify convention) and
-                            # let ITS thread's recv observe the close
-                            for c, ch in list(self._conns.items()):
-                                if ch is e[1]:
-                                    self._conns.pop(c, None)
+                    if self._oplog is not None:
+                        sends = list(zip(batch, replies))
+                    else:
+                        for e, reply in zip(batch, replies):
+                            self._send_submit_reply(e, reply)
+                    for e in batch:
                         p = self._maybe_snapshot(e[0])
                         if p is not None:
                             pendings.append(p)
-                finally:
-                    for e in batch:
-                        e[2].set()
-                if self.ds.latest_version >= self.n_updates:
-                    self.done.set()
+                    if self.ds.latest_version >= self.n_updates:
+                        self.done.set()
+            if sends:
+                self._flush_oplog()
+                with self._lock:
+                    for e, reply in sends:
+                        self._send_submit_reply(e, reply)
+        finally:
+            for e in batch:
+                e[2].set()
         for p in pendings:
             self._write_snapshot(*p)
+        self._drain_outbox()
         entry[2].wait()
 
     def _serve_conn(self, conn: socket.socket) -> None:
@@ -676,21 +1385,51 @@ class GatewayServer:
                 msg = channel.recv()
                 if msg is None:
                     break
+                if isinstance(msg, Forward) and \
+                        isinstance(msg.inner, SubmitUpdate) and \
+                        self.applier is not None:
+                    # a peer forwarded a submit to us (the model owner):
+                    # same combining drain, reply wrapped by its seq
+                    self._await_ownership(MODEL_KEY)
+                    self._submit_drain(msg.inner, channel, wrap=msg.seq)
+                    continue
                 if isinstance(msg, SubmitUpdate) and \
                         self.applier is not None:
+                    if self.ring is not None and \
+                            self._owner_for(MODEL_KEY) != self.gid:
+                        reply = self._forward_retry(MODEL_KEY, msg)
+                        self._observe_version(reply)
+                        with self._lock:
+                            channel.send(reply)
+                        continue
                     self._submit_drain(msg, channel)
                     continue
+                if self.ring is not None:
+                    if isinstance(msg, Forward):
+                        # dispatch the envelope locally: endpoint.handle
+                        # unwraps, records remote consumers, wraps the reply
+                        self._await_ownership(self._route_key(msg.inner))
+                    elif self._route_cluster(msg, channel):
+                        continue
                 with self._lock:
                     if isinstance(msg, Hello):
                         consumer = msg.consumer
                         self._conns[consumer] = channel
                     reply = self.endpoint.handle(msg)
-                    channel.send(reply)
+                    if self._oplog is None:
+                        channel.send(reply)
                     pending = self._maybe_snapshot(msg)
                     if self.ds.latest_version >= self.n_updates:
                         self.done.set()
+                if self._oplog is not None:
+                    # durability before acknowledgement: the op reaches
+                    # disk before the client ever sees its reply
+                    self._flush_oplog()
+                    with self._lock:
+                        channel.send(reply)
                 if pending is not None:
                     self._write_snapshot(*pending)
+                self._drain_outbox()
         finally:
             with self._lock:
                 if consumer is not None \
@@ -717,6 +1456,8 @@ class GatewayServer:
 
     def start(self) -> threading.Thread:
         threading.Thread(target=self._sweep_loop, daemon=True).start()
+        if self.ring is not None:
+            threading.Thread(target=self._failover_loop, daemon=True).start()
         t = threading.Thread(target=self.serve_forever, daemon=True)
         t.start()
         return t
@@ -724,6 +1465,10 @@ class GatewayServer:
     def close(self) -> None:
         self._closed.set()
         self._sock.close()
+        with self._peers_lock:
+            links, self._peers = dict(self._peers), {}
+        for link in links.values():
+            link.close()
 
 
 # ---------------------------------------------------------------------------
@@ -1087,14 +1832,22 @@ def run_volunteer_resilient(host: str, port: int, vid: str, n_updates: int, *,
                             policy: PolicyLike = None, task_delay: float = 0.0,
                             max_reconnects: int = 20, dialect: str = "tcp",
                             problem: Optional[TrainingProblem] = None,
+                            fallback_ports: Tuple[int, ...] = (),
                             ) -> Tuple[int, int, int]:
     """``run_volunteer`` that survives gateway crashes: on a connection error
     it reconnects (fresh transport + session, same consumer id) and resumes.
     A lease the dead attempt held is recovered by the server's wall-clock
     sweeper, so no work is lost — only possibly repeated (at-least-once).
     ``dialect`` picks the framing ("tcp" native, "ws" RFC 6455).
+    ``fallback_ports`` are alternative gateways (a multi-gateway cluster)
+    tried round-robin on each reconnect, so a volunteer whose HOME gateway
+    is kill -9'd rejoins the run through a surviving peer.
     Returns (final_version, tasks_done_total, reconnects)."""
     transport_cls = _DIALECTS[dialect]
+    ports = [port, *fallback_ports]
+    # a lone gateway may restart on its port (wait generously); a cluster
+    # volunteer should fail fast and rotate to the next surviving gateway
+    connect_timeout = 15.0 if len(ports) == 1 else 3.0
     tally = [0]
     reconnects = -1
     while True:
@@ -1103,7 +1856,8 @@ def run_volunteer_resilient(host: str, port: int, vid: str, n_updates: int, *,
             raise ConnectionError(
                 f"{vid}: gave up after {max_reconnects} reconnects")
         try:
-            transport = transport_cls(host, port, vid, connect_timeout=15.0)
+            transport = transport_cls(host, ports[reconnects % len(ports)],
+                                      vid, connect_timeout=connect_timeout)
         except ConnectionError:
             continue
         try:
@@ -1157,13 +1911,16 @@ def _serve(args) -> int:
         policy=args.policy, n_shards=args.shards,
         visibility_timeout=args.visibility_timeout,
         snapshot_path=args.snapshot_path, snapshot_every=args.snapshot_every,
-        restore_from=args.restore_from, real_apply=args.real_apply)
+        restore_from=args.restore_from, real_apply=args.real_apply,
+        gid=args.gid, gateways=args.gateways, cluster_dir=args.cluster_dir)
     if args.port_file:
         tmp = args.port_file + ".tmp"
         with open(tmp, "w") as f:
             f.write(str(server.port))
         os.replace(tmp, args.port_file)         # atomic: readers never see ""
-    print(f"gateway: serving {args.n_versions} versions x "
+    who = f"gateway gw{args.gid}/{args.gateways}" if args.gateways > 1 \
+        else "gateway"
+    print(f"{who}: serving {args.n_versions} versions x "
           f"{args.n_mb}+1 tasks (policy={server.policy.spec}, "
           f"target={server.n_updates}, "
           f"vt={args.visibility_timeout}) on 127.0.0.1:{server.port}"
@@ -1173,18 +1930,20 @@ def _serve(args) -> int:
     server.done.wait(timeout=args.timeout)
     # linger until connected volunteers finish their goodbyes (Bye + close);
     # generous, because a volunteer parked in a timed wait notices the end
-    # of the run on its next wakeup, not instantly
+    # of the run on its next wakeup, not instantly. Inter-gateway links
+    # ("gw:" consumers) are not volunteers — peers exit on their own clock.
     deadline = _CLOCK.now() + 20.0
-    while server._conns and _CLOCK.now() < deadline:
+    while any(not c.startswith("gw:") for c in server._conns) \
+            and _CLOCK.now() < deadline:
         time.sleep(0.02)
-    ok = server.ds.latest_version >= server.n_updates
+    ok = server.observed_version >= server.n_updates
     applier_stats = ""
     if args.real_apply and server.applier is not None:
         ap = server.applier
         applier_stats = (f" applied={ap.applied} rejected={ap.rejected} "
                          f"batches={ap.batches} "
                          f"batched_updates={ap.batched_updates}")
-    print(f"gateway: final_version={server.ds.latest_version} "
+    print(f"{who}: final_version={server.observed_version} "
           f"snapshots={server.snapshots_written} "
           f"({'done' if ok else 'TIMEOUT'})" + applier_stats, flush=True)
     server.close()
@@ -1193,10 +1952,13 @@ def _serve(args) -> int:
 
 def _volunteer(args) -> int:
     n_updates = _target(args)
+    fallback = tuple(int(p) for p in args.ports.split(",") if p) \
+        if args.ports else ()
     final, tasks, reconnects = run_volunteer_resilient(
         "127.0.0.1", args.port, args.vid, n_updates, policy=args.policy,
         task_delay=args.task_delay, dialect=args.dialect,
-        problem=_real_problem() if args.real_apply else None)
+        problem=_real_problem() if args.real_apply else None,
+        fallback_ports=fallback)
     print(f"volunteer {args.vid} [{args.dialect}]: final_version={final} "
           f"tasks={tasks} reconnects={reconnects}", flush=True)
     if args.expect_final is not None and final != args.expect_final:
@@ -1548,6 +2310,78 @@ def _smoke_real_applier(args) -> None:
           f"the drained run")
 
 
+def _smoke_cluster(args) -> int:
+    """``--smoke-cluster`` — the multi-gateway control plane under kill -9:
+    three gateway PROCESSES share one consistent-hash ring; the MODEL
+    owner is SIGKILLed mid-run; the deterministic adopter replays its op
+    log, volunteers fail over to surviving ports, and the run completes at
+    the reference final version (the chaos contract's wall-clock twin)."""
+    k = 3
+    target = _target(args)
+    ring = GatewayRing(range(k))
+    victim = ring.owner_of(MODEL_KEY)    # hardest slice: model state adopts
+    with tempfile.TemporaryDirectory() as td:
+        procs = []
+        for gid in range(k):
+            procs.append(subprocess.Popen(
+                [sys.executable, "-m", "repro.core.gateway", "--serve",
+                 "--gid", str(gid), "--gateways", str(k),
+                 "--cluster-dir", td,
+                 "--n-versions", str(args.n_versions),
+                 "--n-mb", str(args.n_mb), "--policy", args.policy,
+                 "--visibility-timeout", "2.0", "--snapshot-every", "8",
+                 "--timeout", "120"],
+                env=os.environ.copy()))
+        try:
+            ports = []
+            for gid in range(k):
+                ports.append(_wait_port(os.path.join(td, f"gw{gid}.port"),
+                                        procs[gid]))
+            results: Dict[int, Tuple[int, int, int]] = {}
+
+            def drive(i: int, home: int) -> None:
+                order = [ports[home]] + [p for j, p in enumerate(ports)
+                                         if j != home]
+                results[i] = run_volunteer_resilient(
+                    "127.0.0.1", order[0], f"cv{i}", target,
+                    policy=args.policy, task_delay=0.15,
+                    fallback_ports=tuple(order[1:]))
+
+            # one volunteer homed on the victim (exercises port failover),
+            # one on a survivor (exercises re-forwarding after adoption)
+            homes = [victim, (victim + 1) % k]
+            threads = [threading.Thread(target=drive, args=(i, h),
+                                        daemon=True)
+                       for i, h in enumerate(homes)]
+            t0 = _CLOCK.now()
+            for th in threads:
+                th.start()
+            time.sleep(1.0)                      # mid-run (28 tasks x 150ms)
+            assert procs[victim].poll() is None, "victim exited early"
+            procs[victim].send_signal(signal.SIGKILL)
+            procs[victim].wait(timeout=10)
+            for th in threads:
+                th.join(timeout=110)
+                assert not th.is_alive(), "cluster volunteer deadlocked"
+            wall = _CLOCK.now() - t0
+            rcs = [procs[g].wait(timeout=60) for g in range(k)
+                   if g != victim]
+        finally:
+            for p in procs:
+                if p.poll() is None:
+                    p.kill()
+    finals = [results[i][0] for i in sorted(results)]
+    reconnects = sum(results[i][2] for i in results)
+    assert finals == [target] * 2, f"cluster run did not converge: {finals}"
+    assert rcs == [0] * (k - 1), f"surviving gateways exited {rcs}"
+    assert reconnects >= 1, "no volunteer ever observed the kill"
+    print(f"# OK gateway smoke [cluster]: 3-gateway ring, model owner "
+          f"gw{victim} kill -9'd mid-run; adopter replayed its op log and "
+          f"every volunteer finished at v{target} "
+          f"({reconnects} reconnects) in {wall:.1f}s")
+    return 0
+
+
 def _smoke(args) -> int:
     _smoke_transport_equivalence(args)
     _smoke_lease_sweeper(args)
@@ -1568,7 +2402,21 @@ def main(argv=None) -> int:
     mode.add_argument("--serve", action="store_true")
     mode.add_argument("--volunteer", action="store_true")
     mode.add_argument("--smoke", action="store_true")
+    mode.add_argument("--smoke-cluster", action="store_true",
+                      help="multi-gateway leg: 3-process ring, model owner "
+                           "kill -9'd mid-run, op-log failover completes it")
     ap.add_argument("--port", type=int, default=0)
+    ap.add_argument("--gid", type=int, default=0,
+                    help="serve: this gateway's id on the cluster ring")
+    ap.add_argument("--gateways", type=int, default=1,
+                    help="serve: ring size; >1 enables the multi-gateway "
+                         "control plane (needs --cluster-dir)")
+    ap.add_argument("--cluster-dir", default=None,
+                    help="per-gateway op logs + port files; set with "
+                         "--gateways 1 to get op-log durability alone")
+    ap.add_argument("--ports", default=None,
+                    help="volunteer: comma-separated fallback gateway ports "
+                         "tried round-robin on reconnect")
     ap.add_argument("--port-file", default=None)
     ap.add_argument("--vid", default="gw0")
     ap.add_argument("--dialect", choices=sorted(_DIALECTS), default="tcp",
@@ -1603,6 +2451,8 @@ def main(argv=None) -> int:
         rc = _serve(args)
     elif args.volunteer:
         rc = _volunteer(args)
+    elif args.smoke_cluster:
+        rc = _smoke_cluster(args)
     else:
         rc = _smoke(args)
     mon = _monitor()

@@ -276,6 +276,36 @@ class Bye:
     consumer: str
 
 
+@wire
+@dataclass(frozen=True)
+class ExpireAll:
+    """Server-authority lease sweep as a PROTOCOL message: requeue every
+    lease whose visibility deadline is <= ``now``. ``now`` is stamped by the
+    caller that owns time (the gateway's sweeper thread, an engine's virtual
+    clock) and is applied verbatim — never re-stamped by the endpoint clock —
+    because the op log records this message and failover replay must expire
+    exactly the leases the live server expired, at exactly the recorded
+    times."""
+    now: float
+
+
+@wire
+@dataclass(frozen=True)
+class Forward:
+    """Inter-gateway routing envelope: gateway ``origin`` did not own the
+    ring slice for ``inner``'s routing key, so it forwards the request to the
+    owner verbatim. The owner dispatches ``inner`` as if the client were
+    local and returns its reply in a ``ForwardReply`` with the same ``seq``
+    (the origin runs many forwards concurrently over one peer link).
+    Forwards never nest — the origin resolves the final owner before
+    sending — and the envelope itself is never op-logged: the dispatched
+    ``inner`` is, so failover replay is identical whether traffic arrived
+    locally or forwarded."""
+    seq: int
+    origin: str
+    inner: Any
+
+
 # ---------------------------------------------------------------------------
 # messages: replies
 # ---------------------------------------------------------------------------
@@ -334,6 +364,15 @@ class UpdateRejected:
     latest: int
 
 
+@wire
+@dataclass(frozen=True)
+class ForwardReply:
+    """The owner's reply to a ``Forward``, correlated by ``seq``; ``inner``
+    is the reply the dispatched request produced."""
+    seq: int
+    inner: Any
+
+
 # ---------------------------------------------------------------------------
 # messages: async notifications (server -> client)
 # ---------------------------------------------------------------------------
@@ -353,15 +392,41 @@ class VersionReady:
     version: int
 
 
-NOTIFICATION_TYPES = (Wake, VersionReady)
+@wire
+@dataclass(frozen=True)
+class ForwardNotify:
+    """A notification (``Wake``/``VersionReady``) owed to consumer
+    ``consumer`` whose connection lives on ANOTHER gateway: the slice owner
+    wraps the fire and sends it to the consumer's home gateway, which unwraps
+    and delivers ``inner`` down the consumer's local connection."""
+    consumer: str
+    inner: Any
+
+
+NOTIFICATION_TYPES = (Wake, VersionReady, ForwardNotify)
 
 REQUEST_TYPES = (Hello, LeaseReq, Ack, Nack, ExtendLease, PublishResult,
                  FetchModel, PublishModel, GcModels, WatchVersion,
                  SubscribeQueue, KickQueue, DropConsumer, DepthReq,
-                 DrainedReq, LatestReq, SubmitUpdate, Bye)
+                 DrainedReq, LatestReq, SubmitUpdate, Bye, ExpireAll,
+                 Forward)
 
 REPLY_TYPES = (LeaseGrant, LeaseEmpty, Ok, ModelBlob, LatestVersion,
-               UpdateCommitted, UpdateRejected)
+               UpdateCommitted, UpdateRejected, ForwardReply)
+
+#: requests that read server state without mutating it — safe to dispatch
+#: outside the gateway's guard lock, and never worth op-logging
+READONLY_TYPES = (LatestReq, DepthReq, DrainedReq, FetchModel, Hello)
+
+#: requests the op log records (state-changing, connection-independent).
+#: ``SubscribeQueue``/``WatchVersion`` are deliberately absent: waiters are
+#: session-bound (snapshots exclude them for the same reason) and replaying
+#: one would register a phantom waiter against a dead connection.
+#: ``SubmitUpdate`` is logged too, but at the ``submit_batch`` layer so a
+#: batched drain logs its updates in exact application order. ``Forward``
+#: envelopes are never logged — their dispatched ``inner`` is.
+OPLOG_TYPES = (LeaseReq, Ack, Nack, ExtendLease, PublishResult, PublishModel,
+               GcModels, KickQueue, DropConsumer, Bye, ExpireAll)
 
 
 # ---------------------------------------------------------------------------
@@ -427,6 +492,16 @@ class ServerEndpoint:
         self.ds = ds
         self.clock = clock
         self.applier = applier
+        # op log sink: when set (the gateway installs one), every successfully
+        # dispatched state-changing request (``OPLOG_TYPES`` + each
+        # ``SubmitUpdate`` in batch order) is handed to it AFTER dispatch, so
+        # a failover replay of the recorded stream reconstructs this
+        # endpoint's durable state exactly
+        self.op_sink: Optional[Callable[[Any], None]] = None
+        # consumers whose connection lives on another gateway (registered by
+        # a forwarded SubscribeQueue/WatchVersion): consumer -> origin gid;
+        # their notification fires leave as ForwardNotify to the home gateway
+        self._remote_consumers: Dict[str, str] = {}
         self._notify = notify if notify is not None else (lambda c, m: None)
         # live (consumer, version) watches: lossy/timed clients re-subscribe
         # defensively, and the queue side dedupes waiters per consumer — this
@@ -451,7 +526,19 @@ class ServerEndpoint:
         stop consuming one-shot wakes nobody can deliver; leases stay —
         lease recovery is deliberately the sweeper's (the volunteer may
         reconnect and heartbeat; only real death expires them)."""
+        self._remote_consumers.pop(consumer, None)
         return self.qs.unsubscribe(consumer)
+
+    def _deliver(self, consumer: str, msg) -> None:
+        """Route one notification fire: locally-connected consumers get the
+        message as-is; a consumer registered through a ``Forward`` gets it
+        wrapped in ``ForwardNotify`` addressed to its home gateway's peer
+        link (consumer id ``gw:<origin>``)."""
+        origin = self._remote_consumers.get(consumer)
+        if origin is None:
+            self._notify(consumer, msg)
+        else:
+            self._notify(f"gw:{origin}", ForwardNotify(consumer, msg))
 
     def now(self, client_now: float = 0.0) -> float:
         """Lease-authority time: the installed clock, else the client's."""
@@ -481,6 +568,13 @@ class ServerEndpoint:
         if ap is None:
             raise TypeError("SubmitUpdate needs a ServerApplier on the "
                             "endpoint (server-side apply is not enabled)")
+        if self.op_sink is not None:
+            # arrival order IS application order (admission is precomputed in
+            # arrival order), so replaying these one-at-a-time reproduces the
+            # drain's state exactly — the batching is invisible to the log
+            # just as it is on the wire
+            for m in msgs:
+                self.op_sink(m)
         replies: List[Any] = [None] * len(msgs)
         base = self.ds.latest_version
         v = base
@@ -529,6 +623,26 @@ class ServerEndpoint:
         return replies
 
     def handle(self, m):
+        """Dispatch one request and return its reply, feeding the op log.
+
+        ``Forward`` unwraps here: the envelope records the origin gateway for
+        any session-binding inner (so notification fires route home), then
+        the inner request dispatches through this same method — op-logging
+        included — and the reply goes back wrapped with the envelope's seq.
+        """
+        if isinstance(m, Forward):
+            inner = m.inner
+            if isinstance(inner, (SubscribeQueue, WatchVersion)):
+                self._remote_consumers[inner.consumer] = m.origin
+            return ForwardReply(m.seq, self.handle(inner))
+        reply = self._dispatch(m)
+        # logged only after a successful dispatch: a request that raised
+        # must not survive into the replay stream
+        if self.op_sink is not None and isinstance(m, OPLOG_TYPES):
+            self.op_sink(m)
+        return reply
+
+    def _dispatch(self, m):
         if isinstance(m, LeaseReq):
             got = self.qs.lease(m.queue, m.consumer, self.now(m.now),
                                 m.timeout)
@@ -565,20 +679,21 @@ class ServerEndpoint:
 
             def fire(key=key, consumer=m.consumer, version=m.version):
                 self._watch_keys.discard(key)
-                self._notify(consumer, VersionReady(version))
+                self._deliver(consumer, VersionReady(version))
 
             self.ds.watch_version(m.version, fire)
             return Ok(True)
         if isinstance(m, SubscribeQueue):
             self.qs.subscribe(
                 m.queue, m.consumer,
-                lambda: self._notify(m.consumer, Wake(m.queue, m.kind)),
+                lambda: self._deliver(m.consumer, Wake(m.queue, m.kind)),
                 kind=m.kind)
             return Ok()
         if isinstance(m, KickQueue):
             self.qs.kick(m.queue)
             return Ok()
         if isinstance(m, DropConsumer):
+            self._remote_consumers.pop(m.consumer, None)
             return Ok(self.qs.drop_consumer(m.consumer))
         if isinstance(m, DepthReq):
             return Ok(self.qs.depth(m.queue))
@@ -589,8 +704,12 @@ class ServerEndpoint:
         if isinstance(m, SubmitUpdate):
             return self._submit_update(m)
         if isinstance(m, Bye):
+            self._remote_consumers.pop(m.consumer, None)
             self.qs.unsubscribe(m.consumer)
             return Ok(self.qs.drop_consumer(m.consumer))
+        if isinstance(m, ExpireAll):
+            # m.now applied verbatim (see ExpireAll): replay authority
+            return Ok(self.qs.expire_all(m.now))
         if isinstance(m, Hello):
             return Ok(m.consumer)
         raise TypeError(f"unknown protocol message {type(m).__name__}")

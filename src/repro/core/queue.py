@@ -392,6 +392,19 @@ class Queue:
         self._waiter_names = src._waiter_names
         self._pub_waiter_names = src._pub_waiter_names
 
+    def adopt_session_state(self, src: "Queue") -> None:
+        """Adopt ALL of another queue object's session-coupled wake state:
+        waiter registrations plus the banked signal flags. An op-log replay
+        reconstructs the durable half of a queue but not its wake state —
+        subscriptions are never logged (they are connection-bound), so a
+        replayed queue over-banks signals that a live subscriber already
+        consumed. A gateway adopting a slice takes the wake state from the
+        LIVE session side (volunteers that are still connected), exactly as
+        ``restore(waiters_from=...)`` does for waiters."""
+        self.adopt_waiters(src)
+        self._signal = src._signal
+        self._pub_signal = src._pub_signal
+
 
 class QueueServer:
     """Named queues. Multiple QueueServers are modelled by multiple instances

@@ -1,0 +1,33 @@
+"""Mutation fixture: the op-log fsync dropped from the gateway applier.
+
+The historical bug shape: a gateway acknowledged forwarded ops (leases,
+acks, publishes routed over from a peer via ``Forward``) after appending
+them to its op log but BEFORE the append was fsynced. The reply races the
+disk: kill -9 the gateway in that window and the op is acknowledged
+everywhere — the origin gateway returned the reply to its volunteer — yet
+absent from what the adopting peer replays from base + durable log. The
+work silently vanishes at failover; nothing crashes, training just loses
+committed progress, which is exactly the class of bug only an exhaustive
+interleaving search catches.
+
+``configure()`` plants the mutation via ``oplog_fsync=False`` (every
+logged op is acknowledged-but-volatile); the checker must report a
+``no-lost-forward`` violation whose shrunk trace is two steps — one
+remotely-homed lease, then the owner's crash. The same world with the
+fsync intact (``oplog_fsync=True``) must explore clean.
+"""
+from repro.analysis.mc import GatewayMCConfig
+
+
+def configure() -> GatewayMCConfig:
+    return GatewayMCConfig(
+        policy="sync", n_volunteers=2, n_versions=1, n_mb=2,
+        visibility_timeout=10.0,
+        n_gateways=2, gw_crashable=(0,), max_gw_crashes=1,
+        oplog_fsync=False,                                    # the bug
+    )
+
+
+#: ample budget — the violation surfaces within ~50 states: the crash
+#: corner sits right under the first forwarded op
+BUDGET = {"max_states": 20000, "max_depth": 12, "max_seconds": 30.0}

@@ -9,9 +9,10 @@ import pathlib
 import pytest
 
 from repro.analysis.mc import (COVERED_MESSAGES, DEADLOCK, DEFAULT_INVARIANTS,
-                               Invariant, MCConfig, MCWorld, check_all,
-                               explore, fingerprint, replay, replay_payload,
-                               repro_payload, repro_script, shrink)
+                               GatewayMCConfig, Invariant, MCConfig, MCWorld,
+                               check_all, explore, fingerprint, replay,
+                               replay_payload, repro_payload, repro_script,
+                               shrink)
 from repro.core.chaos import replay_mc_trace
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
@@ -93,7 +94,8 @@ def test_stale_admission_rediscovered_and_honest_policy_is_clean():
     assert ok.violations == []
 
 
-@pytest.mark.parametrize("name", ["stepaside_deadlock", "stale_admission"])
+@pytest.mark.parametrize("name", ["stepaside_deadlock", "stale_admission",
+                                  "gateway_fsync_drop"])
 def test_shrunk_counterexample_replays_bit_deterministically(name):
     fx = _fixture(name)
     cfg = fx.configure()
@@ -192,6 +194,100 @@ def test_custom_invariant_violation_carries_trace():
 
 
 # ---------------------------------------------------------------------------
+# gateway micro-world: cross-gateway routing + op-log failover
+# ---------------------------------------------------------------------------
+
+GW = GatewayMCConfig(policy="sync", n_volunteers=2, n_versions=1, n_mb=2,
+                     visibility_timeout=10.0, n_gateways=2)
+
+
+def test_gateway_world_roundtrips_through_config_json():
+    cfg = GatewayMCConfig.from_json(GW.to_json())
+    assert isinstance(cfg, GatewayMCConfig) and cfg == GW
+    # the base from_json dispatches on the "world" tag, so a payload's
+    # config rehydrates to the right world type without the caller knowing
+    assert isinstance(MCConfig.from_json(GW.to_json()), GatewayMCConfig)
+
+
+def test_gateway_world_explores_clean_and_actually_forwards():
+    world = GW.make_world()
+    report = explore(GW, max_states=4000, max_depth=30, max_seconds=20.0,
+                     world=world)
+    assert report.ok, report.violations
+    assert report.stats.completes > 0
+    # in a 2-gateway ring the model + queue slices land on gw0, so the
+    # gw1-homed volunteer's ops must cross gateways: the run is only a
+    # multi-gateway test if Forward traffic really happened
+    assert world.gw_forwards > 0
+    assert {"Forward", "ForwardNotify"} <= world.sent_types
+
+
+def test_gateway_crash_opens_window_then_peer_adopts_slice():
+    cfg = GatewayMCConfig.from_json(
+        {**GW.to_json(), "gw_crashable": [0], "max_gw_crashes": 1})
+    world = cfg.make_world()
+    world.apply(("lease", "w1"))        # forwarded: w1 is homed on gw1
+    assert world.gw_forwards == 1
+    world.apply(("gw_crash", 0))
+    # failover window: every volunteer/protocol move is held until a peer
+    # adopts the dead slice — the only enabled actions are adoption (and
+    # note fates, none pending here)
+    assert world.enabled_actions() == [("gw_adopt", 0)]
+    world.apply(("gw_adopt", 0))
+    assert world.ring.owner_of("__model__") == 1
+    assert world.gw_owned[1] == [0, 1] and world.gw_owned[0] == []
+    # the cluster serves again: volunteer moves re-enable
+    assert any(a[0] in ("lease", "advance") for a in world.enabled_actions())
+
+
+def test_gateway_capture_restore_roundtrips_mid_window():
+    cfg = GatewayMCConfig.from_json(
+        {**GW.to_json(), "gw_crashable": [0], "max_gw_crashes": 1})
+    world = cfg.make_world()
+    world.apply(("lease", "w1"))
+    world.apply(("gw_crash", 0))        # capture INSIDE the failover window
+    cap = world.capture()
+    fp = fingerprint(world)
+    world.apply(("gw_adopt", 0))
+    assert fingerprint(world) != fp
+    world.restore(cap)
+    assert fingerprint(world) == fp
+    assert world.gw_window == [0]
+    world.apply(("gw_adopt", 0))        # the restored window still resolves
+
+
+def test_single_owner_invariant_rejects_a_doubly_served_slice():
+    from repro.analysis.mc.gateway_world import single_owner_per_slice
+    world = GW.make_world()
+    assert single_owner_per_slice(world) is None
+    world.gw_owned[1] = [0, 1]          # gw1 claims gw0's slice too
+    msg = single_owner_per_slice(world)
+    assert msg is not None and "served by 2 gateways" in msg
+
+
+def test_gateway_fsync_drop_rediscovered_and_fsync_is_clean():
+    fx = _fixture("gateway_fsync_drop")
+    cfg = fx.configure()
+    report = explore(cfg, **fx.BUDGET)
+    assert [v.invariant for v in report.violations] == ["no-lost-forward"]
+    assert "never made durable" in report.violations[0].message
+    # the shipped behavior — fsync before acknowledging — explores clean
+    # under the same bounded budget
+    fixed = MCConfig.from_json({**cfg.to_json(), "oplog_fsync": True})
+    assert isinstance(fixed, GatewayMCConfig)
+    ok = explore(fixed, max_states=4000, max_depth=12, max_seconds=20.0)
+    assert ok.violations == []
+
+
+def test_gateway_rules_are_registered_for_ci():
+    from repro.analysis.mc import RULES
+    from repro.analysis.mc.check import _RULE_BY_INVARIANT
+    assert {"MC-OWNER", "MC-FORWARD"} <= set(RULES)
+    assert _RULE_BY_INVARIANT["single-owner-per-slice"] == "MC-OWNER"
+    assert _RULE_BY_INVARIANT["no-lost-forward"] == "MC-FORWARD"
+
+
+# ---------------------------------------------------------------------------
 # wire coverage: COVERED_MESSAGES is honest
 # ---------------------------------------------------------------------------
 
@@ -210,9 +306,13 @@ def test_covered_messages_ledger_is_honest():
                        visibility_timeout=10.0),
               MCConfig(policy="staleness:1", n_volunteers=2, n_versions=2,
                        n_mb=2, visibility_timeout=10.0, server_apply=True,
-                       gc_keep=2)]
+                       gc_keep=2),
+              # fault-free 2-gateway world: the gw1-homed volunteer's ops
+              # cross gateways (Forward / ForwardNotify) and lease expiry
+              # goes over the wire as ExpireAll
+              GW]
     for cfg in worlds:
-        world = MCWorld(cfg)
+        world = cfg.make_world()
         explore(cfg, max_states=1500, max_depth=40, max_seconds=15.0,
                 first_violation=False, world=world)
         sent |= world.sent_types

@@ -1,0 +1,551 @@
+"""Multi-gateway control plane: op-log failover proven as a test tier.
+
+The claims under test, each mapped to a production mechanism:
+
+1. **Op-log replay determinism** — a gateway's durable truth is its op log
+   (``cluster_dir``): base + every acknowledged state-changing op. Replaying
+   it (``replay_oplog``) must reconstruct the live server's durable surface
+   bit-for-bit, whether or not the log rolled epochs mid-run.
+2. **Mid-handoff lease expiry** — a lease granted by a gateway that is then
+   kill -9'd must survive into the adopter's replayed state and expire there
+   on the normal visibility clock, requeueing the ticket.
+3. **Cross-gateway nack ordering** — ``Nack(front=True)`` routed over a
+   ``Forward`` hop must preserve front-of-queue semantics exactly as a
+   local nack would.
+4. **Peer adoption of a killed gateway** — in-process (``die()``) and as a
+   real SIGKILLed process: the deterministic adopter (smallest live gid)
+   replays the victim's log and the run completes at the reference version.
+5. **Op-log segmentation** — any interleaving of base snapshots, appends,
+   reopens and crash-at-byte-k truncation yields a loadable log whose
+   recovered records are exactly the acknowledged-durable prefix
+   (property-based: hypothesis when installed, seeded scripts always).
+"""
+from __future__ import annotations
+
+import json
+import os
+import random
+import signal
+import subprocess
+import sys
+import tempfile
+import threading
+import time
+
+import pytest
+
+from benchmarks.run import check_bench_records
+from repro.core.chaos import (ChaosEvent, ChaosSchedule, ChaosSimulator,
+                              _smoke_cost, _smoke_problem, _smoke_specs,
+                              gateway_schedule, run_chaos)
+from repro.core.elastic import (MODEL_KEY, GatewayRing, OpLog,
+                                durable_fingerprint)
+from repro.core.gateway import (GatewayServer, SocketTransport, _wait_port,
+                                replay_oplog, run_volunteer,
+                                run_volunteer_resilient)
+from repro.core.protocol import (LatestReq, LeaseGrant, LeaseReq, Nack,
+                                 encode_message)
+from repro.core.simulator import SyntheticProblem
+from repro.core.tasks import INITIAL_QUEUE
+
+POLICY = "sync"
+N_VERSIONS, N_MB = 2, 3
+N_TASKS = N_VERSIONS * (N_MB + 1)     # sync: n_mb maps + 1 reduce per version
+
+
+def _problem() -> SyntheticProblem:
+    return SyntheticProblem(n_versions=N_VERSIONS, n_mb=N_MB,
+                            model_bytes=1.0e4, grad_bytes=1.0e3,
+                            map_flops=1.0e6, reduce_flops=1.0e5)
+
+
+def _cluster(k: int, tmpdir: str, visibility_timeout: float = 2.0):
+    servers = [GatewayServer(_problem(), policy=POLICY, gid=g, gateways=k,
+                             cluster_dir=tmpdir,
+                             visibility_timeout=visibility_timeout)
+               for g in range(k)]
+    for s in servers:
+        s.start()
+    return servers
+
+
+def _durable_bytes(qs, ds) -> bytes:
+    """The replay-equality observable, as canonical bytes: queue state with
+    session-coupled wake counters masked (waiters/banked signals/wakeups are
+    live-connection artifacts a replayed process cannot have), DataServer
+    reduced to kv/models/latest (accounting counters move on read-only
+    traffic, which is deliberately never op-logged)."""
+    queues = durable_fingerprint(qs)
+    for q in queues.values():
+        q.pop("wakeups", None)
+    dsnap = ds.snapshot()
+    return encode_message({
+        "queues": queues,
+        "ds": {k: dsnap[k] for k in ("kind", "kv", "models", "latest")},
+    })
+
+
+# ---------------------------------------------------------------------------
+# 1. op-log replay determinism
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("snapshot_every", [0, 4])
+def test_oplog_replay_bitmatches_live_state(snapshot_every):
+    """Base + log replay == the live server's durable surface, bit-for-bit.
+    ``snapshot_every=4`` rolls fresh base epochs mid-run, so the replay
+    starts from an interior base and covers the epoch-truncation path too."""
+    with tempfile.TemporaryDirectory() as td:
+        server = GatewayServer(_problem(), policy=POLICY, cluster_dir=td,
+                               snapshot_every=snapshot_every)
+        server.start()
+        try:
+            tr = SocketTransport("127.0.0.1", server.port, "replay0")
+            final, tasks = run_volunteer(tr, "replay0", N_VERSIONS,
+                                         policy=POLICY)
+            tr.close()
+            assert (final, tasks) == (N_VERSIONS, N_TASKS)
+            live = _durable_bytes(server.qs, server.ds)
+        finally:
+            server.close()
+        prefix = os.path.join(td, "gw0.oplog")
+        rq, rd, meta = replay_oplog(prefix, policy=POLICY)
+        assert meta is not None and meta["policy"] == POLICY
+        assert _durable_bytes(rq, rd) == live
+        assert rd.latest_version == N_VERSIONS
+
+
+def test_oplog_restore_bitmatches_snapshot_restore():
+    """Booting a fresh gateway from the op log must land on the same durable
+    state as booting from a full snapshot of the same run — the two recovery
+    paths may never diverge."""
+    with tempfile.TemporaryDirectory() as td:
+        snap = os.path.join(td, "state.snap")
+        server = GatewayServer(_problem(), policy=POLICY,
+                               cluster_dir=os.path.join(td, "log"),
+                               snapshot_path=snap)
+        server.start()
+        try:
+            tr = SocketTransport("127.0.0.1", server.port, "boot0")
+            run_volunteer(tr, "boot0", N_VERSIONS, policy=POLICY)
+            tr.close()
+            server.snapshot()
+        finally:
+            server.close()
+        from_log = GatewayServer(
+            _problem(), policy=POLICY,
+            restore_from=os.path.join(td, "log", "gw0.oplog"))
+        from_snap = GatewayServer(_problem(), policy=POLICY,
+                                  restore_from=snap)
+        assert _durable_bytes(from_log.qs, from_log.ds) == \
+            _durable_bytes(from_snap.qs, from_snap.ds)
+        # a finished run restores as finished on both paths
+        assert from_log.done.is_set() and from_snap.done.is_set()
+
+
+def test_replay_survives_torn_oplog_tail():
+    """Crash-at-byte-k on the live log: truncating the final segment
+    mid-record must still replay cleanly to a durable prefix (the torn op
+    was never acknowledged as durable, so losing it is correct)."""
+    with tempfile.TemporaryDirectory() as td:
+        server = GatewayServer(_problem(), policy=POLICY, cluster_dir=td)
+        server.start()
+        try:
+            tr = SocketTransport("127.0.0.1", server.port, "torn0")
+            run_volunteer(tr, "torn0", N_VERSIONS, policy=POLICY)
+            tr.close()
+        finally:
+            server.close()
+        prefix = os.path.join(td, "gw0.oplog")
+        log = OpLog(prefix)
+        full = log.op_count()
+        assert full > 0
+        seg = log._seg_path(log.epoch, log.seg)
+        size = os.path.getsize(seg)
+        with open(seg, "r+b") as f:
+            f.truncate(size - 5)              # tear the final record
+        torn = OpLog(prefix)
+        assert torn.op_count() == full - 1
+        rq, rd, _ = replay_oplog(prefix, policy=POLICY)
+        assert durable_fingerprint(rq)        # replays without raising
+        assert 0 <= rd.latest_version <= N_VERSIONS
+
+
+# ---------------------------------------------------------------------------
+# 2./4. kill -9 failover: lease expiry across the handoff, peer adoption
+# ---------------------------------------------------------------------------
+
+def test_mid_handoff_lease_expiry_requeues_on_adopter():
+    """A lease granted through the victim is mid-flight when the victim
+    dies. The adopter replays the lease op (original deadline and all);
+    the consumer never acks, so the adopter's sweeper must expire it and
+    requeue the ticket — then a fresh volunteer finishes the run."""
+    with tempfile.TemporaryDirectory() as td:
+        servers = _cluster(2, td, visibility_timeout=1.0)
+        try:
+            # K=2: gw0 owns MODEL_KEY and every queue; gw1 pure-forwards
+            assert servers[0].ring.owner_of(INITIAL_QUEUE) == 0
+            holder = SocketTransport("127.0.0.1", servers[1].port, "holder")
+            grant = holder.call(LeaseReq(INITIAL_QUEUE, "holder", 0.0))
+            assert isinstance(grant, LeaseGrant)
+            servers[0].die()                 # in-process kill -9 stand-in
+            final, tasks, reconnects = run_volunteer_resilient(
+                "127.0.0.1", servers[1].port, "finisher", N_VERSIONS,
+                policy=POLICY, task_delay=0.0)
+            assert final == N_VERSIONS
+            # the abandoned lease expired on the ADOPTER and was re-done
+            assert tasks == N_TASKS
+            requeued = sum(q.requeued
+                           for q in servers[1].qs.queues.values())
+            assert requeued >= 1, "abandoned lease never expired"
+            holder.close()
+        finally:
+            for s in servers:
+                s.close()
+
+
+def test_inprocess_die_is_adopted_by_peer():
+    """``die()`` the model owner mid-run: the surviving gateway must record
+    the adoption in its ring, serve the dead slice, and the volunteers
+    (one homed on each gateway) must converge with ≥1 reconnect."""
+    with tempfile.TemporaryDirectory() as td:
+        servers = _cluster(2, td, visibility_timeout=2.0)
+        try:
+            ports = [s.port for s in servers]
+            results = {}
+
+            def drive(i, home):
+                order = [ports[home]] + [p for j, p in enumerate(ports)
+                                         if j != home]
+                results[i] = run_volunteer_resilient(
+                    "127.0.0.1", order[0], f"adopt{i}", N_VERSIONS,
+                    policy=POLICY, task_delay=0.08,
+                    fallback_ports=tuple(order[1:]))
+
+            threads = [threading.Thread(target=drive, args=(i, i),
+                                        daemon=True) for i in range(2)]
+            for t in threads:
+                t.start()
+            time.sleep(0.4)                  # mid-run
+            servers[0].die()
+            for t in threads:
+                t.join(timeout=60)
+                assert not t.is_alive(), "volunteer deadlocked on failover"
+            finals = [results[i][0] for i in sorted(results)]
+            assert finals == [N_VERSIONS] * 2
+            assert sum(results[i][2] for i in results) >= 1
+            assert servers[1].ring.adoptions() == {0: 1}
+            assert servers[1].ring.owner_of(MODEL_KEY) == 1
+        finally:
+            for s in servers:
+                s.close()
+
+
+def test_sigkilled_gateway_process_is_adopted_by_peer():
+    """The real thing: 2 gateway PROCESSES, SIGKILL the model owner mid-run;
+    the survivor replays the victim's op log from the shared cluster_dir and
+    a volunteer failing over by port finishes at the reference version."""
+    k = 2
+    victim = GatewayRing(range(k)).owner_of(MODEL_KEY)
+    with tempfile.TemporaryDirectory() as td:
+        procs = [subprocess.Popen(
+            [sys.executable, "-m", "repro.core.gateway", "--serve",
+             "--gid", str(gid), "--gateways", str(k), "--cluster-dir", td,
+             "--n-versions", str(N_VERSIONS), "--n-mb", str(N_MB),
+             "--policy", POLICY, "--visibility-timeout", "2.0",
+             "--timeout", "120"],
+            env={**os.environ, "PYTHONPATH": "src"}) for gid in range(k)]
+        try:
+            ports = [_wait_port(os.path.join(td, f"gw{g}.port"), procs[g])
+                     for g in range(k)]
+            box = {}
+
+            def drive():
+                box["r"] = run_volunteer_resilient(
+                    "127.0.0.1", ports[victim], "sig0", N_VERSIONS,
+                    policy=POLICY, task_delay=0.1,
+                    fallback_ports=tuple(p for g, p in enumerate(ports)
+                                         if g != victim))
+
+            t = threading.Thread(target=drive, daemon=True)
+            t.start()
+            time.sleep(0.4)
+            assert procs[victim].poll() is None, "victim exited early"
+            procs[victim].send_signal(signal.SIGKILL)
+            procs[victim].wait(timeout=10)
+            t.join(timeout=90)
+            assert not t.is_alive(), "volunteer deadlocked after SIGKILL"
+            final, tasks, reconnects = box["r"]
+            assert final == N_VERSIONS
+            assert reconnects >= 1, "the kill was never observed"
+            # the survivor reaches the commit target and exits 0
+            rcs = [procs[g].wait(timeout=60) for g in range(k)
+                   if g != victim]
+            assert rcs == [0]
+        finally:
+            for p in procs:
+                if p.poll() is None:
+                    p.kill()
+
+
+# ---------------------------------------------------------------------------
+# 3. cross-gateway nack ordering
+# ---------------------------------------------------------------------------
+
+def test_cross_gateway_nack_front_preserves_fifo():
+    """Lease through the NON-owning gateway (the op rides a ``Forward``),
+    give the ticket back with ``front=True``: the very next lease must
+    return the same body. ``front=False`` must rotate it to the back."""
+    with tempfile.TemporaryDirectory() as td:
+        servers = _cluster(2, td, visibility_timeout=30.0)
+        try:
+            assert INITIAL_QUEUE not in servers[1].qs.queues, \
+                "gw1 must not own the task queue in a K=2 ring"
+            tr = SocketTransport("127.0.0.1", servers[1].port, "nack0")
+            g1 = tr.call(LeaseReq(INITIAL_QUEUE, "nack0", 0.0))
+            assert isinstance(g1, LeaseGrant)
+            tr.call(Nack(INITIAL_QUEUE, g1.tag, front=True))
+            g2 = tr.call(LeaseReq(INITIAL_QUEUE, "nack0", 0.0))
+            assert isinstance(g2, LeaseGrant)
+            assert g2.body == g1.body, \
+                "front=True nack lost its place across the Forward hop"
+            # back-of-queue nack: with n_mb >= 2 tickets pending, the next
+            # lease must be a DIFFERENT ticket
+            tr.call(Nack(INITIAL_QUEUE, g2.tag, front=False))
+            g3 = tr.call(LeaseReq(INITIAL_QUEUE, "nack0", 0.0))
+            assert isinstance(g3, LeaseGrant)
+            assert g3.body != g2.body, \
+                "front=False nack failed to rotate to the back"
+            tr.close()
+        finally:
+            for s in servers:
+                s.close()
+
+
+def test_forwarded_latestreq_answers_from_model_owner():
+    """Sanity on the routing fabric the nack test rides: DataServer state
+    lives only on the MODEL_KEY owner, yet a client of the other gateway
+    sees it through the Forward path."""
+    with tempfile.TemporaryDirectory() as td:
+        servers = _cluster(2, td)
+        try:
+            tr = SocketTransport("127.0.0.1", servers[1].port, "lat0")
+            reply = tr.call(LatestReq())
+            assert reply.version == 0         # v0 enqueued, nothing trained
+            tr.close()
+        finally:
+            for s in servers:
+                s.close()
+
+
+# ---------------------------------------------------------------------------
+# 5. op-log segmentation properties
+# ---------------------------------------------------------------------------
+
+def _run_script(prefix: str, script, segment_ops: int):
+    """Drive an OpLog through a base/append/reopen script; returns the model
+    state: (final log, expected base bytes, expected op records in order)."""
+    log = OpLog(prefix, segment_ops=segment_ops)
+    base, ops = None, []
+    for step in script:
+        kind, payload = step
+        if kind == "base":
+            log.write_base(payload)
+            base, ops = payload, []
+        elif kind == "append":
+            log.append(payload)
+            ops.append(payload)
+        elif kind == "reopen":
+            # process restart: a fresh object must resume the same epoch
+            # and segment counters from what is on disk
+            log = OpLog(prefix, segment_ops=segment_ops)
+    return log, base, ops
+
+
+def _crash_survivors(log: OpLog, ops, crash_at: int):
+    """Truncate the final segment file to ``crash_at`` bytes and return the
+    records the torn log must still recover: every record in earlier
+    segments plus the final segment's records whose framed extent
+    (8-byte header + payload) fits inside the cut."""
+    seg_path = log._seg_path(log.epoch, log.seg)
+    if not os.path.exists(seg_path):
+        return ops                            # nothing appended this epoch
+    size = os.path.getsize(seg_path)
+    crash_at = min(crash_at, size)
+    in_last = log._ops_in_seg
+    head, tail = ops[:len(ops) - in_last], ops[len(ops) - in_last:]
+    with open(seg_path, "r+b") as f:
+        f.truncate(crash_at)
+    survivors, cum = [], 0
+    for rec in tail:
+        cum += 8 + len(rec)
+        if cum > crash_at:
+            break
+        survivors.append(rec)
+    return head + survivors
+
+
+def _check_script(tmp: str, script, segment_ops: int, crash_at=None):
+    """The property: after any script (+ optional crash), ``load()`` returns
+    exactly the newest complete base and the acknowledged-durable prefix."""
+    prefix = os.path.join(tmp, "prop.oplog")
+    log, base, ops = _run_script(prefix, script, segment_ops)
+    expected = ops if crash_at is None \
+        else _crash_survivors(log, ops, crash_at)
+    got_base, got_ops = OpLog(prefix).load()
+    assert got_base == base
+    assert got_ops == expected
+    # durability is monotone: the recovered ops are a PREFIX, never a gap
+    assert ops[:len(got_ops)] == got_ops
+
+
+def _random_script(rng: random.Random, n_steps: int):
+    script, serial = [], 0
+    for _ in range(n_steps):
+        roll = rng.random()
+        if roll < 0.15:
+            script.append(("base", b"B%d" % serial * rng.randint(1, 40)))
+        elif roll < 0.25:
+            script.append(("reopen", None))
+        else:
+            script.append(
+                ("append", b"op%d:" % serial + bytes(rng.randint(0, 60))))
+        serial += 1
+    return script
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_oplog_random_interleavings_recover_durable_prefix(seed):
+    """Seeded port of the hypothesis property (runs whether or not
+    hypothesis is installed): random base/append/reopen interleavings with
+    tiny segments, crashed at a random byte offset, always recover the
+    newest base + a contiguous acknowledged prefix."""
+    rng = random.Random(seed)
+    script = _random_script(rng, rng.randint(5, 40))
+    with tempfile.TemporaryDirectory() as tmp:
+        _check_script(tmp, script, segment_ops=rng.randint(1, 5),
+                      crash_at=rng.randint(0, 2000))
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_oplog_random_interleavings_intact(seed):
+    rng = random.Random(1000 + seed)
+    script = _random_script(rng, rng.randint(5, 40))
+    with tempfile.TemporaryDirectory() as tmp:
+        _check_script(tmp, script, segment_ops=rng.randint(1, 5))
+
+
+def test_oplog_segment_roll_boundaries_exact():
+    """Deterministic corner: segment_ops=2 with 5 appends lands records in
+    segments [2, 2, 1]; a crash cutting exactly on a record boundary keeps
+    everything before the cut and nothing after."""
+    with tempfile.TemporaryDirectory() as tmp:
+        prefix = os.path.join(tmp, "b.oplog")
+        log = OpLog(prefix, segment_ops=2)
+        log.write_base(b"base")
+        recs = [b"r%d" % i for i in range(5)]
+        for r in recs:
+            log.append(r)
+        assert (log.seg, log._ops_in_seg) == (2, 1)
+        base, ops = OpLog(prefix).load()
+        assert (base, ops) == (b"base", recs)
+        # cut the LAST segment exactly after its only record: lossless
+        seg = log._seg_path(log.epoch, 2)
+        with open(seg, "r+b") as f:
+            f.truncate(8 + len(recs[4]))
+        assert OpLog(prefix).load() == (b"base", recs)
+        # cut one byte into the record header: the record is torn
+        with open(seg, "r+b") as f:
+            f.truncate(1)
+        assert OpLog(prefix).load() == (b"base", recs[:4])
+
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    _step = st.one_of(
+        st.tuples(st.just("append"), st.binary(min_size=0, max_size=80)),
+        st.tuples(st.just("base"), st.binary(min_size=1, max_size=80)),
+        st.tuples(st.just("reopen"), st.none()),
+    )
+
+    @settings(max_examples=40, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(script=st.lists(_step, min_size=1, max_size=30),
+           segment_ops=st.integers(min_value=1, max_value=6),
+           crash_at=st.integers(min_value=0, max_value=3000))
+    def test_oplog_property_hypothesis(script, segment_ops, crash_at):
+        with tempfile.TemporaryDirectory() as tmp:
+            _check_script(tmp, list(script), segment_ops, crash_at=crash_at)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed; seeded ports above "
+                             "cover the same property")
+    def test_oplog_property_hypothesis():
+        pass
+
+
+# ---------------------------------------------------------------------------
+# chaos tier: the gateway_kill journal drill
+# ---------------------------------------------------------------------------
+
+def test_chaos_gateway_kill_replays_journal_and_converges():
+    sim = ChaosSimulator(_smoke_problem(), _smoke_specs(),
+                         schedule=gateway_schedule(0), mode="event",
+                         cost=_smoke_cost(), policy=POLICY)
+    result = sim.run()
+    assert sim.gateway_kills >= 1
+    assert sim.journal_ops_replayed > 0
+    assert result.final_version == _smoke_problem().n_versions
+
+
+def test_chaos_gateway_kill_is_invisible_vs_expire_reference():
+    """Substituting every gateway_kill with a plain expire sweep must yield
+    a bit-identical SimResult: the journal replay + snapshot round-trip may
+    not perturb the run in any observable way."""
+    schedule = gateway_schedule(1)
+    ref = ChaosSchedule(
+        [ChaosEvent(e.t, "expire") if e.kind == "gateway_kill" else e
+         for e in schedule.events],
+        seed=1, label="gateway-ref-1")
+    killed = run_chaos(_smoke_problem(), _smoke_specs(), schedule,
+                       mode="event", cost=_smoke_cost(), policy=POLICY)
+    ticked = run_chaos(_smoke_problem(), _smoke_specs(), ref,
+                       mode="event", cost=_smoke_cost(), policy=POLICY)
+    assert killed == ticked
+
+
+# ---------------------------------------------------------------------------
+# bench guard: one perf series, one suite file
+# ---------------------------------------------------------------------------
+
+def _bench_file(tmp, stem, names):
+    path = tmp / f"BENCH_{stem}.json"
+    path.write_text(json.dumps(
+        [{"name": n, "params": {}, "makespan": 1.0, "events": 1,
+          "bytes": None} for n in names]))
+    return path
+
+
+def test_bench_check_rejects_cross_file_duplicate_names(tmp_path, capsys):
+    a = _bench_file(tmp_path, "alpha", ["alpha_x", "alpha_y"])
+    b = _bench_file(tmp_path, "alpha_x", ["alpha_x"])
+    problems = check_bench_records([a, b])
+    assert problems == 1
+    assert "already used" in capsys.readouterr().out
+
+
+def test_bench_check_accepts_disjoint_names(tmp_path):
+    a = _bench_file(tmp_path, "alpha", ["alpha_x", "alpha_y"])
+    b = _bench_file(tmp_path, "beta", ["beta_x"])
+    assert check_bench_records([a, b]) == 0
+
+
+def test_bench_check_duplicate_within_one_file_is_legal(tmp_path):
+    """Param rows share a series name WITHIN a suite file by design; only
+    cross-file reuse makes the trajectory ambiguous."""
+    a = _bench_file(tmp_path, "alpha", ["alpha_x", "alpha_x"])
+    assert check_bench_records([a]) == 0

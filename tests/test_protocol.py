@@ -62,6 +62,11 @@ MESSAGES = [
     P.Wake("initial", "any"),
     P.Wake("map-results:v1", "publish"),
     P.VersionReady(4),
+    P.ExpireAll(37.5),
+    P.Forward(3, "1", P.LeaseReq("initial", "w6", 2.0)),
+    P.Forward(4, "0", P.SubscribeQueue("initial", "w6", kind="any")),
+    P.ForwardReply(3, P.LeaseGrant(8, MapTask(2, 1, 2, 4, 8))),
+    P.ForwardNotify("w6", P.Wake("initial", "any")),
 ]
 
 
